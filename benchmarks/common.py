@@ -1,0 +1,43 @@
+"""Shared benchmark helpers: reduced-scale topologies + transport variants."""
+from __future__ import annotations
+
+import time
+
+from repro.core.params import NetworkSpec
+from repro.sim.events import NetSim
+from repro.sim.topology import (FatTree, full_bisection, oversubscribed,
+                                with_link_failures)
+
+# Reduced scale (container = 1 CPU core). Paper: 8192 hosts, <=100MB msgs.
+QUICK_TOPO = dict(n_tor=4, hosts_per_tor=4)      # 16 hosts
+FULL_TOPO = dict(n_tor=16, hosts_per_tor=16)     # 256 hosts
+MSG_SIZES_QUICK = [4 * 2**10, 128 * 2**10, 512 * 2**10, 2 * 2**20]
+MSG_SIZES_FULL = MSG_SIZES_QUICK + [8 * 2**20]
+
+TRANSPORTS = ["strack", "strack-obl", "roce", "roce4"]
+
+
+def make_sim(transport: str, topo: FatTree, net: NetworkSpec, **kw) -> NetSim:
+    if transport == "strack":
+        return NetSim(topo, net, transport="strack", **kw)
+    if transport == "strack-obl":
+        return NetSim(topo, net, transport="strack", oblivious_spray=True,
+                      **kw)
+    if transport == "roce":
+        return NetSim(topo, net, transport="roce", **kw)
+    if transport == "roce4":
+        from repro.core.params import RoCEParams, make_dcqcn_params
+        return NetSim(topo, net, transport="roce",
+                      roce_params=RoCEParams(dcqcn=make_dcqcn_params(net),
+                                             qps_per_conn=4), **kw)
+    raise ValueError(transport)
+
+
+def timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, time.time() - t0
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,125 @@
+"""Paper Figs. 16-20: incast behaviour.
+
+* Fig 16-18: 32->1 incast dynamics — convergence time, drops (STrack, first
+  RTT only) vs PFC pauses (RoCEv2), per-flow throughput fairness.
+* Fig 19: FCT parity — lossy STrack must match lossless RoCEv2.
+* Fig 20: queue stabilisation at the target delay across incast degrees.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.params import NetworkSpec
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import run_incast
+
+from .common import make_sim, timed
+
+
+def run_fct(fan_in: int = 8, msg: float = 512 * 2 ** 10, topo_kw=None,
+            seed: int = 0):
+    """Fig 19: STrack vs RoCEv2 incast completion parity."""
+    topo_kw = topo_kw or dict(n_tor=4, hosts_per_tor=max(4, fan_in // 2))
+    rows = []
+    fcts = {}
+    for tr in ("strack", "roce"):
+        net = NetworkSpec()
+        topo = full_bisection(**topo_kw)
+        sim = make_sim(tr, topo, net, seed=seed)
+        res, wall = timed(run_incast, sim, fan_in, msg, until=2e6, seed=seed)
+        fcts[tr] = res["max_fct"]
+        rows.append({"fig": "19", "workload": f"incast_{fan_in}to1",
+                     "msg": msg, "transport": tr,
+                     "max_fct_us": res["max_fct"], "drops": res["drops"],
+                     "pauses": res["pauses"],
+                     "unfinished": res["unfinished"], "wall_s": wall})
+    rows[-1]["strack_over_roce"] = fcts["strack"] / fcts["roce"]
+    return rows
+
+
+def run_dynamics(fan_in: int = 16, msg: float = 2 * 2 ** 20, seed: int = 0):
+    """Fig 16-18: drop timing, convergence, fairness for STrack; pauses for
+    RoCEv2."""
+    rows = []
+    topo_kw = dict(n_tor=4, hosts_per_tor=max(4, fan_in // 2))
+    for tr in ("strack", "roce"):
+        net = NetworkSpec()
+        topo = full_bisection(**topo_kw)
+        sim = make_sim(tr, topo, net, seed=seed, log_queues=True)
+        sim.rx_bytes_log = []
+        res, wall = timed(run_incast, sim, fan_in, msg, until=4e6, seed=seed)
+        # convergence: last time the bottleneck queue delay exceeded
+        # 3x target (= still violently oscillating)
+        qlog = sim.all_queue_delay_logs()
+        target = net.base_rtt_us
+        over = [t for t, d in qlog if d > 3 * target]
+        converge = max(over) if over else 0.0
+        # fairness: stddev/mean of per-flow completed bytes at half-time
+        half_t = res["max_fct"] / 2
+        by_flow = {}
+        for t, f, b in sim.rx_bytes_log:
+            if t <= half_t:
+                by_flow[f] = max(by_flow.get(f, 0.0), b)
+        rates = list(by_flow.values())
+        jain = (sum(rates) ** 2 / (len(rates) * sum(r * r for r in rates))
+                if rates and sum(rates) else 0.0)
+        rows.append({"fig": "16-18", "workload": f"incast_{fan_in}to1_dyn",
+                     "transport": tr, "max_fct_us": res["max_fct"],
+                     "drops": res["drops"], "pauses": res["pauses"],
+                     "converge_us": converge, "jain_fairness": jain,
+                     "wall_s": wall})
+    return rows
+
+
+def run_queue_stability(degrees=(8, 16, 32), msg: float = 1 * 2 ** 20,
+                        seed: int = 0):
+    """Fig 20: stabilised queue delay ~= target across incast degrees."""
+    rows = []
+    for fan in degrees:
+        net = NetworkSpec()
+        topo = full_bisection(4, max(4, (fan + 3) // 4))
+        sim = make_sim("strack", topo, net, seed=seed, log_queues=True,
+                       qdelay_log_threshold=0.5)
+        res, wall = timed(run_incast, sim, fan, msg, until=4e6, seed=seed)
+        qlog = sim.all_queue_delay_logs()
+        # steady state = second half of the run
+        t_end = res["max_fct"]
+        steady = [d for t, d in qlog if t > 0.5 * t_end]
+        rows.append({
+            "fig": "20", "workload": f"incast_{fan}to1_queue",
+            "transport": "strack",
+            "median_steady_qdelay_us": (statistics.median(steady)
+                                        if steady else 0.0),
+            "p95_steady_qdelay_us": (sorted(steady)[int(0.95 * len(steady))]
+                                     if steady else 0.0),
+            "target_us": net.base_rtt_us,
+            "drops": res["drops"], "wall_s": wall})
+    return rows
+
+
+def run_signals(fan_in: int = 16, msg: float = 1 * 2 ** 20, seed: int = 0):
+    """Fig 4: egress ECN arrives before any measurable RTT increase."""
+    net = NetworkSpec()
+    topo = full_bisection(4, max(4, fan_in // 2))
+    sim = make_sim("strack", topo, net, seed=seed)
+    sim.ack_log = []
+    res, _ = timed(run_incast, sim, fan_in, msg, until=2e6, seed=seed)
+    base = min(r for _, _, _, r in sim.ack_log)
+    first_ecn = next((t for t, f, e, r in sim.ack_log if e), None)
+    first_rtt = next((t for t, f, e, r in sim.ack_log if r > 1.5 * base),
+                     None)
+    return [{"fig": "4", "workload": f"incast_{fan_in}to1_signals",
+             "first_ecn_us": first_ecn, "first_rtt_rise_us": first_rtt,
+             "ecn_leads": (first_ecn is not None and
+                           (first_rtt is None or first_ecn <= first_rtt))}]
+
+
+def main():
+    for r in (run_fct(8) + run_fct(32, topo_kw=dict(n_tor=8,
+                                                    hosts_per_tor=8))
+              + run_dynamics(16) + run_queue_stability() + run_signals()):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

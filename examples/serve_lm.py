@@ -1,0 +1,65 @@
+"""Serving example: batched prefill + greedy decode with a KV cache
+(the ``decode_*`` path of the dry-run), on a small model.
+
+    PYTHONPATH=src python examples/serve_lm.py --batch 4 --new 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.runtime.serve import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, T = args.batch, args.prompt_len
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    cache_len = T + args.new
+    cache = lm.init_cache(cfg, B, cache_len)
+    # teacher-forced prompt consumption fills the cache
+    tok = prompt[:, :1]
+    t0 = time.time()
+    for t in range(T):
+        logits, cache = decode(params, cache, prompt[:, t:t + 1],
+                               jnp.asarray(t, jnp.int32))
+    t_prefill = time.time() - t0
+
+    out = []
+    t0 = time.time()
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for t in range(T, T + args.new):
+        out.append(tok)
+        logits, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+
+    # batched one-shot prefill (the prefill_32k path) must agree with the
+    # incremental fill on the last-token logits
+    pre_logits = prefill(params, {"tokens": prompt})
+    print(f"arch={cfg.name} batch={B}")
+    print(f"prompt fill:  {t_prefill/T*1e3:.1f} ms/token")
+    print(f"decode:       {t_decode/args.new*1e3:.1f} ms/token")
+    print(f"generated ids[0,:10]: {list(map(int, gen[0,:10]))}")
+    print(f"prefill/decode last-logit max delta: "
+          f"{float(jnp.abs(pre_logits - logits).max()):.3f} (pre-decode)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Transport-aware collective performance model (paper -> framework bridge).
+
+The dry-run extracts per-step collective bytes from compiled HLO; the event
+simulator measures what fraction of link bandwidth each transport actually
+sustains under its load-balancing behaviour (ECMP hash collisions vs
+adaptive spray).  This module combines the two: the *collective roofline
+term* of a training step on the production mesh, under RoCEv2 vs STrack.
+
+Two fabric tiers (DESIGN.md §2):
+  * intra-pod ICI (torus, deterministic routing) — transport-independent;
+  * inter-pod DCN/Ethernet — ECMP-multipath, where STrack applies.
+
+The inter-pod traffic of the multi-pod mesh is the gradient all-reduce over
+the "pod" axis; its time scales with 1/efficiency(transport).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..launch.roofline import LINK_BW
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportEfficiency:
+    """Sustained goodput fraction of nominal bandwidth (from sim/events.py
+    benchmarks: permutation workload, full-bisection fat-tree)."""
+
+    name: str
+    fabric_efficiency: float     # multipath fabric utilization
+    incast_efficiency: float     # last-hop utilization under moderate incast
+
+    def effective_bw(self, nominal: float) -> float:
+        return nominal * self.fabric_efficiency
+
+
+def measure_efficiency(transport: str, n_tor: int = 8, hosts_per_tor: int = 8,
+                       msg_bytes: float = 2 * 2 ** 20, seed: int = 0,
+                       **sim_kw) -> TransportEfficiency:
+    """Run a permutation workload and convert max-FCT to goodput fraction."""
+    from ..core.params import NetworkSpec
+    from ..sim.events import NetSim
+    from ..sim.topology import full_bisection
+    from ..sim.workloads import run_permutation
+
+    net = NetworkSpec()
+    topo = full_bisection(n_tor, hosts_per_tor)
+    sim = NetSim(topo, net, transport=transport, seed=seed, **sim_kw)
+    res = run_permutation(sim, msg_bytes, until=5e5)
+    ideal = msg_bytes / net.rate_Bpus + net.base_rtt_us
+    eff = min(1.0, ideal / res["max_fct"]) if res["max_fct"] else 0.0
+    return TransportEfficiency(name=transport, fabric_efficiency=eff,
+                               incast_efficiency=eff)
+
+
+def collective_term_with_transport(collective_bytes_per_dev: float,
+                                   inter_pod_bytes_per_dev: float,
+                                   eff: TransportEfficiency,
+                                   link_bw: float = LINK_BW,
+                                   dcn_bw: float = 50e9) -> dict:
+    """Split the collective term into ICI (intra-pod) + DCN (inter-pod,
+    transport-scaled) components."""
+    ici_bytes = max(collective_bytes_per_dev - inter_pod_bytes_per_dev, 0.0)
+    t_ici = ici_bytes / link_bw
+    t_dcn = inter_pod_bytes_per_dev / eff.effective_bw(dcn_bw)
+    return {
+        "ici_s": t_ici,
+        "dcn_s": t_dcn,
+        "total_s": t_ici + t_dcn,
+        "transport": eff.name,
+        "fabric_efficiency": eff.fabric_efficiency,
+    }

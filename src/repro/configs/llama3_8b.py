@@ -1,0 +1,10 @@
+"""llama3-8b — dense GQA transformer, 128k vocab [arXiv:2407.21783]."""
+from ..models.config import ModelConfig
+from .base import smoke_of
+
+CONFIG = ModelConfig(
+    name="llama3-8b", kind="dense", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, vocab=128256, head_dim=128,
+    rope_theta=500000.0,
+)
+SMOKE = smoke_of(CONFIG)

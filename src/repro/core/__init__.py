@@ -1,0 +1,15 @@
+"""STrack core — the paper's contribution as composable JAX modules."""
+from .params import (  # noqa: F401
+    NetworkSpec, STrackParams, DCQCNParams, RoCEParams,
+    make_strack_params, make_dcqcn_params,
+)
+from .transport import (  # noqa: F401
+    FlowState, TxPacket, init_flow, flow_on_sack, flow_next_packet,
+    flow_on_timer, flow_done,
+)
+from .reliability import (  # noqa: F401
+    SackMsg, ReceiverState, RelState, init_receiver, receiver_on_data,
+    REORDER_WINDOW,
+)
+from .cc import CCState, init_cc, adjust_cwnd, update_achieved_bdp  # noqa: F401
+from .lb import SprayState, init_spray, update_ecn_bitmap, choose_path  # noqa: F401

@@ -1,0 +1,112 @@
+"""Algorithms 3 & 4 — STrack congestion control, as pure JAX functions.
+
+One congestion window governs all paths.  ECN steers path choice (lb.py);
+RTT — a multi-bit signal — steers the window.  ``achievedBDP`` (delivered
+bytes per base RTT) provides O(1) convergence under heavy incast.
+
+Semantics match ``core/ref.py`` (property-tested in tests/test_core_vs_ref).
+cwnd is in packets (MTU units); time in microseconds.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import STrackParams
+
+
+class CCState(NamedTuple):
+    cwnd: jax.Array              # f32, packets
+    base_rtt: jax.Array          # f32, us (min observed)
+    avg_delay: jax.Array         # f32, us (ewma of queuing delay)
+    last_decrease_ts: jax.Array  # f32, us
+    last_selfai_ts: jax.Array    # f32, us
+    achieved_bdp_pkts: jax.Array  # f32, packets
+    rx_count_bytes: jax.Array    # f32, bytes
+    rxcount_clear_ts: jax.Array  # f32, us
+
+
+def init_cc(p: STrackParams, now: float = 0.0) -> CCState:
+    f = lambda v: jnp.full((), v, jnp.float32)
+    return CCState(
+        cwnd=f(p.max_cwnd_pkts),
+        base_rtt=f(p.base_rtt_us),
+        avg_delay=f(0.0),
+        last_decrease_ts=f(now),
+        last_selfai_ts=f(now),
+        achieved_bdp_pkts=f(0.0),
+        rx_count_bytes=f(0.0),
+        rxcount_clear_ts=f(now),
+    )
+
+
+def update_achieved_bdp(s: CCState, p: STrackParams, acked_bytes: jax.Array,
+                        ack_for_probe: jax.Array, now: jax.Array) -> CCState:
+    """Algorithm 4: delivered-bytes window over (base_rtt + target_Qdelay)."""
+    now = jnp.asarray(now, jnp.float32)
+    can_clear = (now - s.rxcount_clear_ts) > (s.base_rtt + p.target_qdelay_us)
+    rx = s.rx_count_bytes + jnp.where(ack_for_probe, 0.0, acked_bytes)
+    achieved = jnp.where(can_clear, rx / p.mtu_bytes, s.achieved_bdp_pkts)
+    return s._replace(
+        achieved_bdp_pkts=achieved,
+        rx_count_bytes=jnp.where(can_clear, 0.0, rx),
+        rxcount_clear_ts=jnp.where(can_clear, now, s.rxcount_clear_ts),
+    )
+
+
+def adjust_cwnd(s: CCState, p: STrackParams, ecn: jax.Array,
+                delay: jax.Array, now: jax.Array) -> CCState:
+    """Algorithm 3: the four-quadrant window update."""
+    ecn = jnp.asarray(ecn, bool)
+    delay = jnp.asarray(delay, jnp.float32)
+    now = jnp.asarray(now, jnp.float32)
+    achieved = s.achieved_bdp_pkts
+
+    can_decrease = (now - s.last_decrease_ts) > s.base_rtt
+    can_fairness = (now - s.last_selfai_ts) > s.base_rtt
+    avg_delay = s.avg_delay * (1 - p.ewma) + p.ewma * delay
+
+    # Branch 1: !ecn and delay > target_Qhigh  (queue drained; avoid starving)
+    b1 = (~ecn) & (delay > p.target_qhigh_us)
+    # Branch 2 (elif): !ecn and delay < target_Qdelay (proportional increase)
+    b2 = (~b1) & (~ecn) & (delay < p.target_qdelay_us)
+    # Branch 3 (elif): can_decrease and avg_delay > target_Qdelay
+    b3 = (~b1) & (~b2) & can_decrease & (avg_delay > p.target_qdelay_us)
+    #   3a: delay > Qhigh and achievedBDP < max_cwnd/8 -> jump to achievedBDP
+    b3a = b3 & (delay > p.target_qhigh_us) & (achieved < p.max_cwnd_pkts / 8)
+    #   3b (elif): delay > Qdelay -> multiplicative decrease
+    b3b = b3 & (~b3a) & (delay > p.target_qdelay_us)
+
+    cwnd = s.cwnd
+    cwnd = jnp.where(b1, cwnd + p.beta_pkts / cwnd, cwnd)
+    cwnd = jnp.where(
+        b2, cwnd + p.alpha_pkts_per_us * (p.target_qdelay_us - delay) / cwnd,
+        cwnd)
+    cwnd = jnp.where(b3a, achieved, cwnd)
+    md = s.cwnd * jnp.maximum(
+        1 - p.gamma * (avg_delay - p.target_qdelay_us)
+        / jnp.maximum(avg_delay, 1e-9), 0.5)
+    cwnd = jnp.where(b3b, md, cwnd)
+    last_decrease_ts = jnp.where(b3a | b3b, now, s.last_decrease_ts)
+
+    cwnd = jnp.where(can_fairness, cwnd + p.eta_pkts, cwnd)
+    last_selfai_ts = jnp.where(can_fairness, now, s.last_selfai_ts)
+
+    cwnd = jnp.clip(cwnd, p.min_cwnd_pkts, p.max_cwnd_pkts)
+    return s._replace(cwnd=cwnd, avg_delay=avg_delay,
+                      last_decrease_ts=last_decrease_ts,
+                      last_selfai_ts=last_selfai_ts)
+
+
+def on_ack_cc(s: CCState, p: STrackParams, ecn: jax.Array,
+              measured_rtt: jax.Array, acked_bytes: jax.Array,
+              ack_for_probe: jax.Array, now: jax.Array) -> CCState:
+    """Algorithm 1's CC portion: base-RTT tracking + Algo 4 + Algo 3."""
+    measured_rtt = jnp.asarray(measured_rtt, jnp.float32)
+    base_rtt = jnp.minimum(s.base_rtt, measured_rtt)
+    qdelay = measured_rtt - base_rtt
+    s = s._replace(base_rtt=base_rtt)
+    s = update_achieved_bdp(s, p, acked_bytes, ack_for_probe, now)
+    return adjust_cwnd(s, p, ecn, qdelay, now)

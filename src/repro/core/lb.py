@@ -1,0 +1,78 @@
+"""Algorithm 2 — STrack adaptive load balancing, as pure JAX functions.
+
+State is a fixed-shape NamedTuple so thousands of flows vmap into one XLA
+program (the "parallel connection engines" of the NIC ASIC). Semantics match
+``core/ref.py`` (the prose-reconciled Algorithm 2): ``bitmap[p] == 1`` means
+entropy ``p`` returned an ECN-marked ACK; CHOOSE_PATH round-robins across the
+first ``min(max_paths, max(8, 2*cwnd))`` entropies skipping marked ones and
+clears the first skipped mark ("one packet only clears one bit").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import STrackParams
+
+
+class SprayState(NamedTuple):
+    bitmap: jax.Array        # int8[max_paths], 1 = ECN-marked (bad)
+    rr: jax.Array            # int32 scalar, round-robin pointer
+    next_path_id: jax.Array  # int32 scalar, -1 = invalid
+    last_reset_ts: jax.Array  # float32 scalar
+
+
+def init_spray(p: STrackParams, now: float = 0.0) -> SprayState:
+    return SprayState(
+        bitmap=jnp.zeros((p.max_paths,), jnp.int8),
+        rr=jnp.zeros((), jnp.int32),
+        next_path_id=jnp.full((), -1, jnp.int32),
+        last_reset_ts=jnp.full((), now, jnp.float32),
+    )
+
+
+def update_ecn_bitmap(s: SprayState, ecn: jax.Array,
+                      path_id: jax.Array) -> SprayState:
+    """UPDATE_ECN_BITMAP(ecn, path_id)."""
+    ecn = jnp.asarray(ecn, bool)
+    path_id = jnp.asarray(path_id, jnp.int32)
+    bitmap = s.bitmap.at[path_id].set(jnp.where(ecn, 1, 0).astype(jnp.int8))
+    next_path_id = jnp.where(ecn, jnp.int32(-1), path_id)
+    return s._replace(bitmap=bitmap, next_path_id=next_path_id)
+
+
+def choose_path(s: SprayState, p: STrackParams, cwnd_pkts: jax.Array,
+                now: jax.Array) -> tuple[jax.Array, SprayState]:
+    """CHOOSE_PATH() -> (entropy, new_state)."""
+    now = jnp.asarray(now, jnp.float32)
+    # Staleness reset (1-2 RTTs, Section 1 / ref.py).
+    do_reset = (now - s.last_reset_ts) > (p.bitmap_reset_rtts * p.base_rtt_us)
+    bitmap = jnp.where(do_reset, jnp.zeros_like(s.bitmap), s.bitmap)
+    last_reset_ts = jnp.where(do_reset, now, s.last_reset_ts)
+
+    paths = jnp.clip(
+        (2.0 * cwnd_pkts).astype(jnp.int32), 8, p.max_paths)
+
+    # Round-robin scan c_0, c_1, ... (c_i = (rr+1+i) mod paths).
+    idx = (s.rr + 1 + jnp.arange(p.max_paths, dtype=jnp.int32)) % paths
+    c0 = idx[0]
+    c0_marked = bitmap[c0] != 0
+    # "one packet only clears one bit": the first visited-and-skipped path.
+    bitmap_cleared = bitmap.at[c0].set(0)  # no-op when c0 already unmarked
+    # First i >= 1 whose (post-clear) bitmap entry is unmarked; all-marked
+    # wraps back to the freshly cleared c0 (argmax of all-False -> 0 -> idx[0]).
+    unmarked = bitmap_cleared[idx] == 0
+    unmarked = unmarked.at[0].set(False)
+    k = jnp.argmax(unmarked)
+    scanned = jnp.where(c0_marked, idx[k], c0)
+
+    rr_new = jnp.where(s.next_path_id >= 0, s.next_path_id, scanned)
+    new_bitmap = jnp.where(s.next_path_id >= 0, bitmap, bitmap_cleared)
+    return rr_new, SprayState(
+        bitmap=new_bitmap,
+        rr=rr_new,
+        next_path_id=jnp.full((), -1, jnp.int32),
+        last_reset_ts=last_reset_ts,
+    )

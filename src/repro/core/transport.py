@@ -1,0 +1,98 @@
+"""The composed STrack flow engine — one NamedTuple per flow, pure-JAX.
+
+``FlowState`` bundles CC (Algo 3/4), spray (Algo 2) and reliability (S3.3)
+state; ``flow_on_sack`` / ``flow_next_packet`` / ``flow_on_timer`` are the
+three entry points of Algorithm 1.  Everything is fixed-shape, so
+``jax.vmap`` turns this into N parallel NIC connection engines, and
+``sim/jaxsim.py`` scans it through time inside a single XLA program.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import cc as cc_mod
+from . import lb as lb_mod
+from . import reliability as rel_mod
+from .params import STrackParams
+from .reliability import RelState, SackMsg
+from .cc import CCState
+from .lb import SprayState
+
+
+class FlowState(NamedTuple):
+    cc: CCState
+    spray: SprayState
+    rel: RelState
+
+
+def init_flow(p: STrackParams, total_pkts, now: float = 0.0) -> FlowState:
+    return FlowState(
+        cc=cc_mod.init_cc(p, now),
+        spray=lb_mod.init_spray(p, now),
+        rel=rel_mod.init_rel(p, total_pkts, now),
+    )
+
+
+def flow_on_sack(fs: FlowState, p: STrackParams, sack: SackMsg,
+                 now: jax.Array) -> FlowState:
+    """Algorithm 1, on_receiving_ack — guarded by ``sack.valid``."""
+    now = jnp.asarray(now, jnp.float32)
+    measured_rtt = now - sack.ts
+    base_rtt = jnp.minimum(fs.cc.base_rtt, measured_rtt)
+    qdelay = measured_rtt - base_rtt
+
+    spray = lb_mod.update_ecn_bitmap(fs.spray, sack.ecn, sack.entropy)
+    spray = jax.tree.map(
+        lambda new, old: jnp.where(sack.probe_reply, old, new),
+        spray, fs.spray)
+
+    rel, acked_bytes = rel_mod.rel_on_sack(
+        fs.rel, p, sack, fs.cc.cwnd, fs.cc.achieved_bdp_pkts, qdelay, now)
+
+    cc = fs.cc._replace(base_rtt=base_rtt)
+    cc = cc_mod.update_achieved_bdp(cc, p, acked_bytes, sack.probe_reply, now)
+    cc = cc_mod.adjust_cwnd(cc, p, sack.ecn, qdelay, now)
+
+    new = FlowState(cc=cc, spray=spray, rel=rel)
+    # No-op when the SACK slot is empty (vectorised simulators pass bubbles).
+    return jax.tree.map(
+        lambda n, o: jnp.where(sack.valid, n, o), new, fs)
+
+
+class TxPacket(NamedTuple):
+    valid: jax.Array    # bool
+    psn: jax.Array      # i32
+    entropy: jax.Array  # i32
+    is_rtx: jax.Array   # bool
+    is_probe: jax.Array  # bool
+
+
+def flow_next_packet(fs: FlowState, p: STrackParams, now: jax.Array,
+                     ) -> tuple[FlowState, TxPacket]:
+    """on_sending_packet: window check + PSN pick + Algo 2 path choice."""
+    rel, psn, is_rtx, valid = rel_mod.rel_next_psn(fs.rel, p, fs.cc.cwnd)
+    entropy, spray = lb_mod.choose_path(fs.spray, p, fs.cc.cwnd, now)
+    spray = jax.tree.map(
+        lambda n, o: jnp.where(valid, n, o), spray, fs.spray)
+    rel = jax.tree.map(lambda n, o: jnp.where(valid, n, o), rel, fs.rel)
+    return (FlowState(cc=fs.cc, spray=spray, rel=rel),
+            TxPacket(valid=valid, psn=psn, entropy=entropy, is_rtx=is_rtx,
+                     is_probe=jnp.zeros((), bool)))
+
+
+def flow_on_timer(fs: FlowState, p: STrackParams, now: jax.Array,
+                  ) -> tuple[FlowState, TxPacket]:
+    """RTO / probe timers; may emit a probe packet."""
+    rel, probe = rel_mod.rel_on_timer(fs.rel, p, now)
+    entropy, spray = lb_mod.choose_path(fs.spray, p, fs.cc.cwnd, now)
+    spray = jax.tree.map(lambda n, o: jnp.where(probe, n, o), spray, fs.spray)
+    return (FlowState(cc=fs.cc, spray=spray, rel=rel),
+            TxPacket(valid=probe, psn=rel.epsn, entropy=entropy,
+                     is_rtx=jnp.zeros((), bool), is_probe=probe))
+
+
+def flow_done(fs: FlowState) -> jax.Array:
+    return rel_mod.rel_done(fs.rel)

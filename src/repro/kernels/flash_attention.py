@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+TPU-native tiling: the grid is (batch*q_heads, q_blocks, kv_blocks) with the
+kv dimension innermost — TPU grids execute sequentially per core, so the
+online-softmax state (m, l, acc) lives in VMEM scratch and is carried
+across kv steps; the output block is written on the last kv step.  Block
+shapes are MXU-aligned (multiples of 128 on the matmul dims).  Fully-masked
+kv blocks (beyond the causal frontier / outside the sliding window) are
+skipped with pl.when.
+
+Validated against kernels/ref.py in interpret mode (tests/test_kernels.py);
+on real TPUs drop interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale, block_q, block_k, seq_k, causal, window, q_offset):
+    """One (q_block, kv_block) cell. Scratch carries online-softmax state."""
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # block-level early-out: skip fully-masked kv blocks
+    first_q = iq * block_q + q_offset
+    last_q = first_q + block_q - 1
+    first_k = ik * block_k
+    live = True
+    if causal:
+        live = jnp.asarray(first_k <= last_q)
+    if window is not None:
+        live = jnp.logical_and(live, (ik + 1) * block_k - 1 > first_q - window)
+
+    @pl.when(live)
+    def _compute():
+        # zero the rows of a ragged tail block: OOB block reads are
+        # implementation-defined (NaN in interpret mode) and 0*NaN = NaN
+        # would leak through the p@V dot even where p == 0.
+        row_ok = (ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)) < seq_k
+        q = q_ref[0].astype(jnp.float32)             # (block_q, hd)
+        k = jnp.where(row_ok, k_ref[0].astype(jnp.float32), 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        m_scr[...] = m_new
+        v = jnp.where(row_ok, v_ref[0].astype(jnp.float32), 0.0)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    block_q=128, block_k=128, interpret=True):
+    """q: (B, H, Tq, hd); k, v: (B, K, Tk, hd). Returns (B, H, Tq, hd).
+
+    ``q_offset`` positions the q block absolutely (decode / chunked prefill:
+    q_pos = q_offset + i).  GQA: q head h reads kv head h // (H // K).
+    """
+    B, H, Tq, hd = q.shape
+    _, K, Tk, _ = k.shape
+    assert H % K == 0
+    group = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    nq = pl.cdiv(Tq, bq)
+    nk = pl.cdiv(Tk, bk)
+
+    q_r = q.reshape(B * H, Tq, hd)
+    grid = (B * H, nq, nk)
+
+    q_spec = pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0))
+    # GQA mapping: bh = b * H + h  ->  kv row b * K + h // group
+    kv_spec = pl.BlockSpec(
+        (1, bk, hd),
+        lambda bh, iq, ik: ((bh // H) * K + (bh % H) // group, ik, 0))
+    o_spec = pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0))
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=bq, block_k=bk, seq_k=Tk,
+        causal=causal, window=window, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_r, k.reshape(B * K, Tk, hd), v.reshape(B * K, Tk, hd))
+    return out.reshape(B, H, Tq, hd)

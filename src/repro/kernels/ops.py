@@ -1,0 +1,36 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Models call these; layouts are converted from the model's (B, T, H, hd)
+convention to the kernels' (B, H, T, hd).  ``interpret`` defaults to True
+(CPU validation); set REPRO_PALLAS_COMPILE=1 on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import ssd_scan as _ssd
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal=True,
+                    window=None, q_offset=0):
+    """q: (B,T,H,hd), k/v: (B,S,K,hd) — model layout. Returns same layout."""
+    out = _fa.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        q_offset=q_offset, interpret=_INTERPRET)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B_, C_, chunk=128):
+    """Mamba2 SSD: x (B,T,H,P), dt (B,T,H), A (H,), B_/C_ (B,T,N)."""
+    return _ssd.ssd_scan(x, dt, A, B_, C_, chunk=chunk,
+                         interpret=_INTERPRET)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """q: (B,H,Tq,hd); k,v: (B,K,Tk,hd). Materialised-softmax reference."""
+    B, H, Tq, hd = q.shape
+    _, K, Tk, _ = k.shape
+    G = H // K
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(Tq) + q_offset
+    k_pos = jnp.arange(Tk)
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B_, C_):
+    """Sequential (token-by-token) SSD recurrence — the exact oracle.
+
+    x (B,T,H,P), dt (B,T,H), A (H,), B_/C_ (B,T,N). Returns (y, state)."""
+    Bb, T, H, P = x.shape
+    N = B_.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt * A)                      # (B,H)
+        dtx = dtt[..., None] * xt                 # (B,H,P)
+        state = a[:, :, None, None] * state + jnp.einsum(
+            "bn,bhp->bhnp", bt, dtx)
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(f32),
+          dt.transpose(1, 0, 2).astype(f32),
+          B_.transpose(1, 0, 2).astype(f32),
+          C_.transpose(1, 0, 2).astype(f32))
+    s0 = jnp.zeros((Bb, H, N, P), f32)
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), state

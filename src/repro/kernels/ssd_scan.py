@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (batch*heads, n_chunks) — chunks are the minor (sequential) grid dim,
+so the inter-chunk state (N, P) is carried in VMEM scratch, exactly the
+hardware-resident recurrence of the SSD algorithm.  All intra-chunk work is
+(L,N)/(L,L)/(L,P) matmuls with L = chunk (MXU-aligned at 128).
+
+Shapes: x (B,T,H,P) -> per-grid block (L,P); dt (B,T,H) -> (L,); B̂/Ĉ
+(B,T,N) shared across heads -> (L,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    L = chunk
+    x = x_ref[0].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    a = a_ref[0, 0]                           # scalar A_h (negative)
+    b = b_ref[0].astype(jnp.float32)          # (L, N)
+    c = c_ref[0].astype(jnp.float32)          # (L, N)
+
+    lam = dt * a                              # (L,) log decay
+    cs = jnp.cumsum(lam)                      # (L,)
+    dtx = dt[:, None] * x                     # (L, P)
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i . B_j) exp(cs_i - cs_j) dtx_j
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L,L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    diff = cs[:, None] - cs[None, :]
+    decay = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    y = jax.lax.dot(cb * decay, dtx, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]                    # (N, P)
+    y += jnp.exp(cs)[:, None] * jax.lax.dot(
+        c, state, preferred_element_type=jnp.float32)
+
+    # state update for the next chunk
+    w = jnp.exp(cs[-1] - cs)                  # (L,)
+    state_scr[...] = jnp.exp(cs[-1]) * state + jax.lax.dot_general(
+        b * w[:, None], dtx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk=128, interpret=True):
+    """x (B,T,H,P), dt (B,T,H), A (H,), B_/C_ (B,T,N) -> y (B,T,H,P)."""
+    Bb, T, H, P = x.shape
+    N = B_.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+
+    # (B,T,H,P) -> (B*H, T, P)
+    x_r = x.transpose(0, 2, 1, 3).reshape(Bb * H, T, P)
+    dt_r = dt.transpose(0, 2, 1).reshape(Bb * H, T, 1)
+    a_r = jnp.tile(A[None, :], (Bb, 1)).reshape(Bb * H, 1)
+
+    grid = (Bb * H, nc)
+    x_spec = pl.BlockSpec((1, L, P), lambda bh, ic: (bh, ic, 0))
+    dt_spec = pl.BlockSpec((1, L, 1), lambda bh, ic: (bh, ic, 0))
+    a_spec = pl.BlockSpec((1, 1), lambda bh, ic: (bh, 0))
+    bc_spec = pl.BlockSpec((1, L, N), lambda bh, ic: (bh // H, ic, 0))
+    y_spec = pl.BlockSpec((1, L, P), lambda bh, ic: (bh, ic, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=L),
+        grid=grid,
+        in_specs=[x_spec, dt_spec, a_spec, bc_spec, bc_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((Bb * H, T, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x_r, dt_r, a_r, B_, C_)
+    return out.reshape(Bb, H, T, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST be the first statements of this module —
+# before any jax import — since jax locks the device count on first init.
+# The module docstring therefore lives in this comment block.
+#
+# Multi-pod dry-run driver (deliverable e).
+
+# Lowers + compiles every (arch x shape x mesh) cell against
+# ShapeDtypeStruct inputs on the production meshes, prints
+# memory_analysis()/cost_analysis(), extracts the three roofline terms, and
+# caches everything to experiments/dryrun/*.json.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+#       --shape train_4k --mesh pod
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import all_archs, get_config
+from ..configs.base import SHAPES, applicable_shapes
+from ..models.config import ModelConfig
+from ..parallel import sharding as shd
+from ..runtime.optimizer import OptConfig
+from ..runtime.serve import make_decode_step, make_prefill_step
+from ..runtime.train import make_train_step
+from . import roofline as rf
+from . import specs as SP
+from .mesh import make_production_mesh
+
+OUT_DIR = "experiments/dryrun"
+
+
+def _shardings(tree_specs, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+def build_and_lower(arch: str, shape_name: str, mesh, *,
+                    fsdp: bool = True, micro_batches: int = 1,
+                    grad_compress: bool = False,
+                    cfg_override: ModelConfig | None = None,
+                    layout: str = "2d", params_bf16: bool = False):
+    """Returns (lowered, aux) for one cell.
+
+    layout: "2d" (TP over model + FSDP over data, the baseline) or
+    "ddp" (no TP: pure data parallel over ALL axes with ZeRO-3 weight
+    sharding — a beyond-paper §Perf layout)."""
+    cfg = cfg_override or get_config(arch)
+    info = SHAPES[shape_name]
+    mode = info["mode"]
+    opt_cfg = OptConfig(grad_compress=grad_compress)
+
+    tp = layout != "ddp"
+    fsdp_axes = ("data",) if tp else tuple(
+        a for a in ("data", "model") if a in mesh.axis_names)
+    # pin activation batch sharding to the DP axes (when divisible)
+    dp = shd.batch_axes(mesh) if tp else tuple(
+        a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    eff_batch = info["batch"]
+    if mode == "train" and micro_batches > 1:
+        eff_batch //= micro_batches
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        "model", 0) if tp else 0
+    if dp and eff_batch % dp_size == 0:
+        cfg = dataclasses.replace(cfg, dp_axes=tuple(dp), tp_size=tp_size)
+    if mode == "decode":
+        # Decode baseline: weights stay 2D-sharded (data x model) and the
+        # tiny per-token activations are partial-summed — far cheaper than
+        # per-layer weight all-gathers at batch*1 token.
+        cfg = dataclasses.replace(cfg, gather_weights=False)
+
+    # serving uses bf16 weights (no optimizer/master copy at serve time)
+    import jax.numpy as jnp
+    p_sds = SP.param_specs_for(
+        cfg, dtype=(jnp.bfloat16 if (params_bf16 or mode != "train")
+                    else None))
+    p_spec = shd.param_specs(p_sds, mesh, fsdp=fsdp, fsdp_axes=fsdp_axes,
+                             tp=tp)
+    p_shard = _shardings(p_spec, mesh)
+
+    if mode == "train":
+        o_sds = SP.opt_specs_for(cfg, opt_cfg)
+        o_spec = shd.param_specs(o_sds, mesh, fsdp=fsdp,
+                                 fsdp_axes=fsdp_axes, tp=tp)
+        o_shard = _shardings(o_spec, mesh)
+        b_sds = SP.batch_specs_for(cfg, shape_name)
+        b_spec = shd.batch_specs(b_sds, mesh, axes=dp if not tp else None)
+        b_shard = _shardings(b_spec, mesh)
+        step = make_train_step(cfg, opt_cfg, micro_batches=micro_batches)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(p_sds, o_sds, b_sds)
+    elif mode == "prefill":
+        b_sds = SP.batch_specs_for(cfg, shape_name)
+        b_spec = shd.batch_specs(b_sds, mesh)
+        b_shard = _shardings(b_spec, mesh)
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(p_sds, b_sds)
+    else:  # decode
+        c_sds = SP.cache_specs_for(cfg, shape_name)
+        c_spec = shd.cache_specs(c_sds, mesh)
+        c_shard = _shardings(c_spec, mesh)
+        ex = SP.decode_extra_specs(cfg, shape_name)
+        t_shard = _shardings(shd.batch_specs(
+            {"tokens": ex["tokens"]}, mesh), mesh)["tokens"]
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, c_shard, t_shard,
+                                       NamedSharding(mesh, P())),
+                         donate_argnums=(1,))
+        with jax.sharding.set_mesh(mesh):
+            lowered = jitted.lower(p_sds, c_sds, ex["tokens"], ex["pos"])
+    return lowered, dict(cfg=cfg, info=info, mode=mode)
+
+
+def probe_cfgs(cfg: ModelConfig):
+    """(1-unit cfg, 2-unit cfg, n_units) for exact per-layer cost probes.
+
+    XLA's cost_analysis counts a lax.scan (while-loop) body ONCE, so the
+    scanned full model under-reports FLOPs/bytes/collectives by ~n_layers x.
+    We compile UNROLLED 1-unit and 2-unit variants and extrapolate
+    linearly: total = p1 + (n_units - 1) * (p2 - p1)."""
+    r = dataclasses.replace
+    if cfg.kind == "hybrid":
+        e = cfg.hybrid_attn_every
+        return (r(cfg, n_layers=e, scan_layers=False),
+                r(cfg, n_layers=2 * e, scan_layers=False),
+                cfg.n_layers // e)
+    if cfg.kind == "encdec":
+        return (r(cfg, n_layers=1, n_enc_layers=1, scan_layers=False),
+                r(cfg, n_layers=2, n_enc_layers=2, scan_layers=False),
+                cfg.n_layers)
+    return (r(cfg, n_layers=1, scan_layers=False),
+            r(cfg, n_layers=2, scan_layers=False),
+            cfg.n_layers)
+
+
+def _probe_cost(arch, shape_name, mesh, n_chips, cfg, **kw):
+    lowered, _ = build_and_lower(arch, shape_name, mesh, cfg_override=cfg,
+                                 **kw)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = rf.parse_collective_bytes(compiled.as_text(), n_chips)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def extrapolated_cost(arch, shape_name, mesh, n_chips, cfg, **kw):
+    c1_cfg, c2_cfg, n_units = probe_cfgs(cfg)
+    p1 = _probe_cost(arch, shape_name, mesh, n_chips, c1_cfg, **kw)
+    p2 = _probe_cost(arch, shape_name, mesh, n_chips, c2_cfg, **kw)
+    k = n_units - 1
+
+    def lin(a, b):
+        return a + k * (b - a)
+    coll = {}
+    for key in rf.COLLECTIVES + ("total",):
+        coll[key] = lin(p1["coll"][key], p2["coll"][key])
+    coll["counts"] = {key: lin(p1["coll"]["counts"][key],
+                               p2["coll"]["counts"][key])
+                      for key in rf.COLLECTIVES}
+    return {"flops": lin(p1["flops"], p2["flops"]),
+            "bytes accessed": lin(p1["bytes"], p2["bytes"])}, coll
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             fsdp: bool = True, micro_batches: int = 1,
+             grad_compress: bool = False, save: bool = True,
+             tag: str = "", cfg_override=None, verbose: bool = True,
+             probes: bool = True, layout: str = "2d",
+             params_bf16: bool = False):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered, aux = build_and_lower(
+        arch, shape_name, mesh, fsdp=fsdp, micro_batches=micro_batches,
+        grad_compress=grad_compress, cfg_override=cfg_override,
+        layout=layout, params_bf16=params_bf16)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    if probes:
+        # exact per-layer costs from unrolled 1/2-unit probe compiles.
+        # micro_batches is forced to 1: the grad-accum scan is also a
+        # while loop (counted once), and per-step totals are identical.
+        cost, coll = extrapolated_cost(
+            arch, shape_name, mesh, n_chips, aux["cfg"], fsdp=fsdp,
+            micro_batches=1, grad_compress=grad_compress, layout=layout,
+            params_bf16=params_bf16)
+    else:
+        cost = compiled.cost_analysis()
+        coll = rf.parse_collective_bytes(compiled.as_text(), n_chips)
+    mflops = rf.model_flops_for(aux["cfg"], aux["info"])
+    terms = rf.roofline(cost, coll, n_chips, mflops, aux["mode"])
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "tag": tag, "fsdp": fsdp, "micro_batches": micro_batches,
+        "grad_compress": grad_compress,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "per_device_total": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 - mem.alias_size_in_bytes
+                                 + mem.temp_size_in_bytes),
+        },
+        "roofline": terms,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}{tag} "
+              f"chips={n_chips} lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print(f"  memory/device: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB")
+        print(f"  terms: compute={terms['compute_s']*1e3:.2f}ms "
+              f"memory={terms['memory_s']*1e3:.2f}ms "
+              f"collective={terms['collective_s']*1e3:.2f}ms "
+              f"-> {terms['dominant']} bound; "
+              f"useful-flops ratio={terms['model_flops_ratio']:.2f}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fn = f"{OUT_DIR}/{arch}__{shape_name}__{mesh_name}{tag}.json"
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    archs = all_archs() if (args.all or not args.arch) else [args.arch]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    ok, fail = 0, []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else applicable_shapes(cfg))
+        for shape in shapes:
+            for mesh_name in meshes:
+                fn = f"{OUT_DIR}/{arch}__{shape}__{mesh_name}{args.tag}.json"
+                if args.skip_existing and os.path.exists(fn):
+                    print(f"[skip] {fn}")
+                    ok += 1
+                    continue
+                try:
+                    # roofline probes are single-pod only (DESIGN §5); the
+                    # multipod pass proves the "pod" axis shards/compiles.
+                    run_cell(arch, shape, mesh_name,
+                             fsdp=not args.no_fsdp,
+                             micro_batches=args.micro_batches,
+                             grad_compress=args.grad_compress,
+                             tag=args.tag,
+                             probes=(mesh_name == "pod"
+                                     and not args.no_probes))
+                    ok += 1
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    fail.append((arch, shape, mesh_name, repr(e)[:200]))
+    print(f"\n[dryrun] {ok} cells OK, {len(fail)} failed")
+    for f in fail:
+        print("  FAIL:", f)
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# §Perf hillclimbing driver: run one (arch x shape) cell under a named
+# variant, record the three roofline terms to experiments/perf/<cell>.jsonl,
+# and print the before/after delta of the dominant term.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb \
+#       --arch llama3-8b --shape train_4k --variant bf16_stream
+import argparse
+import dataclasses
+import json
+
+from ..configs import get_config
+from .dryrun import run_cell
+
+# Named variants: each returns kwargs for run_cell (+ cfg transform).
+VARIANTS = {
+    # paper-faithful baseline: TP(model) x FSDP(data), fp32 master params,
+    # fp32 residual stream psums, chunked attention at 512
+    "baseline": dict(),
+    # H: bf16 residual stream -> TP all-reduces halve
+    "bf16_stream": dict(cfg=dict(dtype="bfloat16")),
+    # H: larger attention KV chunk -> fewer online-softmax carry sweeps
+    "attn_chunk_2048": dict(cfg=dict(attn_chunk=2048)),
+    "attn_chunk_4096": dict(cfg=dict(attn_chunk=4096)),
+    # H: no TP — pure DP over all 256/512 chips with ZeRO-3 weight sharding
+    "ddp_zero3": dict(layout="ddp"),
+    # H: save-dots remat (less recompute, more temp memory)
+    "remat_dots": dict(cfg=dict(remat="dots")),
+    "remat_none": dict(cfg=dict(remat="none")),
+    # H: int8 gradient compression w/ error feedback (inter-pod DCN lever)
+    "grad_compress": dict(grad_compress=True),
+    # H: bf16 norms -> the TP all-reduce is not hoisted into f32
+    "bf16_norms": dict(cfg=dict(norm_f32=False)),
+    # H: bf16 online-softmax state -> chunked-attention carry bytes halve
+    "attn_bf16": dict(cfg=dict(attn_f32=False)),
+    # H: flash-style backward — recompute p per kv chunk instead of saving
+    # the (T x S) f32 probabilities across the scan
+    "attn_remat": dict(cfg=dict(attn_remat_chunk=True)),
+    # H: naive attention (one materialised p, fewer copies than scan saves)
+    "attn_naive": dict(cfg=dict(attn_impl="naive")),
+    "combo_ddp_attnremat": dict(layout="ddp",
+                                cfg=dict(attn_remat_chunk=True)),
+    "combo_ddp_attnremat_comp": dict(layout="ddp", grad_compress=True,
+                                     cfg=dict(attn_remat_chunk=True)),
+    "combo_ddp_attnremat_dots": dict(layout="ddp",
+                                     cfg=dict(attn_remat_chunk=True,
+                                              remat="dots")),
+    # H: Megatron sequence parallelism (TP AR -> RS+AG, half the bytes)
+    "seqpar": dict(cfg=dict(seq_shard=True)),
+    "combo_seqpar_attnremat": dict(cfg=dict(seq_shard=True,
+                                            attn_remat_chunk=True)),
+    # H: bf16 master params halve the FSDP weight-gather bytes
+    "params_bf16": dict(params_bf16=True),
+    "combo_bf16params_attnremat": dict(params_bf16=True,
+                                       cfg=dict(attn_remat_chunk=True)),
+    "combo_final": dict(layout="ddp", params_bf16=True,
+                        cfg=dict(attn_remat_chunk=True, remat="dots")),
+    # combos
+    "combo_bf16_chunk": dict(cfg=dict(dtype="bfloat16", attn_chunk=2048)),
+    "combo_norm_attn": dict(cfg=dict(norm_f32=False, attn_f32=False)),
+    "combo_ddp_norm_attn": dict(layout="ddp",
+                                cfg=dict(norm_f32=False, attn_f32=False)),
+    "combo_ddp_norm_attn_comp": dict(layout="ddp", grad_compress=True,
+                                     cfg=dict(norm_f32=False,
+                                              attn_f32=False)),
+    "combo_ddp_bf16": dict(layout="ddp", cfg=dict(dtype="bfloat16")),
+    "combo_ddp_bf16_chunk": dict(layout="ddp",
+                                 cfg=dict(dtype="bfloat16",
+                                          attn_chunk=2048)),
+    "combo_ddp_bf16_compress": dict(layout="ddp", grad_compress=True,
+                                    cfg=dict(dtype="bfloat16")),
+    # MoE-specific: smaller dispatch groups (dispatch FLOPs ~ group size)
+    "moe_group_256": dict(cfg=dict(moe_group=256)),
+    "moe_group_128": dict(cfg=dict(moe_group=128)),
+    "combo_ddp_attnremat_moe128": dict(layout="ddp",
+                                       cfg=dict(attn_remat_chunk=True,
+                                                moe_group=128)),
+}
+
+
+def run_variant(arch: str, shape: str, mesh: str, variant: str,
+                micro_batches: int = 8):
+    spec = VARIANTS[variant]
+    cfg = get_config(arch)
+    if spec.get("cfg"):
+        cfg = dataclasses.replace(cfg, **spec["cfg"])
+    rec = run_cell(arch, shape, mesh,
+                   micro_batches=micro_batches,
+                   grad_compress=spec.get("grad_compress", False),
+                   layout=spec.get("layout", "2d"),
+                   params_bf16=spec.get("params_bf16", False),
+                   cfg_override=cfg, save=False, probes=True)
+    rec["variant"] = variant
+    os.makedirs("experiments/perf", exist_ok=True)
+    out = f"experiments/perf/{arch}__{shape}__{mesh}.jsonl"
+    with open(out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--variant", required=True, nargs="+")
+    ap.add_argument("--micro-batches", type=int, default=8)
+    args = ap.parse_args()
+    for v in args.variant:
+        try:
+            rec = run_variant(args.arch, args.shape, args.mesh, v,
+                              args.micro_batches)
+            r = rec["roofline"]
+            print(f"[perf] {args.arch}x{args.shape}x{args.mesh} {v}: "
+                  f"compute={r['compute_s']*1e3:.0f}ms "
+                  f"mem={r['memory_s']*1e3:.0f}ms "
+                  f"coll={r['collective_s']*1e3:.0f}ms "
+                  f"bound={r['dominant']} "
+                  f"frac={r['roofline_fraction']:.3f}")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"[perf] {v} FAILED: {e}")
+
+
+if __name__ == "__main__":
+    main()

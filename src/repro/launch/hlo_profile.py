@@ -1,0 +1,44 @@
+"""HLO collective profiler — the dry-run's 'profile view' for §Perf.
+
+Lists the largest collectives (bytes, op, source op_name metadata) from a
+compiled module so hillclimbing can target the dominant resharding /
+gradient traffic."""
+from __future__ import annotations
+
+import re
+
+from .roofline import COLLECTIVES, _result_bytes, _group_size
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def top_collectives(hlo_text: str, n_devices: int, top: int = 25):
+    rows = []
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVES:
+            key, key_s = f" {op}(", f" {op}-start("
+            if key in line or key_s in line:
+                opk = op + ("-start" if key_s in line else "")
+                rb = _result_bytes(line, opk)
+                g = _group_size(line, n_devices)
+                if op == "all-reduce":
+                    moved = 2.0 * rb * (g - 1) / max(g, 1)
+                elif op == "reduce-scatter":
+                    moved = rb * (g - 1)
+                elif op == "collective-permute":
+                    moved = rb
+                else:
+                    moved = rb * (g - 1) / max(g, 1)
+                m = _META_RE.search(line)
+                rows.append((moved, op, g, m.group(1) if m else "?"))
+                break
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def summarize(hlo_text: str, n_devices: int, top: int = 25) -> str:
+    rows = top_collectives(hlo_text, n_devices, top)
+    out = [f"{'bytes/dev':>12}  {'op':<18} {'grp':>4}  source"]
+    for moved, op, g, src in rows:
+        out.append(f"{moved/1e6:>10.1f}MB  {op:<18} {g:>4}  {src[:90]}")
+    return "\n".join(out)

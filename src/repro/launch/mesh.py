@@ -1,0 +1,25 @@
+"""Production meshes (DESIGN.md §5).
+
+A function, not a module constant, so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips ("data", "model").  Multi-pod:
+2x16x16 = 512 chips ("pod", "data", "model") — the "pod" axis carries the
+inter-pod (Ethernet/DCN) data parallelism that STrack accelerates.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/examples (e.g. (1,1) smoke meshes)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,66 @@
+"""Render EXPERIMENTS.md tables from cached dry-run JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(mesh: str = "pod", tag: str = ""):
+    cells = []
+    for fn in sorted(glob.glob(f"experiments/dryrun/*__{mesh}{tag}.json")):
+        base = os.path.basename(fn)
+        # untagged cells end exactly with __<mesh>.json (arch names may
+        # contain dots, e.g. mamba2-2.7b)
+        if tag == "" and not base.endswith(f"__{mesh}.json"):
+            continue
+        cells.append(json.load(open(fn)))
+    return cells
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}GiB" if b > 2**29 else f"{b/2**20:.0f}MiB"
+
+
+def roofline_table(mesh: str = "pod", tag: str = "") -> str:
+    rows = ["| arch | shape | compute | memory | collective | bound | "
+            "6ND/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh, tag):
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']*1e3:.1f}ms "
+            f"| {r['memory_s']*1e3:.1f}ms | {r['collective_s']*1e3:.1f}ms "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r['model_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str = "pod", tag: str = "") -> str:
+    rows = ["| arch | shape | chips | args/dev | temp/dev | compile | "
+            "AR | AG | RS | A2A | CP |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh, tag):
+        m = c["memory"]
+        cb = c["roofline"]["collective_breakdown"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['n_chips']} "
+            f"| {fmt_bytes(m['argument_bytes'])} "
+            f"| {fmt_bytes(m['temp_bytes'])} | {c['compile_s']:.0f}s "
+            f"| {cb['all-reduce']/1e9:.1f}GB | {cb['all-gather']/1e9:.1f}GB "
+            f"| {cb['reduce-scatter']/1e9:.1f}GB "
+            f"| {cb['all-to-all']/1e9:.1f}GB "
+            f"| {cb['collective-permute']/1e9:.1f}GB |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod"
+    tag = sys.argv[2] if len(sys.argv) > 2 else ""
+    print("## Roofline —", mesh, tag)
+    print(roofline_table(mesh, tag))
+    print()
+    print("## Dry-run —", mesh, tag)
+    print(dryrun_table(mesh, tag))

@@ -1,0 +1,147 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs_global / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes_global / (chips * 819 GB/s HBM)
+  collective = per-chip collective bytes / 50 GB/s per ICI link
+
+``compiled.cost_analysis()`` reports the per-partition SPMD program, so
+global = per-device * chips.  Collective bytes are NOT in cost_analysis:
+we parse the optimized HLO and apply ring-algorithm byte counts
+(all-reduce 2x result, all-gather 1x result, reduce-scatter (g-1)x result,
+all-to-all 1x, collective-permute 1x).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(b * n)
+
+
+def _result_bytes(line: str, op: str) -> float:
+    """Sum the result shapes (text between '=' and the op keyword).
+
+    NB: the instruction NAME also contains the op string
+    (``%all-reduce.3 = f32[..] all-reduce(..)``), so search after '='."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0.0
+    k = line.find(f" {op}(", eq)
+    if k < 0:
+        return 0.0
+    seg = line[eq + 1:k]
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(seg))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collective_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device bytes moved, by collective kind (ring formulas)."""
+    out = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVES:
+            key = f" {op}("
+            key_start = f" {op}-start("
+            if key in line or key_start in line:
+                opk = op + ("-start" if key_start in line else "")
+                rb = _result_bytes(line, opk)
+                g = _group_size(line, n_devices)
+                if op == "all-reduce":
+                    moved = 2.0 * rb * (g - 1) / max(g, 1)
+                elif op == "all-gather":
+                    moved = rb * (g - 1) / max(g, 1)
+                elif op == "reduce-scatter":
+                    moved = rb * (g - 1)
+                elif op == "all-to-all":
+                    moved = rb * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    moved = rb
+                out[op] += moved
+                counts[op] += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def roofline(cost: dict, coll: dict, n_chips: int, model_flops: float,
+             mode: str) -> dict:
+    """cost: compiled.cost_analysis() (per-device). Returns the 3 terms."""
+    dev_flops = float(cost.get("flops", 0.0))
+    dev_bytes = float(cost.get("bytes accessed", 0.0))
+    t_compute = dev_flops / PEAK_FLOPS
+    t_memory = dev_bytes / HBM_BW
+    t_coll = coll["total"] / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    hlo_flops_global = dev_flops * n_chips
+    return {
+        **terms,
+        "dominant": dom,
+        "hlo_flops_global": hlo_flops_global,
+        "hlo_bytes_per_dev": dev_bytes,
+        "collective_bytes_per_dev": coll["total"],
+        "collective_breakdown": {k: coll[k] for k in COLLECTIVES},
+        "collective_counts": coll["counts"],
+        "model_flops": model_flops,
+        "model_flops_ratio": (model_flops / hlo_flops_global
+                              if hlo_flops_global else 0.0),
+        "bound_time_s": max(terms.values()),
+        "roofline_fraction": (
+            # fraction of the bound step time spent at the compute roof
+            t_compute / max(max(terms.values()), 1e-30)),
+        # model-FLOPs utilisation: useful-work time / bound step time —
+        # the headline §Perf score (insensitive to recompute waste)
+        "mfu": (model_flops / (n_chips * PEAK_FLOPS))
+        / max(max(terms.values()), 1e-30),
+    }
+
+
+def model_flops_for(cfg, shape_info) -> float:
+    """6·N·D (train) / 2·N·D (inference), N = active params, D = tokens."""
+    B, S = shape_info["batch"], shape_info["seq"]
+    mode = shape_info["mode"]
+    n_active = cfg.active_param_count()
+    if mode == "train":
+        return 6.0 * n_active * B * S
+    if mode == "prefill":
+        return 2.0 * n_active * B * S
+    return 2.0 * n_active * B * 1  # decode: one token per sequence

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation — the dry-run lowers against these. Modality frontends
+are stubs per the assignment: ``vis_embed`` / ``frames`` are precomputed
+embedding tensors."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES
+from ..models import lm
+from ..models.config import ModelConfig
+from ..runtime.optimizer import OptConfig, init_opt
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ModelConfig, shape_name: str) -> dict:
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    mode = info["mode"]
+    if mode == "decode":
+        batch = {"tokens": sds((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if mode == "train":
+            batch["labels"] = sds((B, S), jnp.int32)
+    if cfg.kind == "vlm" and mode != "decode":
+        batch["vis_embed"] = sds((B, cfg.n_vis_tokens, cfg.d_model),
+                                 jnp.float32)
+    if cfg.kind == "encdec" and mode != "decode":
+        batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def param_specs_for(cfg: ModelConfig, dtype=None):
+    shapes = jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), shapes)
+    return shapes
+
+
+def opt_specs_for(cfg: ModelConfig, opt_cfg: OptConfig):
+    p = param_specs_for(cfg)
+    return jax.eval_shape(lambda q: init_opt(q, opt_cfg), p)
+
+
+def cache_specs_for(cfg: ModelConfig, shape_name: str):
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    return jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+
+
+def decode_extra_specs(cfg: ModelConfig, shape_name: str):
+    info = SHAPES[shape_name]
+    return {"tokens": sds((info["batch"], 1), jnp.int32),
+            "pos": sds((), jnp.int32)}

@@ -1,0 +1,445 @@
+"""Unified language-model assembly for all assigned architectures.
+
+One ``init_params``/``loss_fn``/``decode_step`` triple covers:
+  dense   — pre-norm GQA transformer (llama3/qwen3/deepseek/command-r)
+  moe     — dense attention + top-k expert MLP (mixtral w/ SWA, grok-1)
+  ssm     — Mamba2 SSD stack (attention-free)
+  hybrid  — Mamba2 backbone + one *shared* attention block every k layers
+            (zamba2; the shared block's params are reused, as in the paper)
+  vlm     — dense backbone consuming stub patch embeddings + tokens
+  encdec  — whisper backbone: bidirectional encoder over stub frame
+            embeddings + causal decoder with cross-attention
+
+Layers are scanned (stacked params) so compile time is O(1) in depth;
+``cfg.remat`` selects the activation-checkpoint policy.  The CE loss is
+computed in sequence chunks so the (T, vocab) logits are never materialised.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    """One layer's params. kind: dense|moe|ssm|enc|dec."""
+    ks = jax.random.split(key, 8)
+    p = {}
+    if kind in ("dense", "moe", "enc", "dec"):
+        p["ln1"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["attn"] = L.init_attention(ks[0], cfg)
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if kind == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        if kind == "dec" and cfg.n_enc_layers:
+            p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["xattn"] = L.init_attention(ks[2], cfg)
+    elif kind == "ssm":
+        p["ln1"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ssm"] = S.init_mamba2(ks[0], cfg)
+    return p
+
+
+def _stack_init(key, cfg, kind, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, kind))(keys)
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    p = {"embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02,
+         "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(ks[1], cfg.d_model, cfg.vocab)
+    if cfg.kind in ("dense", "vlm"):
+        p["layers"] = _stack_init(ks[2], cfg, "dense", cfg.n_layers)
+    elif cfg.kind == "moe":
+        p["layers"] = _stack_init(ks[2], cfg, "moe", cfg.n_layers)
+    elif cfg.kind == "ssm":
+        p["layers"] = _stack_init(ks[2], cfg, "ssm", cfg.n_layers)
+    elif cfg.kind == "hybrid":
+        p["layers"] = _stack_init(ks[2], cfg, "ssm", cfg.n_layers)
+        p["shared_attn"] = _init_block(ks[3], cfg, "dense")  # reused block
+    elif cfg.kind == "encdec":
+        p["enc_layers"] = _stack_init(ks[2], cfg, "enc", cfg.n_enc_layers)
+        p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["layers"] = _stack_init(ks[3], cfg, "dec", cfg.n_layers)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------------- #
+
+def constrain_act(x, cfg: ModelConfig):
+    """Pin activation batch sharding to the DP axes (no-op when unset).
+
+    With cfg.seq_shard (Megatron sequence parallelism) the sequence dim is
+    additionally sharded over the TP axis at block boundaries."""
+    if not cfg.dp_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(cfg.dp_axes) if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    seq = (cfg.tp_axis if cfg.seq_shard and cfg.tp_size
+           and x.ndim >= 3 and x.shape[1] % cfg.tp_size == 0 else None)
+    spec = P(axes, seq, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def _dense_block(lp, x, cfg, positions, *, causal=True, window=None,
+                 cross_kv=None, is_moe=False):
+    x = constrain_act(x, cfg)
+    h, _ = L.apply_attention(lp["attn"], L.rms_norm(x, lp["ln1"],
+                                                    cfg.norm_eps,
+                                                    cfg.norm_f32),
+                             cfg, positions=positions, causal=causal,
+                             window=window)
+    x = x + h
+    if cross_kv is not None:
+        h, _ = L.apply_attention(lp["xattn"],
+                                 L.rms_norm(x, lp["ln_x"], cfg.norm_eps, cfg.norm_f32),
+                                 cfg, positions=positions, causal=False,
+                                 cross_kv=cross_kv)
+        x = x + h
+    xn = L.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_f32)
+    if is_moe:
+        h, aux = L.apply_moe(lp["moe"], xn, cfg)
+    else:
+        h, aux = L.apply_mlp(lp["mlp"], xn, cfg), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def _ssm_block(lp, x, cfg):
+    x = constrain_act(x, cfg)
+    h, _ = S.apply_mamba2(lp["ssm"],
+                          L.rms_norm(x, lp["ln1"], cfg.norm_eps,
+                                     cfg.norm_f32), cfg)
+    return x + h
+
+
+# --------------------------------------------------------------------------- #
+# forward (training / prefill)
+# --------------------------------------------------------------------------- #
+
+def _scan_or_unroll(cfg: ModelConfig, body, carry, stacked, n: int):
+    """lax.scan over stacked layer params, or a Python unroll when
+    cfg.scan_layers is False (used by the dry-run cost probes: XLA's
+    cost_analysis counts a while-loop body once, so exact per-layer costs
+    need unrolled HLO)."""
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(body, carry, stacked)
+        return carry
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        carry, _ = body(carry, lp)
+    return carry
+
+
+def forward_hidden(params, embeds, positions, cfg: ModelConfig,
+                   enc_out=None):
+    """embeds: (B,T,d) -> final hidden (B,T,d). Scan over layers."""
+    x = embeds
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.kind in ("dense", "vlm", "moe"):
+        is_moe = cfg.kind == "moe"
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _dense_block(lp, x, cfg, positions, causal=True,
+                                window=cfg.window, is_moe=is_moe)
+            return (x, aux + a), None
+        body = _remat(cfg, body)
+        (x, aux_total) = _scan_or_unroll(cfg, body, (x, aux_total),
+                                         params["layers"], cfg.n_layers)
+    elif cfg.kind == "ssm":
+        def body(x, lp):
+            return _ssm_block(lp, x, cfg), None
+        body = _remat(cfg, body)
+        x = _scan_or_unroll(cfg, body, x, params["layers"], cfg.n_layers)
+    elif cfg.kind == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+
+        def body(x, lp):
+            return _ssm_block(lp, x, cfg), None
+        body = _remat(cfg, body)
+        shared = params["shared_attn"]
+        for g in range(n_groups):
+            grp = jax.tree.map(lambda a: a[g * every:(g + 1) * every],
+                               params["layers"])
+            x = _scan_or_unroll(cfg, body, x, grp, every)
+            x, _ = _dense_block(shared, x, cfg, positions, causal=True)
+    elif cfg.kind == "encdec":
+        def body(carry, lp):
+            x, aux = carry
+            kv = _cross_kv(lp, enc_out, cfg)
+            x, a = _dense_block(lp, x, cfg, positions, causal=True,
+                                cross_kv=kv)
+            return (x, aux + a), None
+        body = _remat(cfg, body)
+        (x, aux_total) = _scan_or_unroll(cfg, body, (x, aux_total),
+                                         params["layers"], cfg.n_layers)
+    else:
+        raise ValueError(cfg.kind)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    return x, aux_total
+
+
+def _cross_kv(lp, enc_out, cfg):
+    dt = L.dtype_of(cfg)
+    B, Ts, d = enc_out.shape
+    k = (enc_out.astype(dt) @ lp["xattn"]["wk"].astype(dt)).reshape(
+        B, Ts, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out.astype(dt) @ lp["xattn"]["wv"].astype(dt)).reshape(
+        B, Ts, cfg.n_kv_heads, cfg.hd)
+    return (k, v)
+
+
+def encode(params, frame_embeds, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings (B, enc_seq, d)."""
+    B, T, d = frame_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = frame_embeds
+
+    def body(x, lp):
+        x, _ = _dense_block(lp, x, cfg, positions, causal=False)
+        return x, None
+    body = _remat(cfg, body)
+    x = _scan_or_unroll(cfg, body, x, params["enc_layers"],
+                        cfg.n_enc_layers)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps, cfg.norm_f32)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return params["embed"].astype(L.dtype_of(cfg))[tokens]
+
+
+def lm_head_weight(params, cfg: ModelConfig):
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+
+
+# --------------------------------------------------------------------------- #
+# loss (chunked cross-entropy; never materialises (T, vocab))
+# --------------------------------------------------------------------------- #
+
+def chunked_ce(hidden, w, labels, chunk=128):
+    """hidden (B,T,d), w (d,V), labels int32 (B,T) with -1 = ignore."""
+    B, T, d = hidden.shape
+    c = min(chunk, T)
+    nc = T // c
+    h = hidden.reshape(B, nc, c, d).transpose(1, 0, 2, 3)
+    y = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        hc, yc = inp
+        logits = (hc @ w.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        yl = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - yl) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h, y))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, aux_weight=0.01):
+    """batch: dict(tokens, labels[, vis_embed | frames])."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, T = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    enc_out = None
+    if cfg.kind == "vlm":
+        vis = batch["vis_embed"].astype(x.dtype)       # (B, n_vis, d)
+        x = jnp.concatenate([vis, x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full((B, vis.shape[1]), -1, labels.dtype), labels], axis=1)
+    if cfg.kind == "encdec":
+        enc_out = encode(params, batch["frames"].astype(x.dtype), cfg)
+    Tt = x.shape[1]
+    x = constrain_act(x, cfg)
+    positions = jnp.broadcast_to(
+        jnp.arange(Tt, dtype=jnp.int32)[None], (B, Tt))
+    hidden, aux = forward_hidden(params, x, positions, cfg, enc_out=enc_out)
+    hidden = constrain_act(hidden, cfg)
+    loss = chunked_ce(hidden, lm_head_weight(params, cfg), labels)
+    return loss + aux_weight * aux
+
+
+# --------------------------------------------------------------------------- #
+# serving: caches + decode step
+# --------------------------------------------------------------------------- #
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Stacked per-layer cache pytree for decode."""
+    S_len = min(max_seq, cfg.window) if cfg.window else max_seq
+
+    def kv():
+        return {
+            "k": jnp.zeros((batch, S_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, S_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    if cfg.kind in ("dense", "vlm", "moe"):
+        return {"layers": jax.tree.map(
+            lambda x: jnp.stack([x] * cfg.n_layers), kv())}
+    if cfg.kind == "ssm":
+        c = S.init_ssm_cache(cfg, batch)
+        return {"layers": jax.tree.map(
+            lambda x: jnp.stack([x] * cfg.n_layers), c)}
+    if cfg.kind == "hybrid":
+        c = S.init_ssm_cache(cfg, batch)
+        return {
+            "layers": jax.tree.map(
+                lambda x: jnp.stack([x] * cfg.n_layers), c),
+            "shared": jax.tree.map(
+                lambda x: jnp.stack([x] * (cfg.n_layers
+                                           // cfg.hybrid_attn_every)), kv()),
+        }
+    if cfg.kind == "encdec":
+        return {"layers": jax.tree.map(
+            lambda x: jnp.stack([x] * cfg.n_layers), kv()),
+            "enc_out": jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype)}
+    raise ValueError(cfg.kind)
+
+
+def _scan_or_unroll_cache(cfg: ModelConfig, body, x, stacked, caches,
+                          n: int):
+    """scan carrying x with (params, cache) xs and stacked cache ys; or
+    unrolled equivalent (dry-run probes)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, (stacked, caches))
+    new_caches = []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], stacked)
+        lc = jax.tree.map(lambda a: a[i], caches)
+        x, nc = body(x, (lp, lc))
+        new_caches.append(nc)
+    stacked_nc = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_caches)
+    return x, stacked_nc
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 (position).
+
+    Returns (logits (B, vocab), new_cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    if cfg.kind in ("dense", "vlm", "moe", "encdec"):
+        is_moe = cfg.kind == "moe"
+        enc_out = cache.get("enc_out") if cfg.kind == "encdec" else None
+
+        def body(x, inp):
+            lp, lc = inp
+            xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_f32)
+            h, nc = L.apply_attention(lp["attn"], xn, cfg,
+                                      positions=positions, cache=lc,
+                                      causal=True, window=cfg.window)
+            x = x + h
+            if enc_out is not None:
+                kv = _cross_kv(lp, enc_out, cfg)
+                h, _ = L.apply_attention(
+                    lp["xattn"], L.rms_norm(x, lp["ln_x"], cfg.norm_eps, cfg.norm_f32),
+                    cfg, positions=positions, causal=False, cross_kv=kv)
+                x = x + h
+            xn = L.rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_f32)
+            if is_moe:
+                h, _ = L.apply_moe_dense(lp["moe"], xn, cfg)
+            else:
+                h = L.apply_mlp(lp["mlp"], xn, cfg)
+            return x + h, nc
+
+        x, new_layer_cache = _scan_or_unroll_cache(
+            cfg, body, x, params["layers"], cache["layers"], cfg.n_layers)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_cache
+    elif cfg.kind == "ssm":
+        def body(x, inp):
+            lp, lc = inp
+            xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_f32)
+            h, nc = S.apply_mamba2(lp["ssm"], xn, cfg, cache=lc)
+            return x + h, nc
+        x, new_layer_cache = _scan_or_unroll_cache(
+            cfg, body, x, params["layers"], cache["layers"], cfg.n_layers)
+        new_cache = {"layers": new_layer_cache}
+    elif cfg.kind == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+
+        def body(x, inp):
+            lp, lc = inp
+            xn = L.rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_f32)
+            h, nc = S.apply_mamba2(lp["ssm"], xn, cfg, cache=lc)
+            return x + h, nc
+
+        new_layer_cache = []
+        new_shared_cache = []
+        shared = params["shared_attn"]
+        for g in range(n_groups):
+            grp = jax.tree.map(lambda a: a[g * every:(g + 1) * every],
+                               params["layers"])
+            grp_cache = jax.tree.map(lambda a: a[g * every:(g + 1) * every],
+                                     cache["layers"])
+            x, nc = _scan_or_unroll_cache(cfg, body, x, grp, grp_cache,
+                                          every)
+            new_layer_cache.append(nc)
+            sc = jax.tree.map(lambda a: a[g], cache["shared"])
+            xn = L.rms_norm(x, shared["ln1"], cfg.norm_eps, cfg.norm_f32)
+            h, sc_new = L.apply_attention(shared["attn"], xn, cfg,
+                                          positions=positions, cache=sc,
+                                          causal=True)
+            x = x + h
+            h = L.apply_mlp(shared["mlp"],
+                            L.rms_norm(x, shared["ln2"], cfg.norm_eps,
+                                       cfg.norm_f32), cfg)
+            x = x + h
+            new_shared_cache.append(sc_new)
+        new_cache = {
+            "layers": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *new_layer_cache),
+            "shared": jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0), *new_shared_cache),
+        }
+    else:
+        raise ValueError(cfg.kind)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_f32)
+    logits = (x[:, 0] @ lm_head_weight(params, cfg).astype(x.dtype))
+    return logits.astype(jnp.float32), new_cache

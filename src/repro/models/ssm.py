@@ -1,0 +1,189 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024): within a chunk the recurrence is
+computed as masked matmuls (MXU-friendly); across chunks a scan carries the
+(H, N, P) state.  Decode is the O(1) recurrent update — the reason the
+``long_500k`` shape is feasible for SSM/hybrid archs.
+
+Shapes: x (B,T,H,P) heads x head_dim; B̂,Ĉ (B,T,N) (single group);
+A (H,) negative reals; dt (B,T,H) positive.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm, init_linear
+
+
+def init_mamba2(key, cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    assert H * P == d_in, (H, P, d_in)
+    ks = jax.random.split(key, 8)
+    return {
+        # separate in-projections (z, x, B, C, dt) so each output dim is
+        # independently TP-shardable (a fused concat has a ragged width)
+        "w_z": init_linear(ks[0], d, d_in),
+        "w_x": init_linear(ks[1], d, d_in),
+        "w_B": init_linear(ks[2], d, N),
+        "w_C": init_linear(ks[3], d, N),
+        "w_dt": init_linear(ks[4], d, H),
+        "w_out": init_linear(ks[5], d_in, d),
+        "conv_x": jax.random.normal(ks[6], (cfg.ssm_conv, d_in),
+                                    jnp.float32) * 0.2,
+        "conv_B": jax.random.normal(ks[7], (cfg.ssm_conv, N),
+                                    jnp.float32) * 0.2,
+        "conv_C": jax.random.normal(ks[7], (cfg.ssm_conv, N),
+                                    jnp.float32) * 0.2,
+        "conv_bx": jnp.zeros((d_in,), jnp.float32),
+        "conv_bB": jnp.zeros((N,), jnp.float32),
+        "conv_bC": jnp.zeros((N,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B,T,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_in(p, cfg, u):
+    from .layers import fsdp_gather
+    dt_c = u.dtype
+    z = u @ fsdp_gather(p["w_z"], cfg, -1).astype(dt_c)
+    x = u @ fsdp_gather(p["w_x"], cfg, -1).astype(dt_c)
+    B_ = u @ fsdp_gather(p["w_B"], cfg, -1).astype(dt_c)
+    C_ = u @ fsdp_gather(p["w_C"], cfg, -1).astype(dt_c)
+    dt = u @ fsdp_gather(p["w_dt"], cfg, -1).astype(dt_c)
+    return z, x, B_, C_, dt
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk):
+    """Chunked SSD scan. Returns (y, final_state).
+
+    x (B,T,H,P), dt (B,T,H), A (H,), B_/C_ (B,T,N)."""
+    Bb, T, H, P = x.shape
+    N = B_.shape[-1]
+    L = min(chunk, T)
+    nc = T // L
+    assert nc * L == T, (T, L)
+    f32 = jnp.float32
+    xc = x.reshape(Bb, nc, L, H, P).transpose(1, 0, 2, 3, 4).astype(f32)
+    dtc = dt.reshape(Bb, nc, L, H).transpose(1, 0, 2, 3).astype(f32)
+    Bc = B_.reshape(Bb, nc, L, N).transpose(1, 0, 2, 3).astype(f32)
+    Cc = C_.reshape(Bb, nc, L, N).transpose(1, 0, 2, 3).astype(f32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(state, inp):
+        xk, dtk, Bk, Ck = inp           # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        lam = dtk * A                   # (B,L,H) log-decay per step (A<0)
+        cs = jnp.cumsum(lam, axis=1)    # (B,L,H)
+        dtx = dtk[..., None] * xk       # (B,L,H,P)
+        # intra-chunk: masked attention-like matmuls.  The mask must be
+        # applied INSIDE the exp: upper-triangle (future) entries have
+        # positive log-decay that overflows, and inf*0 NaNs the backward.
+        CB = jnp.einsum("bln,bmn->blm", Ck, Bk)              # (B,L,L)
+        diff = cs[:, :, None, :] - cs[:, None, :, :]         # (B,L,L,H)
+        diff = jnp.where(tri[None, :, :, None], diff, -jnp.inf)
+        decay = jnp.exp(diff)
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", CB, decay, dtx)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bln,bhnp->blhp", Ck, state) \
+            * jnp.exp(cs)[..., None]
+        # state update
+        cs_last = cs[:, -1, :]                                # (B,H)
+        w = jnp.exp(cs_last[:, None, :] - cs)                 # (B,L,H)
+        state_new = jnp.exp(cs_last)[:, :, None, None] * state \
+            + jnp.einsum("bln,blh,blhp->bhnp", Bk, w, dtx)
+        return state_new, y_intra + y_inter
+
+    s0 = jnp.zeros((Bb, H, N, P), f32)
+    final, yc = jax.lax.scan(step, s0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, T, H, P)
+    return y, final
+
+
+def apply_mamba2(p, u, cfg: ModelConfig, cache=None):
+    """Full Mamba2 block. u: (B,T,d). cache: dict(state, conv, pos) or None.
+
+    Returns (out (B,T,d), new_cache)."""
+    dt_c = u.dtype
+    B, T, d = u.shape
+    d_in = cfg.ssm_expand * d
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z, x, B_, C_, dt = _split_in(p, cfg, u.astype(jnp.bfloat16))
+
+    new_cache = None
+    if cache is None:
+        x = jax.nn.silu(_causal_conv(x.astype(jnp.float32),
+                                     p["conv_x"], p["conv_bx"]))
+        B_ = jax.nn.silu(_causal_conv(B_.astype(jnp.float32),
+                                      p["conv_B"], p["conv_bB"]))
+        C_ = jax.nn.silu(_causal_conv(C_.astype(jnp.float32),
+                                      p["conv_C"], p["conv_bC"]))
+    else:
+        # decode: roll the per-stream conv windows
+        def roll(val, win, w, b):
+            win = jnp.concatenate([win, val.astype(jnp.float32)], axis=1)
+            out = jnp.einsum("bkc,kc->bc", win, w) + b
+            return jax.nn.silu(out)[:, None, :], win[:, 1:, :]
+        x, new_cx = roll(x, cache["conv_x"], p["conv_x"], p["conv_bx"])
+        B_, new_cB = roll(B_, cache["conv_B"], p["conv_B"], p["conv_bB"])
+        C_, new_cC = roll(C_, cache["conv_C"], p["conv_C"], p["conv_bC"])
+
+    x = x.reshape(B, T, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None:
+        y, final = ssd_chunked(x, dt, A, B_, C_, cfg.ssm_chunk)
+        new_cache = None
+    else:
+        # recurrent step: S = exp(dt*A) S + dt * B ⊗ x ; y = C·S
+        state = cache["state"]                     # (B,H,N,P)
+        dt1 = dt[:, 0]                             # (B,H)
+        a = jnp.exp(dt1 * A)                       # (B,H)
+        dtx = dt1[..., None] * x[:, 0].astype(jnp.float32)   # (B,H,P)
+        state = a[:, :, None, None] * state \
+            + jnp.einsum("bn,bhp->bhnp", B_[:, 0].astype(jnp.float32), dtx)
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, 0].astype(jnp.float32), state)
+        y = y[:, None]                             # (B,1,H,P)
+        new_cache = {"state": state, "conv_x": new_cx, "conv_B": new_cB,
+                     "conv_C": new_cC, "pos": cache["pos"] + T}
+        final = state
+
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, T, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    from .layers import fsdp_gather
+    out = (y.astype(jnp.bfloat16)
+           @ fsdp_gather(p["w_out"], cfg, 0).astype(jnp.bfloat16))
+    return out.astype(dt_c), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, d_model=None,
+                   dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv_x": jnp.zeros((batch, K - 1, d_in), jnp.float32),
+        "conv_B": jnp.zeros((batch, K - 1, N), jnp.float32),
+        "conv_C": jnp.zeros((batch, K - 1, N), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }

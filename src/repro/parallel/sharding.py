@@ -1,0 +1,167 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpec pytrees.
+
+Logical layout (production mesh, DESIGN.md §5):
+  * batch                 -> ("pod", "data")   [DP across pods + within pod]
+  * TP (d_ff, heads, vocab) -> "model"
+  * FSDP (params + optimizer state)  -> "data" on the non-TP weight dim
+  * KV-cache sequence      -> "model" (sequence-sharded serving)
+
+Every rule degrades to replication when the dim is not divisible by the
+axis size — so batch=1 long-context decode, 8-expert MoE on a 16-way axis,
+etc. all lower cleanly on the fixed production mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data")   # batch axes (pod may be absent on 1-pod meshes)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= _axis_size(mesh, a)
+        return n
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _maybe(mesh: Mesh, axis, dim: int) -> Optional[str]:
+    """axis if it exists and divides dim, else None (replicate)."""
+    if isinstance(axis, tuple):
+        axis = tuple(a for a in axis if _axis_size(mesh, a) > 1)
+        if not axis:
+            return None
+        if len(axis) == 1:
+            axis = axis[0]
+    size = _axis_size(mesh, axis)
+    if size > 1 and dim % size == 0:
+        return axis
+    return None
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def _rule_for_param(mesh: Mesh, path: str, shape, fsdp: bool,
+                    fsdp_axes=("data",), tp: bool = True) -> P:
+    """One leaf -> PartitionSpec. `path` is a '/'-joined key string."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    M = "model" if tp else None
+    D = (tuple(fsdp_axes) if len(fsdp_axes) > 1 else fsdp_axes[0]) \
+        if fsdp else None
+
+    def spec(*axes):
+        # pad leading None for stacked-layer (or expert) leading dims,
+        # then validate divisibility per dim (replicate when it fails)
+        full = (None,) * (nd - len(axes)) + tuple(axes)
+        out = [None if ax is None else _maybe(mesh, ax, shape[i])
+               for i, ax in enumerate(full)]
+        return P(*out)
+
+    if name in ("embed",):
+        return spec(M, D)
+    if name in ("lm_head",):
+        return spec(D, M)
+    # attention / mlp projections (2 trailing dims)
+    if name in ("wq", "wk", "wv"):
+        return spec(D, M)
+    if name == "wo":
+        return spec(M, D)
+    if name in ("wg", "wu"):            # mlp (…,d,ff) OR moe (…,E,d,ff)
+        return spec(D, M)
+    if name == "wd":                    # mlp (…,ff,d) OR moe (…,E,ff,d)
+        return spec(M, D)
+    if name == "router":
+        return spec(D, None)
+    # ssm
+    if name in ("w_z", "w_x"):
+        return spec(D, M)
+    if name in ("w_B", "w_C"):
+        return spec(D, None)
+    if name == "w_dt":
+        return spec(D, M)
+    if name == "w_out":
+        return spec(M, D)
+    if name in ("conv_x",):
+        return spec(None, M)
+    if name in ("norm_w", "conv_bx"):
+        return spec(M)
+    if name in ("A_log", "D", "dt_bias"):
+        return spec(M)
+    # everything else (norms, small biases): replicated
+    return P(*([None] * nd))
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def param_specs(param_shapes, mesh: Mesh, fsdp: bool = True,
+                fsdp_axes=("data",), tp: bool = True):
+    """param_shapes: pytree of ShapeDtypeStruct/arrays -> pytree of P."""
+    paths, leaves, treedef = _tree_paths(param_shapes)
+    specs = [_rule_for_param(mesh, p, l.shape, fsdp, fsdp_axes, tp)
+             for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_shapes, mesh: Mesh, axes=None):
+    dp = tuple(axes) if axes else batch_axes(mesh)
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        b = _maybe(mesh, dp, leaf.shape[0])
+        return P(b, *([None] * (nd - 1)))
+    paths, leaves, treedef = _tree_paths(batch_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in zip(paths, leaves)])
+
+
+def cache_specs(cache_shapes, mesh: Mesh):
+    """KV/SSM cache: batch -> DP axes, sequence/heads -> model."""
+    dp = batch_axes(mesh)
+
+    def rule(path, leaf):
+        name = path.split("/")[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("k", "v"):
+            # (L, B, S, K, hd): batch->dp, seq->model
+            b = _maybe(mesh, dp, shape[1])
+            s = _maybe(mesh, "model", shape[2])
+            return P(None, b, s, None, None)
+        if name == "state":
+            # (L, B, H, N, P): batch->dp, heads->model
+            b = _maybe(mesh, dp, shape[1])
+            h = _maybe(mesh, "model", shape[2])
+            return P(None, b, h, None, None)
+        if name.startswith("conv"):
+            b = _maybe(mesh, dp, shape[1])
+            c = _maybe(mesh, "model", shape[-1])
+            return P(None, b, None, c)
+        if name == "enc_out":
+            b = _maybe(mesh, dp, shape[0])
+            return P(b, None, None)
+        return P(*([None] * nd))
+    paths, leaves, treedef = _tree_paths(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in zip(paths, leaves)])
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

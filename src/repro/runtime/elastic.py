@@ -1,0 +1,104 @@
+"""Fault tolerance + elasticity + straggler mitigation for 1000+-node runs.
+
+Three layers of defence (DESIGN.md §7):
+
+1. **Transport (STrack itself)** — link-level stragglers/failures are routed
+   around by adaptive spray within an RTT; no training-loop involvement
+   (benchmarks/oversub_linkdown.py quantifies this).
+
+2. **Step-level** — `TrainSupervisor` below: checkpoint every N steps
+   (atomic, sharded), detect failures (in production: missed heartbeats /
+   jax.distributed errors; here: injected exceptions), restart from the
+   last complete checkpoint with bit-exact data-pipeline state.
+
+3. **Cluster-level elasticity** — checkpoints are mesh-independent
+   (runtime/checkpoint.restore takes target shardings), so a restart may
+   resize e.g. 512 -> 256 chips. `scale_batch_rule` keeps the global batch
+   constant by adjusting grad-accumulation steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_dir: str = "checkpoints"
+    ckpt_every: int = 50
+    max_restarts: int = 10
+    step_deadline_s: Optional[float] = None   # straggler watchdog (prod)
+
+
+def scale_batch_rule(global_batch: int, micro_batches: int,
+                     old_chips: int, new_chips: int) -> int:
+    """Keep the global batch constant across a resize by scaling
+    grad-accumulation (micro-batch count)."""
+    scaled = micro_batches * old_chips / new_chips
+    return max(1, int(math.ceil(scaled)))
+
+
+class TrainSupervisor:
+    """Checkpoint/restart loop around a step function.
+
+    The driver calls ``run``; any exception from ``step_fn`` (a real node
+    failure surfaces as one under jax.distributed) triggers a restore of
+    the last complete checkpoint — including RNG/data state — and the run
+    continues bit-exactly (tests/test_elastic.py)."""
+
+    def __init__(self, cfg: SupervisorConfig, state, dataset,
+                 step_fn: Callable, shardings=None):
+        self.cfg = cfg
+        self.state = state          # (params, opt)
+        self.dataset = dataset
+        self.step_fn = step_fn
+        self.shardings = shardings
+        self.restarts = 0
+        self.metrics_log: list = []
+
+    def _save(self, step: int):
+        ckpt.save(self.cfg.ckpt_dir, step,
+                  {"params": self.state[0], "opt": self.state[1]},
+                  extra={"data": self.dataset.state_dict(), "step": step})
+
+    def _restore(self) -> int:
+        last = ckpt.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return 0
+        like = {"params": self.state[0], "opt": self.state[1]}
+        tree, extra = ckpt.restore(self.cfg.ckpt_dir, last, like,
+                                   shardings=self.shardings)
+        self.state = (tree["params"], tree["opt"])
+        self.dataset.load_state_dict(extra["data"])
+        return int(extra["step"])
+
+    def run(self, n_steps: int, fail_at: Optional[set] = None):
+        """fail_at: steps at which to inject a simulated node failure."""
+        step = 0
+        self._save(0)
+        while step < n_steps:
+            try:
+                if fail_at and step in fail_at:
+                    fail_at = fail_at - {step}
+                    raise RuntimeError(f"injected node failure @ {step}")
+                batch = self.dataset.batch_at(step)
+                params, opt, metrics = self.step_fn(self.state[0],
+                                                    self.state[1], batch)
+                self.state = (params, opt)
+                self.dataset.step = step + 1
+                self.metrics_log.append((step, float(metrics["loss"])))
+                step += 1
+                if step % self.cfg.ckpt_every == 0:
+                    self._save(step)
+            except RuntimeError:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                step = self._restore()
+        self._save(n_steps)
+        return self.state

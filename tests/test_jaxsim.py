@@ -1,0 +1,56 @@
+"""Jitted time-stepped simulator: the paper's incast claims (Figs 16-20)."""
+import numpy as np
+import pytest
+
+from repro.sim.jaxsim import IncastConfig, run_incast
+
+
+@pytest.fixture(scope="module")
+def incast8():
+    cfg = IncastConfig(n_flows=8, msg_bytes=4 * 2 ** 20)
+    return run_incast(cfg, n_ticks=25000)
+
+
+def test_all_flows_complete_under_drops(incast8):
+    final, m = incast8
+    done = np.asarray(m["done"])
+    assert done[-1] == 8
+    assert np.asarray(m["drops"])[-1] > 0   # lossy first RTT...
+
+
+def test_drops_confined_to_startup(incast8):
+    """Fig 16: STrack only drops in the first RTT(s)."""
+    final, m = incast8
+    drops = np.asarray(m["drops"])
+    assert drops[300] == drops[-1], "drops continued past startup"
+
+
+def test_queue_stabilises_at_target(incast8):
+    """Fig 20: steady-state queue ~= target queuing delay."""
+    final, m = incast8
+    q = np.asarray(m["queue_pkts"]).astype(float)
+    done = np.asarray(m["done"])
+    busy = np.nonzero(done < 8)[0]
+    steady = q[busy[len(busy) // 2]: busy[-1]]
+    target = m["target_qdelay_pkts"]
+    med = np.median(steady)
+    assert 0.5 * target < med < 2.0 * target, (med, target)
+
+
+def test_fairness(incast8):
+    """Fig 17: flows converge to fair shares (Jain index ~ 1)."""
+    final, m = incast8
+    d = np.asarray(m["delivered"])[-1]
+    jain = d.sum() ** 2 / (len(d) * np.sum(d * d))
+    assert jain > 0.98, jain
+
+
+def test_link_fully_utilised(incast8):
+    """Bottleneck should run at ~100% while flows are active."""
+    final, m = incast8
+    q = np.asarray(m["queue_pkts"])
+    done = np.asarray(m["done"])
+    busy = np.nonzero(done < 8)[0]
+    mid = busy[len(busy) // 4: 3 * len(busy) // 4]
+    # queue never empties mid-transfer = no starvation
+    assert (q[mid] == 0).mean() < 0.02

@@ -1,0 +1,139 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU, per assignment)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.ssd_scan import ssd_scan as ssd_raw
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,H,K,Tq,Tk,hd", [
+    (1, 4, 4, 128, 128, 64),       # MHA, single block
+    (2, 8, 2, 256, 256, 64),       # GQA 4:1, multi-block
+    (1, 4, 1, 128, 384, 128),      # MQA, rectangular
+    (2, 2, 2, 100, 100, 32),       # ragged (non-multiple of block)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, H, K, Tq, Tk, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, H, Tq, hd), dtype)
+    k = rand(ks[1], (B, K, Tk, hd), dtype)
+    v = rand(ks[2], (B, K, Tk, hd), dtype)
+    got = fa_raw(q, k, v, causal=True, block_q=128, block_k=128)
+    want = kref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (1, 2, 64, 64), jnp.float32)
+    k = rand(ks[1], (1, 2, 192, 64), jnp.float32)
+    v = rand(ks[2], (1, 2, 192, 64), jnp.float32)
+    got = fa_raw(q, k, v, causal=False, block_q=64, block_k=64)
+    want = kref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = rand(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = rand(ks[2], (1, 2, 256, 64), jnp.float32)
+    got = fa_raw(q, k, v, causal=True, window=96, block_q=64, block_k=64)
+    want = kref.flash_attention_ref(q, k, v, causal=True, window=96)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    """Decode: 1 query at absolute position q_offset against a long cache."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (2, 4, 1, 64), jnp.float32)
+    k = rand(ks[1], (2, 2, 512, 64), jnp.float32)
+    v = rand(ks[2], (2, 2, 512, 64), jnp.float32)
+    got = fa_raw(q, k, v, causal=True, q_offset=300, block_q=1, block_k=128)
+    want = kref.flash_attention_ref(q, k, v, causal=True, q_offset=300)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_ops_layout():
+    """ops.py wrapper uses model layout (B, T, H, hd)."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(ks[0], (2, 128, 4, 64), jnp.float32)
+    k = rand(ks[1], (2, 128, 2, 64), jnp.float32)
+    v = rand(ks[2], (2, 128, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = kref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# SSD scan
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (1, 128, 2, 32, 16, 32),
+    (2, 256, 4, 64, 64, 128),
+    (1, 64, 8, 16, 32, 64),     # chunk == T
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(B, T, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = rand(ks[0], (B, T, H, P), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (B, T, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B_ = rand(ks[3], (B, T, N), dtype) / np.sqrt(N)
+    C_ = rand(jax.random.PRNGKey(9), (B, T, N), dtype) / np.sqrt(N)
+    got = ssd_raw(x, dt, A, B_, C_, chunk=chunk)
+    want, _ = kref.ssd_ref(x, dt, A, B_, C_)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_matches_model_chunked_impl():
+    """The model's pure-jnp ssd_chunked and the Pallas kernel must agree."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    B, T, H, P, N = 2, 128, 4, 32, 32
+    x = rand(ks[0], (B, T, H, P), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (B, T, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B_ = rand(ks[3], (B, T, N), jnp.float32) / np.sqrt(N)
+    C_ = rand(jax.random.PRNGKey(9), (B, T, N), jnp.float32) / np.sqrt(N)
+    a = ssd_raw(x, dt, A, B_, C_, chunk=64)
+    b, _ = ssd_chunked(x, dt, A, B_, C_, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_vs_model_attention():
+    """Pallas flash attention vs the model's chunked JAX attention."""
+    from repro.models.layers import _sdpa_chunked
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    B, T, H, K, hd = 2, 256, 8, 2, 64
+    q = rand(ks[0], (B, T, H, hd), jnp.float32)
+    k = rand(ks[1], (B, T, K, hd), jnp.float32)
+    v = rand(ks[2], (B, T, K, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = _sdpa_chunked(q, k, v, pos, pos, True, None, 64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)

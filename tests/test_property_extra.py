@@ -1,0 +1,66 @@
+"""Extra property tests: kernel shape sweeps via hypothesis and transport
+invariants under randomized ACK orderings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NetworkSpec, make_strack_params
+from repro.core import ref
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+
+NET = NetworkSpec()
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    kv=st.sampled_from([1, 2, 4]),
+    grp=st.sampled_from([1, 2, 4]),
+    tq=st.sampled_from([32, 64, 100]),
+    tk=st.sampled_from([64, 128, 160]),
+    hd=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_random_shapes(b, kv, grp, tq, tk, hd, causal):
+    H = kv * grp
+    ks = jax.random.split(jax.random.PRNGKey(tq * tk + hd), 3)
+    q = jax.random.normal(ks[0], (b, H, tq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kv, tk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kv, tk, hd), jnp.float32)
+    got = fa_raw(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = kref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.floats(0.0, 60.0)),
+                min_size=1, max_size=200))
+def test_cwnd_always_within_bounds(acks):
+    """CC invariant: cwnd stays in [min_cwnd, max_cwnd] for ANY ack trace."""
+    p = make_strack_params(NET)
+    cc = ref.CCState(p)
+    now = 0.0
+    for ecn, delay in acks:
+        now += 0.7
+        cc.update_achieved_bdp(4096.0, False, now)
+        cc.adjust_cwnd(ecn, delay, cc.achieved_bdp_pkts, now)
+        assert p.min_cwnd_pkts <= cc.cwnd <= p.max_cwnd_pkts
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 15)),
+                min_size=1, max_size=100))
+def test_spray_never_returns_marked_path(updates):
+    """LB invariant: a freshly ECN-marked entropy is not chosen next unless
+    everything is marked (in which case one bit is cleared first)."""
+    p = make_strack_params(NET, max_paths=16)
+    s = ref.SprayState(p)
+    for ecn, path in updates:
+        s.update_ecn_bitmap(ecn, path)
+    before = list(s.bitmap)
+    got = s.choose_path(8.0, now=0.0)
+    if not all(before[:16]):
+        assert s.bitmap[got] == 0

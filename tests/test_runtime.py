@@ -1,0 +1,231 @@
+"""Runtime substrate tests: optimizer, data pipeline, checkpoint/restart
+(fault tolerance), gradient compression, serving."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.data import DataConfig, SyntheticDataset
+from repro.runtime.optimizer import (OptConfig, apply_updates, init_opt,
+                                     quantize_int8, compress_grads,
+                                     global_norm)
+from repro.runtime.train import make_train_step
+
+CFG = get_config("llama3-8b", smoke=True)
+OPT = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def small_state(seed=0):
+    params = lm.init_params(jax.random.PRNGKey(seed), CFG)
+    return params, init_opt(params, OPT)
+
+
+def data(seed=0):
+    return SyntheticDataset(DataConfig(vocab=CFG.vocab, seq=32,
+                                       global_batch=4, seed=seed))
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+
+def test_train_loss_decreases():
+    params, opt = small_state()
+    ds = data()
+    step = jax.jit(make_train_step(CFG, OPT))
+    batch = ds.batch_at(0)   # overfit one batch
+    losses = []
+    for _ in range(20):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::5]
+
+
+def test_grad_accum_matches_single_batch():
+    params, opt = small_state()
+    batch = data().batch_at(0)
+    s1 = jax.jit(make_train_step(CFG, OPT))
+    s4 = jax.jit(make_train_step(CFG, OPT, micro_batches=4))
+    p1, o1, m1 = s1(params, opt, batch)
+    p4, o4, m4 = s4(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-3)
+    # grads averaged over microbatches -> same update direction
+    d1 = jax.tree.leaves(p1)[0] - jax.tree.leaves(params)[0]
+    d4 = jax.tree.leaves(p4)[0] - jax.tree.leaves(params)[0]
+    cos = float(jnp.sum(d1 * d4) /
+                (jnp.linalg.norm(d1) * jnp.linalg.norm(d4) + 1e-12))
+    assert cos > 0.98
+
+
+def test_quantize_int8_roundtrip():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256, 16)) * 3.0
+    q, scale = quantize_int8(g)
+    err = jnp.abs(q.astype(jnp.float32) * scale - g)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_converges():
+    """Compressed updates with error feedback track the true sum."""
+    key = jax.random.PRNGKey(1)
+    total_true = jnp.zeros((64,))
+    total_comp = jnp.zeros((64,))
+    err = {"g": jnp.zeros((64,))}
+    for i in range(50):
+        key, k = jax.random.split(key)
+        g = jax.random.normal(k, (64,)) * (1 + i % 3)
+        deq, err = compress_grads({"g": g}, err)
+        total_true += g
+        total_comp += deq["g"]
+    # residual is bounded by one quantisation step, not growing
+    resid = float(jnp.abs(total_true - total_comp).max())
+    assert resid < 0.5
+
+
+def test_grad_compress_training_still_learns():
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50,
+                        grad_compress=True)
+    params = lm.init_params(jax.random.PRNGKey(0), CFG)
+    opt = init_opt(params, opt_cfg)
+    batch = data().batch_at(0)
+    step = jax.jit(make_train_step(CFG, opt_cfg))
+    losses = []
+    for _ in range(15):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+
+def test_data_deterministic_and_resumable():
+    ds1 = data()
+    b0 = next(ds1)
+    b1 = next(ds1)
+    state = ds1.state_dict()
+    b2 = next(ds1)
+    ds2 = data()
+    ds2.load_state_dict(state)
+    b2b = next(ds2)
+    np.testing.assert_array_equal(np.asarray(b2["tokens"]),
+                                  np.asarray(b2b["tokens"]))
+    assert not np.array_equal(np.asarray(b0["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_labels_are_next_tokens():
+    b = data().batch_at(7)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint / restart (fault tolerance)
+# --------------------------------------------------------------------------- #
+
+def test_checkpoint_roundtrip(tmp_path):
+    params, opt = small_state()
+    d = str(tmp_path)
+    ckpt.save(d, 3, {"params": params, "opt": opt},
+              extra={"data": {"step": 3, "seed": 0}})
+    assert ckpt.latest_step(d) == 3
+    restored, extra = ckpt.restore(d, 3, {"params": params, "opt": opt})
+    assert extra["data"]["step"] == 3
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_on_crash(tmp_path):
+    """A partially-written checkpoint must never shadow a complete one."""
+    params, opt = small_state()
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"params": params})
+    # simulate a crashed writer: stale tmp dir left behind
+    os.makedirs(os.path.join(d, "step_00000002.tmp"), exist_ok=True)
+    with open(os.path.join(d, "step_00000002.tmp", "junk.npy"), "w") as f:
+        f.write("partial")
+    assert ckpt.latest_step(d) == 1   # tmp is invisible
+    ckpt.save(d, 2, {"params": params})   # and overwriting it works
+    assert ckpt.latest_step(d) == 2
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """Kill-and-resume training reproduces the uninterrupted run exactly."""
+    d = str(tmp_path)
+    step_fn = jax.jit(make_train_step(CFG, OPT))
+
+    # uninterrupted: 6 steps
+    params, opt = small_state()
+    ds = data()
+    for _ in range(6):
+        params, opt, m = step_fn(params, opt, next(ds))
+    ref_leaf = np.asarray(jax.tree.leaves(params)[0])
+
+    # interrupted at step 3 + restore + 3 more
+    params, opt = small_state()
+    ds = data()
+    for _ in range(3):
+        params, opt, m = step_fn(params, opt, next(ds))
+    ckpt.save(d, 3, {"params": params, "opt": opt},
+              extra={"data": ds.state_dict()})
+    del params, opt, ds
+    like_p, like_o = small_state()
+    restored, extra = ckpt.restore(d, 3, {"params": like_p, "opt": like_o})
+    ds2 = data()
+    ds2.load_state_dict(extra["data"])
+    params, opt = restored["params"], restored["opt"]
+    for _ in range(3):
+        params, opt, m = step_fn(params, opt, next(ds2))
+    got_leaf = np.asarray(jax.tree.leaves(params)[0])
+    np.testing.assert_array_equal(ref_leaf, got_leaf)
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore a checkpoint onto a different mesh (elastic scaling)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.sharding import param_specs, to_shardings
+    params, _ = small_state()
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"params": params})
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    shardings = {"params": to_shardings(param_specs(params, mesh), mesh)}
+    restored, _ = ckpt.restore(d, 1, {"params": params}, shardings=shardings)
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# serving
+# --------------------------------------------------------------------------- #
+
+def test_greedy_generate_runs():
+    from repro.runtime.serve import greedy_generate
+    params, _ = small_state()
+    prompt = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    out = greedy_generate(params, CFG, prompt, max_new=5, cache_len=16)
+    assert out.shape == (1, 5)
+    assert np.all(np.asarray(out) >= 0)
+    assert np.all(np.asarray(out) < CFG.vocab)
+
+
+def test_prefill_matches_decode_last_logits():
+    from repro.runtime.serve import make_prefill_step
+    params, _ = small_state()
+    B, T = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, T), 0, CFG.vocab)
+    pre = make_prefill_step(CFG)(params, {"tokens": toks})
+    cache = lm.init_cache(CFG, B, T)
+    for t in range(T):
+        logits, cache = lm.decode_step(params, cache, toks[:, t:t + 1],
+                                       jnp.asarray(t, jnp.int32), CFG)
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(logits),
+                               rtol=0.15, atol=0.15)

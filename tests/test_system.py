@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the paper's system: the full
+event-driven fabric + STrack vs RoCEv2, and the collective layer."""
+import pytest
+
+from repro.collective.algorithms import multi_job
+from repro.core.params import NetworkSpec
+from repro.sim.events import NetSim
+from repro.sim.topology import full_bisection, with_link_failures
+from repro.sim.workloads import TraceRunner, run_incast, run_permutation
+
+
+NET = NetworkSpec(link_gbps=400.0)
+
+
+def test_permutation_strack_beats_roce():
+    msg = 2 * 2 ** 20
+    fct = {}
+    for tr in ("strack", "roce"):
+        sim = NetSim(full_bisection(4, 4), NET, transport=tr, seed=1)
+        fct[tr] = run_permutation(sim, msg, until=1e6)["max_fct"]
+    assert fct["strack"] < fct["roce"]
+
+
+def test_permutation_all_complete_with_link_failures():
+    topo = with_link_failures(full_bisection(4, 4), n_failed=4,
+                              n_tors_affected=2, seed=3)
+    sim = NetSim(topo, NET, transport="strack", seed=1)
+    res = run_permutation(sim, 512 * 2 ** 10, until=1e6)
+    assert res["unfinished"] == 0
+
+
+def test_incast_parity_lossy_vs_lossless():
+    """Fig 19: STrack (lossy) must stay within ~1.5x of lossless RoCE."""
+    fct = {}
+    for tr in ("strack", "roce"):
+        sim = NetSim(full_bisection(4, 4), NET, transport=tr, seed=0)
+        r = run_incast(sim, 8, 2 * 2 ** 20, until=4e6, seed=0)
+        assert r["unfinished"] == 0
+        fct[tr] = r["max_fct"]
+    assert fct["strack"] < 1.5 * fct["roce"], fct
+
+
+def test_strack_drops_recovered_roce_lossless():
+    sim = NetSim(full_bisection(4, 4), NET, transport="strack", seed=0)
+    r = run_incast(sim, 8, 2 * 2 ** 20, until=4e6, seed=0)
+    assert r["drops"] > 0 and r["unfinished"] == 0   # lossy but reliable
+    sim = NetSim(full_bisection(4, 4), NET, transport="roce", seed=0)
+    r = run_incast(sim, 8, 2 * 2 ** 20, until=4e6, seed=0)
+    assert r["drops"] == 0                            # PFC keeps it lossless
+
+
+@pytest.mark.parametrize("algo", ["ring", "dbt", "hd", "a2a"])
+def test_collectives_complete_both_transports(algo):
+    for tr in ("strack", "roce"):
+        sim = NetSim(full_bisection(4, 4), NET, transport=tr, seed=0)
+        kw = dict(window=4) if algo == "a2a" else {}
+        msgs, placement = multi_job(algo, 2, 8, 16, 512 * 2 ** 10, **kw)
+        res = TraceRunner(sim, msgs, placement).run(until=1e7)
+        assert res["finished_groups"] == res["total_groups"], (algo, tr)
+
+
+def test_ecn_signal_leads_rtt():
+    """Fig 4: the first ECN-marked ACK precedes any measurable RTT rise."""
+    sim = NetSim(full_bisection(4, 8), NET, transport="strack", seed=0)
+    sim.ack_log = []
+    run_incast(sim, 16, 1 * 2 ** 20, until=2e6, seed=0)
+    base = min(r for *_, r in sim.ack_log)
+    t_ecn = next(t for t, _, e, _ in sim.ack_log if e)
+    t_rtt = next((t for t, _, _, r in sim.ack_log if r > 1.5 * base),
+                 float("inf"))
+    assert t_ecn <= t_rtt
