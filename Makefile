@@ -1,0 +1,20 @@
+# Developer / CI entry points.  PYTHONPATH is prepended, not replaced.
+PY      := python
+PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: tier1 fabric-smoke smoke benchmarks
+
+# The tier-1 gate (same command as ROADMAP.md).
+tier1:
+	$(PP) $(PY) -m pytest -x -q
+
+# 2k-tick jitted fabric run: perf canary for the lax.scan hot path.
+fabric-smoke:
+	$(PP) $(PY) -m benchmarks.fabric_smoke 2000
+
+# What CI should run on every change.
+smoke: tier1 fabric-smoke
+
+# Full paper-figure benchmark sweep (slow).
+benchmarks:
+	$(PP) $(PY) -m benchmarks.run

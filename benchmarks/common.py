@@ -16,6 +16,28 @@ MSG_SIZES_FULL = MSG_SIZES_QUICK + [8 * 2**20]
 
 TRANSPORTS = ["strack", "strack-obl", "roce", "roce4"]
 
+# STrack spray variants that run on the jitted fabric fast path
+# (RoCEv2 baselines stay on the event oracle — PFC/go-back-N live there).
+FABRIC_LB = {"strack": "adaptive", "strack-obl": "oblivious",
+             "strack-fixed": "fixed"}
+
+
+def run_fabric_transport(transport: str, scenario, n_ticks=None) -> dict:
+    """Run one STrack spray variant on the jitted fabric backend."""
+    from repro.sim.workloads import run_on_fabric
+    return run_on_fabric(scenario, n_ticks=n_ticks,
+                         lb_mode=FABRIC_LB[transport])
+
+
+def run_events_transport(transport: str, scenario, until: float = 1e6,
+                         seed: int = 0, log_queues: bool = False):
+    """Run any TRANSPORTS variant on the event oracle; returns (result, sim)
+    so callers can read queue-delay logs off the sim."""
+    from repro.sim.workloads import run_scenario_on_sim
+    sim = make_sim(transport, scenario.topo, scenario.net, seed=seed,
+                   log_queues=log_queues)
+    return run_scenario_on_sim(sim, scenario, until=until), sim
+
 
 def make_sim(transport: str, topo: FatTree, net: NetworkSpec, **kw) -> NetSim:
     if transport == "strack":

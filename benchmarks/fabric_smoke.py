@@ -1,0 +1,40 @@
+"""2k-tick fabric smoke run — catches perf regressions on the jitted path.
+
+Runs a 16-host permutation on the 4x4 multi-queue fabric twice (cold =
+compile + run, warm = run only) and prints wall times and warm ticks/sec.
+``make smoke`` chains this after the tier-1 tests.
+
+    PYTHONPATH=src python -m benchmarks.fabric_smoke [n_ticks]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core.params import NetworkSpec
+from repro.sim.fabric import FabricConfig, run_fabric, summarize
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import permutation_scenario
+
+
+def main(n_ticks: int = 2000) -> None:
+    sc = permutation_scenario(full_bisection(4, 4), 64 * 2 ** 10,
+                              net=NetworkSpec())
+    cfg = FabricConfig(net=sc.net)
+    t0 = time.time()
+    _, m = run_fabric(sc.topo, sc.flows, n_ticks, cfg)
+    cold_s = time.time() - t0
+    t0 = time.time()
+    _, m = run_fabric(sc.topo, sc.flows, n_ticks, cfg)
+    warm_s = time.time() - t0
+    s = summarize(m)
+    assert s["unfinished"] == 0, s
+    assert s["drops"] == 0, s
+    print(f"fabric-smoke ok: {n_ticks} ticks x 16 flows on 4x4 fat-tree | "
+          f"cold {cold_s:.2f}s (jit+run), warm {warm_s:.2f}s "
+          f"({n_ticks / warm_s:,.0f} ticks/s) | "
+          f"max_fct {s['max_fct']:.1f}us")
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 2000)

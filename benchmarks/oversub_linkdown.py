@@ -3,61 +3,58 @@ link failures (asymmetric network).
 
 Validates: STrack's joint CC+LB keeps winning (up to 3x / 6x in the paper);
 adaptive spray beats oblivious especially with failed links (60% in paper).
+
+STrack spray variants (adaptive / oblivious / fixed-path pinning) run on
+the jitted multi-queue fabric; the RoCEv2 baseline runs on the event
+oracle.  The scenario objects are shared, so both backends see the same
+flows on the same (oversubscribed / dead-link) topology.
 """
 from __future__ import annotations
 
 from repro.core.params import NetworkSpec
-from repro.sim.topology import full_bisection, oversubscribed, \
-    with_link_failures
-from repro.sim.workloads import run_permutation
+from repro.sim.workloads import linkdown_scenario, oversub_scenario
 
-from .common import QUICK_TOPO, TRANSPORTS, make_sim, timed
+from .common import (FABRIC_LB, QUICK_TOPO, run_events_transport,
+                     run_fabric_transport, timed)
+
+
+def _run_matrix(sc, fig: str, workload: str, msg: float, seed: int,
+                until: float = 1e6):
+    rows = []
+    fcts = {}
+    for tr in list(FABRIC_LB) + ["roce"]:
+        if tr in FABRIC_LB:
+            res, wall = timed(run_fabric_transport, tr, sc)
+        else:
+            (res, _), wall = timed(run_events_transport, tr, sc,
+                                   until=until, seed=seed)
+        fcts[tr] = res["max_fct"]
+        rows.append({"fig": fig, "workload": workload, "msg": msg,
+                     "transport": tr,
+                     "backend": res.get("backend", "events"),
+                     "max_fct_us": res["max_fct"], "drops": res["drops"],
+                     "unfinished": res["unfinished"], "wall_s": wall})
+    rows[-1]["speedup_vs_roce"] = fcts["roce"] / fcts["strack"]
+    rows[-1]["adaptive_vs_oblivious"] = fcts["strack-obl"] / fcts["strack"]
+    rows[-1]["adaptive_vs_fixed"] = fcts["strack-fixed"] / fcts["strack"]
+    return rows
 
 
 def run_oversub(ratio: int = 4, msg: float = 512 * 2 ** 10,
                 topo_kw=None, seed: int = 0):
     # keep >=2 spines so multipath exists at high oversubscription
     topo_kw = topo_kw or dict(n_tor=4, hosts_per_tor=max(8, 2 * ratio))
-    rows = []
-    fcts = {}
-    for tr in TRANSPORTS:
-        net = NetworkSpec()
-        topo = oversubscribed(topo_kw["n_tor"], topo_kw["hosts_per_tor"],
-                              ratio)
-        sim = make_sim(tr, topo, net, seed=seed)
-        res, wall = timed(run_permutation, sim, msg, seed=seed, until=1e6)
-        fcts[tr] = res["max_fct"]
-        rows.append({"fig": "12-13", "workload": f"oversub_{ratio}:1",
-                     "msg": msg, "transport": tr,
-                     "max_fct_us": res["max_fct"], "drops": res["drops"],
-                     "unfinished": res["unfinished"], "wall_s": wall})
-    rows[-1]["speedup_vs_roce"] = fcts["roce"] / fcts["strack"]
-    return rows
+    sc = oversub_scenario(topo_kw["n_tor"], topo_kw["hosts_per_tor"], ratio,
+                          msg, net=NetworkSpec(), seed=seed)
+    return _run_matrix(sc, "12-13", f"oversub_{ratio}:1", msg, seed)
 
 
 def run_linkdown(frac_links_down: float = 0.125,
                  msg: float = 512 * 2 ** 10, topo_kw=None, seed: int = 0):
     topo_kw = topo_kw or QUICK_TOPO
-    base = full_bisection(**topo_kw)
-    n_links = base.n_tor * base.n_spine
-    n_down = max(1, int(frac_links_down * n_links))
-    rows = []
-    fcts = {}
-    for tr in TRANSPORTS:
-        net = NetworkSpec()
-        topo = with_link_failures(base, n_down,
-                                  n_tors_affected=max(1, base.n_tor // 2),
-                                  seed=seed)
-        sim = make_sim(tr, topo, net, seed=seed)
-        res, wall = timed(run_permutation, sim, msg, seed=seed, until=1e6)
-        fcts[tr] = res["max_fct"]
-        rows.append({"fig": "14-15", "workload": f"linkdown_{n_down}",
-                     "msg": msg, "transport": tr,
-                     "max_fct_us": res["max_fct"], "drops": res["drops"],
-                     "unfinished": res["unfinished"], "wall_s": wall})
-    rows[-1]["speedup_vs_roce"] = fcts["roce"] / fcts["strack"]
-    rows[-1]["adaptive_vs_oblivious"] = fcts["strack-obl"] / fcts["strack"]
-    return rows
+    sc = linkdown_scenario(topo_kw, frac_links_down, msg,
+                           net=NetworkSpec(), seed=seed)
+    return _run_matrix(sc, "14-15", sc.name, msg, seed)
 
 
 def main():

@@ -3,42 +3,56 @@
 Validates: STrack >> RoCEv2 (up to 6.3x in the paper at 8K nodes), adaptive
 spray > oblivious spray for large messages, and queue-delay settling
 (Fig. 8).  Reduced scale: 16-256 hosts vs the paper's 8192.
+
+STrack spray variants (adaptive / oblivious / fixed-path) run on the jitted
+multi-queue fabric (``repro.sim.fabric``) — one XLA program per run; the
+RoCEv2 baselines run on the event oracle (PFC/go-back-N only exist there).
+Pass ``backend="events"`` to run everything on the oracle instead.
 """
 from __future__ import annotations
 
 from repro.core.params import NetworkSpec
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import run_permutation
+from repro.sim.workloads import permutation_scenario
 
-from .common import (MSG_SIZES_QUICK, QUICK_TOPO, TRANSPORTS, make_sim,
-                     timed)
+from .common import (FABRIC_LB, MSG_SIZES_QUICK, QUICK_TOPO, TRANSPORTS,
+                     run_events_transport, run_fabric_transport, timed)
 
 
 def run(quick: bool = True, link_gbps: float = 400.0, msg_sizes=None,
-        topo_kw=None, seed: int = 0, trace_queues: bool = False):
+        topo_kw=None, seed: int = 0, trace_queues: bool = False,
+        backend: str = "fabric"):
     topo_kw = topo_kw or QUICK_TOPO
     msg_sizes = msg_sizes or MSG_SIZES_QUICK
     rows = []
     for msg in msg_sizes:
+        net = NetworkSpec(link_gbps=link_gbps)
+        topo = full_bisection(**topo_kw)
+        sc = permutation_scenario(topo, msg, net=net, seed=seed)
         fcts = {}
-        for tr in TRANSPORTS:
-            net = NetworkSpec(link_gbps=link_gbps)
-            topo = full_bisection(**topo_kw)
-            sim = make_sim(tr, topo, net, log_queues=trace_queues,
-                           seed=seed)
-            res, wall = timed(run_permutation, sim, msg, seed=seed,
-                              until=5e5)
+        transports = (list(FABRIC_LB) + ["roce", "roce4"]
+                      if backend == "fabric" else TRANSPORTS)
+        for tr in transports:
+            if backend == "fabric" and tr in FABRIC_LB:
+                res, wall = timed(run_fabric_transport, tr, sc)
+                queue_settle = None
+            else:
+                (res, sim), wall = timed(run_events_transport, tr, sc,
+                                         until=5e5, seed=seed,
+                                         log_queues=trace_queues)
+                queue_settle = (max((t for t, d in
+                                     sim.all_queue_delay_logs()),
+                                    default=0.0)
+                                if trace_queues else None)
             fcts[tr] = res["max_fct"]
             rows.append({
                 "fig": "9-11", "workload": "permutation",
+                "backend": res.get("backend", "events"),
                 "link_gbps": link_gbps, "msg": msg, "transport": tr,
                 "max_fct_us": res["max_fct"], "avg_fct_us": res["avg_fct"],
                 "drops": res["drops"], "unfinished": res["unfinished"],
                 "wall_s": wall,
-                "queue_settle_us": (max((t for t, d in
-                                         sim.all_queue_delay_logs()),
-                                        default=0.0)
-                                    if trace_queues else None),
+                "queue_settle_us": queue_settle,
             })
         rows[-1]["speedup_vs_roce"] = fcts["roce"] / fcts["strack"]
         rows[-1]["adaptive_vs_oblivious"] = (fcts["strack-obl"]
@@ -52,12 +66,14 @@ def main():
     ap.add_argument("--link-gbps", type=float, default=400.0)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--trace-queues", action="store_true")
+    ap.add_argument("--backend", choices=["fabric", "events"],
+                    default="fabric")
     args = ap.parse_args()
     from .common import FULL_TOPO, MSG_SIZES_FULL
     rows = run(quick=not args.full, link_gbps=args.link_gbps,
                msg_sizes=MSG_SIZES_FULL if args.full else None,
                topo_kw=FULL_TOPO if args.full else None,
-               trace_queues=args.trace_queues)
+               trace_queues=args.trace_queues, backend=args.backend)
     for r in rows:
         print(r)
 

@@ -32,8 +32,9 @@ def main() -> None:
                  f"strack_speedup={r['speedup_vs_roce']:.2f}x;"
                  f"adaptive_vs_obl={r.get('adaptive_vs_oblivious', 1):.2f}x")
 
-    # Fig 8: queue settling
-    rs = permutation.run(msg_sizes=[2 * 2 ** 20], trace_queues=True)
+    # Fig 8: queue settling (event backend: needs per-queue delay logs)
+    rs = permutation.run(msg_sizes=[2 * 2 ** 20], trace_queues=True,
+                         backend="events")
     for r in rs:
         emit(f"fig8_settle_{r['transport']}", r["max_fct_us"],
              f"last_qdelay_over_baseRTT_at_us={r['queue_settle_us']}")

@@ -1,5 +1,10 @@
-"""The paper's headline comparison on the event-driven simulator:
-permutation + incast + one collective, STrack vs RoCEv2.
+"""The paper's headline comparison: permutation + incast + one collective,
+STrack vs RoCEv2.
+
+STrack (adaptive and oblivious spray) runs on the jitted multi-queue
+fat-tree fabric — one XLA program per run; the RoCEv2 baseline runs on the
+event-driven oracle (PFC/go-back-N live there).  Both backends consume the
+same scenario objects, so the flows and topology are identical.
 
     PYTHONPATH=src python examples/strack_vs_rocev2.py
 """
@@ -7,34 +12,44 @@ from repro.collective.algorithms import multi_job
 from repro.core.params import NetworkSpec
 from repro.sim.events import NetSim
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import TraceRunner, run_incast, run_permutation
+from repro.sim.workloads import (TraceRunner, incast_scenario,
+                                 permutation_scenario, run_on_events,
+                                 run_on_fabric)
 
 
 def main():
     net = NetworkSpec(link_gbps=400.0)
     topo_kw = dict(n_tor=4, hosts_per_tor=4)
+    topo = full_bisection(**topo_kw)
 
     print("== permutation, 16 hosts, 2MB messages ==")
+    sc = permutation_scenario(topo, 2 * 2 ** 20, net=net)
     res = {}
-    for tr, kw in [("strack", {}), ("strack-oblivious",
-                                    dict(oblivious_spray=True)),
-                   ("roce", {})]:
-        sim = NetSim(full_bisection(**topo_kw), net,
-                     transport="roce" if tr == "roce" else "strack", **kw)
-        r = run_permutation(sim, 2 * 2 ** 20, until=1e6)
+    for tr, runner in [
+            ("strack", lambda: run_on_fabric(sc, lb_mode="adaptive")),
+            ("strack-oblivious",
+             lambda: run_on_fabric(sc, lb_mode="oblivious")),
+            ("roce", lambda: run_on_events(sc, transport="roce",
+                                           until=1e6))]:
+        r = runner()
         res[tr] = r["max_fct"]
         print(f"  {tr:18s} max FCT = {r['max_fct']:8.1f} us   "
-              f"drops={r['drops']} pauses={r['pauses']}")
+              f"drops={r['drops']} pauses={r['pauses']} "
+              f"[{r['backend']}]")
     print(f"  -> STrack speedup vs RoCEv2: "
           f"{res['roce']/res['strack']:.2f}x "
           f"(paper: up to 6.3x at 8K hosts)")
 
     print("== incast 8->1, 512KB ==")
-    for tr in ("strack", "roce"):
-        sim = NetSim(full_bisection(**topo_kw), net, transport=tr)
-        r = run_incast(sim, 8, 512 * 2 ** 10, until=2e6)
+    sc = incast_scenario(topo, 8, 512 * 2 ** 10, net=net)
+    for tr, runner in [
+            ("strack", lambda: run_on_fabric(sc)),
+            ("roce", lambda: run_on_events(sc, transport="roce",
+                                           until=2e6))]:
+        r = runner()
         print(f"  {tr:18s} max FCT = {r['max_fct']:8.1f} us   "
-              f"drops={r['drops']} pauses={r['pauses']}")
+              f"drops={r['drops']} pauses={r['pauses']} "
+              f"[{r['backend']}]")
     print("  -> lossy STrack ~ lossless RoCEv2 (paper Fig 19 parity)")
 
     print("== 2 x DBT all-reduce (1MB), 16 hosts ==")

@@ -1,0 +1,60 @@
+"""Version compatibility shims for the installed JAX.
+
+The repo targets both older (0.4.3x) and newer JAX releases across three
+API moves:
+
+* ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)`` only
+  exist in newer JAX; older releases take no ``axis_types`` argument.
+* ``jax.shard_map`` was promoted from ``jax.experimental.shard_map``.
+* its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+
+Everything here degrades to the older spelling when the newer one is
+missing, so callers can use one code path.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (AxisType.Auto,) * n}`` when supported, else ``{}``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return {}
+    if "axis_types" not in params:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    shape, axes = tuple(shape), tuple(axes)
+    return jax.make_mesh(shape, axes, **mesh_axis_types_kwargs(len(axes)))
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as exp_fn
+    return exp_fn
+
+
+_SHARD_MAP = _resolve_shard_map()
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_SHARD_MAP).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` across the check_vma/check_rep rename."""
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kw["check_rep"] = check_vma
+    return _SHARD_MAP(f, **kw)

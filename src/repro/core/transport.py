@@ -4,7 +4,9 @@
 state; ``flow_on_sack`` / ``flow_next_packet`` / ``flow_on_timer`` are the
 three entry points of Algorithm 1.  Everything is fixed-shape, so
 ``jax.vmap`` turns this into N parallel NIC connection engines, and
-``sim/jaxsim.py`` scans it through time inside a single XLA program.
+``sim/fabric.py`` (multi-queue fat-tree; ``sim/jaxsim.py`` is its 1-queue
+incast special case) scans them through time inside a single XLA program —
+each engine seeing genuinely divergent per-path ECN/RTT signals.
 """
 from __future__ import annotations
 

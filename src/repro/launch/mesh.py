@@ -4,22 +4,21 @@ A function, not a module constant, so importing never touches jax device
 state.  Single pod: 16x16 = 256 chips ("data", "model").  Multi-pod:
 2x16x16 = 512 chips ("pod", "data", "model") — the "pod" axis carries the
 inter-pod (Ethernet/DCN) data parallelism that STrack accelerates.
+
+Mesh construction goes through ``repro.compat`` so the same call works on
+JAX versions with and without ``axis_types`` / ``AxisType``.
 """
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. (1,1) smoke meshes)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)

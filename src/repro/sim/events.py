@@ -15,6 +15,10 @@ htsim-style discrete-event simulation of the paper's evaluation fabric:
 
 Transports plug in through the engines in ``repro.core.ref`` (STrack) and
 the RoCEv2/DCQCN baseline.  Times in us, sizes in bytes.
+
+This module is the *semantics oracle*: the jitted multi-queue fabric
+(``fabric.py``, ~1000x faster, STrack-only) is parity-tested against it in
+``tests/test_fabric.py``.  See the sim/ module map in ``fabric.py``.
 """
 from __future__ import annotations
 

@@ -1,60 +1,30 @@
-"""Fully-jitted time-stepped STrack simulator (single-bottleneck incast).
+"""Fully-jitted single-bottleneck incast — the 1-queue special case of
+``fabric.py``.
 
 One XLA program simulates N STrack flows sharing one egress queue — the
 paper's incast scenario (Figs. 16-20) — with the *same* vmapped flow
-engines (`repro.core.transport`) the framework exposes as its composable
-module.  1 tick = 1 MTU serialization time at the bottleneck:
+engines (``repro.core.transport``) the framework exposes as its composable
+module.  Since the multi-queue fat-tree refactor this module is a thin
+wrapper: the incast is a degenerate fat-tree (one ToR, one spine, N+1
+hosts) whose only contended queue is the destination host's downlink, run
+on :func:`repro.sim.fabric.run_fabric`.  1 tick = 1 MTU serialization time
+at the bottleneck:
 
   * each tick every flow may clock out <=1 packet (NIC rate == link rate),
   * the queue serves 1 packet/tick, marks egress ECN on residual depth
     between Kmin..Kmax (deterministic ramp), silently drops beyond 5 BDP,
-  * the receiver coalesces SACKs; at most one delivery (hence one SACK)
-    per tick rides the fixed-latency return pipe.
+  * SACKs ride the fixed-latency return pipe (fwd delay folded in).
 
-Everything is fixed-shape; the whole run is a single lax.scan.
+Everything is fixed-shape; the whole run is a single lax.scan.  See the
+module map in ``fabric.py`` for how the sim/ package fits together.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
-
-from ..core import transport as tp
-from ..core import reliability as rel
-from ..core.params import NetworkSpec, STrackParams, make_strack_params
-from ..core.reliability import SackMsg
-
-
-class QueueState(NamedTuple):
-    flow: jax.Array     # i32[cap]
-    psn: jax.Array      # i32[cap]
-    ts: jax.Array       # f32[cap]
-    probe: jax.Array    # bool[cap]
-    entropy: jax.Array  # i32[cap]
-    head: jax.Array     # i32
-    size: jax.Array     # i32
-
-
-class SimState(NamedTuple):
-    flows: tp.FlowState          # vmapped [N]
-    rcv: rel.ReceiverState       # vmapped [N]
-    q: QueueState
-    sack_pipe: SackMsg           # [H] slots (+ flow field below)
-    sack_flow: jax.Array         # i32[H]
-    drops: jax.Array             # i32
-    delivered: jax.Array         # f32[N]
-
-
-def _empty_sack(p: STrackParams, h: int) -> SackMsg:
-    z = lambda dt: jnp.zeros((h,), dt)
-    return SackMsg(valid=z(bool), epsn=z(jnp.int32), sack_base=z(jnp.int32),
-                   sack_bits=jnp.zeros((h, p.sack_bitmap_bits), bool),
-                   bytes_recvd=z(jnp.float32), ooo_cnt=z(jnp.int32),
-                   ecn=z(bool), entropy=z(jnp.int32), ts=z(jnp.float32),
-                   probe_reply=z(bool))
+from ..core.params import NetworkSpec
+from .fabric import FabricConfig, run_fabric
+from .topology import FatTree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,154 +38,20 @@ class IncastConfig:
 
 
 def run_incast(cfg: IncastConfig, n_ticks: int):
-    """Returns per-tick metrics dict + final state (all jitted)."""
-    net = cfg.net
-    p = make_strack_params(net, max_paths=cfg.max_paths)
-    N = cfg.n_flows
-    tick_us = net.mtu_serialize_us
-    total_pkts = int(math.ceil(cfg.msg_bytes / net.mtu_bytes))
-    qcap = int(net.drop_bytes / net.mtu_bytes) + 2
-    kmin_p = net.ecn_kmin_bytes / net.mtu_bytes
-    kmax_p = net.ecn_kmax_bytes / net.mtu_bytes
-    H = cfg.ret_delay_ticks + cfg.fwd_delay_ticks + 2
+    """Returns per-tick metrics dict + final state (all jitted).
 
-    flows = jax.vmap(lambda _: tp.init_flow(p, total_pkts))(jnp.arange(N))
-    rcv = jax.vmap(lambda _: rel.init_receiver(total_pkts))(jnp.arange(N))
-    q = QueueState(flow=jnp.full((qcap,), -1, jnp.int32),
-                   psn=jnp.zeros((qcap,), jnp.int32),
-                   ts=jnp.zeros((qcap,), jnp.float32),
-                   probe=jnp.zeros((qcap,), bool),
-                   entropy=jnp.zeros((qcap,), jnp.int32),
-                   head=jnp.zeros((), jnp.int32),
-                   size=jnp.zeros((), jnp.int32))
-    st = SimState(flows=flows, rcv=rcv, q=q,
-                  sack_pipe=_empty_sack(p, H),
-                  sack_flow=jnp.full((H,), -1, jnp.int32),
-                  drops=jnp.zeros((), jnp.int32),
-                  delivered=jnp.zeros((N,), jnp.float32))
-
-    def tick_fn(st: SimState, t):
-        now = t.astype(jnp.float32) * tick_us
-        q = st.q
-
-        # ---- 1. serve one packet from the queue -> receiver -------------
-        has_pkt = q.size > 0
-        idx = q.head % qcap
-        f = q.flow[idx]
-        residual = jnp.maximum(q.size - 1, 0).astype(jnp.float32)
-        frac = jnp.clip((residual - kmin_p) / jnp.maximum(kmax_p - kmin_p,
-                                                          1e-9), 0.0, 1.0)
-        # deterministic ECN ramp (hash of tick as dither)
-        dither = (jnp.abs(jnp.sin(t.astype(jnp.float32) * 12.9898)) * 1.0)
-        ecn = has_pkt & (frac > dither * 0.999)
-        fc = jnp.clip(f, 0, N - 1)
-        rw = jax.tree.map(lambda a: a[fc], st.rcv)
-        rw2, sack = rel.receiver_on_data(
-            rw, p, q.psn[idx], jnp.float32(net.mtu_bytes), ecn,
-            q.entropy[idx], q.ts[idx], q.probe[idx])
-        rw2 = jax.tree.map(lambda n_, o: jnp.where(has_pkt, n_, o), rw2, rw)
-        rcv = jax.tree.map(lambda all_, one: all_.at[fc].set(one), st.rcv,
-                           rw2)
-        sack_valid = sack.valid & has_pkt
-        # fwd delay is folded into the return leg: base RTT = fwd+ret+1
-        slot = (t + cfg.ret_delay_ticks + cfg.fwd_delay_ticks) % H
-        pipe = jax.tree.map(
-            lambda pv, sv: pv.at[slot].set(jnp.where(sack_valid, sv,
-                                                     pv[slot])),
-            st.sack_pipe, sack)
-        sack_flow = st.sack_flow.at[slot].set(
-            jnp.where(sack_valid, fc, jnp.int32(-1)))
-        q = q._replace(head=jnp.where(has_pkt, q.head + 1, q.head),
-                       size=jnp.where(has_pkt, q.size - 1, q.size))
-        delivered = st.delivered.at[fc].add(
-            jnp.where(has_pkt & ~q.probe[idx], net.mtu_bytes, 0.0))
-
-        # ---- 2. deliver due SACK to its sender ---------------------------
-        cur = t % H
-        due_flow = sack_flow[cur]
-        due = jax.tree.map(lambda a: a[cur], pipe)
-        have_sack = due_flow >= 0
-
-        def apply_sack(fs_all):
-            fcl = jnp.clip(due_flow, 0, N - 1)
-            one = jax.tree.map(lambda a: a[fcl], fs_all)
-            due_ok = due._replace(valid=due.valid & have_sack)
-            one2 = tp.flow_on_sack(one, p, due_ok, now)
-            return jax.tree.map(lambda al, o: al.at[fcl].set(o), fs_all,
-                                one2)
-        flows = apply_sack(st.flows)
-        sack_flow = sack_flow.at[cur].set(-1)
-
-        # ---- 3. timers (probes / RTO), every 8 ticks ---------------------
-        def timers(fl):
-            fl2, probe_tx = jax.vmap(
-                lambda f_: tp.flow_on_timer(f_, p, now))(fl)
-            return fl2, probe_tx
-        run_timers = (t % 8) == 0
-        flows, probe_tx = jax.lax.cond(
-            run_timers, timers,
-            lambda fl: (fl, tp.TxPacket(
-                valid=jnp.zeros((N,), bool), psn=jnp.zeros((N,), jnp.int32),
-                entropy=jnp.zeros((N,), jnp.int32),
-                is_rtx=jnp.zeros((N,), bool),
-                is_probe=jnp.zeros((N,), bool))), flows)
-
-        # ---- 4. sends: every flow may clock out one packet --------------
-        flows, tx = jax.vmap(lambda f_: tp.flow_next_packet(f_, p, now))(
-            flows)
-
-        # enqueue probes + data (fori over flows; each appends <=2)
-        def enq(i, carry):
-            q, drops = carry
-
-            def push(q, drops, psn, probe, entropy):
-                full = q.size >= qcap - 1
-                # silent drop when queue exceeds the 5 BDP threshold
-                drop = q.size.astype(jnp.float32) >= (qcap - 2)
-                pos = (q.head + q.size) % qcap
-                qn = QueueState(
-                    flow=q.flow.at[pos].set(jnp.int32(i)),
-                    psn=q.psn.at[pos].set(psn),
-                    ts=q.ts.at[pos].set(now),
-                    probe=q.probe.at[pos].set(probe),
-                    entropy=q.entropy.at[pos].set(entropy),
-                    head=q.head,
-                    size=q.size + 1)
-                qn = jax.tree.map(lambda n_, o: jnp.where(drop | full, o, n_),
-                                  qn, q)
-                return qn, drops + jnp.where(drop | full, 1, 0)
-
-            send = tx.valid[i]
-            qd, dd = push(q, drops, tx.psn[i], jnp.zeros((), bool),
-                          tx.entropy[i])
-            q = jax.tree.map(lambda n_, o: jnp.where(send, n_, o), qd, q)
-            drops = jnp.where(send, dd, drops)
-            sendp = probe_tx.valid[i]
-            qp, dp = push(q, drops, probe_tx.psn[i], jnp.ones((), bool),
-                          probe_tx.entropy[i])
-            q = jax.tree.map(lambda n_, o: jnp.where(sendp, n_, o), qp, q)
-            drops = jnp.where(sendp, dp, drops)
-            return (q, drops)
-
-        q, drops = jax.lax.fori_loop(0, N, enq, (q, st.drops))
-
-        new_st = SimState(flows=flows, rcv=rcv, q=q, sack_pipe=pipe,
-                          sack_flow=sack_flow, drops=drops,
-                          delivered=delivered)
-        metrics = {
-            "queue_pkts": q.size,
-            "drops": drops,
-            "cwnd_mean": jnp.mean(flows.cc.cwnd),
-            "done": jnp.sum(jax.vmap(tp.flow_done)(flows)),
-            "delivered": delivered,
-        }
-        return new_st, metrics
-
-    @jax.jit
-    def run(st):
-        return jax.lax.scan(tick_fn, st, jnp.arange(n_ticks, dtype=jnp.int32))
-
-    final, metrics = run(st)
-    metrics["tick_us"] = tick_us
-    metrics["target_qdelay_pkts"] = p.target_qdelay_us / tick_us
+    ``metrics["queue_pkts"]`` is the bottleneck (destination downlink)
+    occupancy per tick, matching the pre-fabric single-queue simulator.
+    """
+    n = cfg.n_flows
+    # Degenerate fat-tree: all hosts on one ToR, so every packet goes
+    # straight into the destination host's downlink queue — the bottleneck.
+    topo = FatTree(n_tor=1, hosts_per_tor=n + 1, n_spine=1)
+    flows = [(i + 1, 0, float(cfg.msg_bytes)) for i in range(n)]
+    fcfg = FabricConfig(
+        net=cfg.net, max_paths=cfg.max_paths,
+        delay_ticks=cfg.fwd_delay_ticks + cfg.ret_delay_ticks)
+    final, metrics = run_fabric(topo, flows, n_ticks, fcfg)
+    bottleneck = metrics["queue_ids"]["host_down"](0)
+    metrics["queue_pkts"] = metrics["qsize"][:, bottleneck]
     return final, metrics

@@ -4,6 +4,10 @@ Matches the paper's evaluation fabric (Section 4.2): hosts -> ToR -> spine,
 all links the same speed; oversubscription trims spine count; asymmetry
 disables chosen ToR-spine links.  Path selection is ECMP: a deterministic
 hash of (src, dst, entropy) over the *live* uplinks.
+
+This Python model is the shared ground truth for both simulator backends:
+``events.py`` consumes it directly, and ``fabric.py`` array-izes it
+(``ArrayTopo.from_fat_tree``) with a bit-exact jnp mirror of ``_mix``.
 """
 from __future__ import annotations
 

@@ -1,19 +1,35 @@
 """Workload generators driving the simulators (Section 4.2/4.3).
 
-* permutation — random src->dst pairing; every host sends one and receives
-  one message (the load-balancing stress test).
-* incast — n sources to one destination.
-* collective traces — produced by repro.collective.algorithms and replayed
-  here with message dependencies (a message starts only when its parents
-  complete).
+One scenario API, two backends.  A :class:`Scenario` is a plain config
+object — topology + network + an explicit flow list — that runs unchanged
+on either simulator:
+
+* ``run_on_fabric``  — the jitted multi-queue fat-tree (``fabric.py``),
+  STrack only (adaptive / oblivious / fixed-path spray), ~1000x faster;
+* ``run_on_events`` — the discrete-event oracle (``events.py``), STrack
+  *and* RoCEv2/PFC, plus collective traces via :class:`TraceRunner`.
+
+Builders cover the paper's evaluation matrix: ``permutation_scenario``
+(Figs 8-11), ``incast_scenario`` (Figs 16-20), ``oversub_scenario``
+(Figs 12-13) and ``linkdown_scenario`` (Figs 14-15).  Both runners return
+the same summary dict (max_fct / avg_fct / unfinished / drops / pauses) so
+results are directly comparable — the parity tests in
+``tests/test_fabric.py`` rely on that.
+
+Legacy entry points ``run_permutation(sim, ...)`` / ``run_incast(sim, ...)``
+keep working on a prebuilt :class:`NetSim`.
 """
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Tuple
 
+from ..core.params import NetworkSpec
 from .events import NetSim
+from .topology import FatTree, full_bisection, oversubscribed, \
+    with_link_failures
 
 
 def permutation_pairs(n_hosts: int, seed: int = 0) -> list[tuple[int, int]]:
@@ -26,45 +42,146 @@ def permutation_pairs(n_hosts: int, seed: int = 0) -> list[tuple[int, int]]:
             return [(i, perm[i]) for i in range(n_hosts)]
 
 
-def run_permutation(sim: NetSim, msg_bytes: float, seed: int = 0,
-                    until: float = 1e9) -> dict:
-    pairs = permutation_pairs(sim.topo.n_hosts, seed)
-    for s, d in pairs:
-        sim.add_flow(s, d, msg_bytes)
-    sim.run(until=until)
-    fcts = [fl.fct for fl in sim.flows.values() if fl.fct is not None]
-    unfinished = sum(1 for fl in sim.flows.values() if fl.fct is None)
-    return {
-        "max_fct": max(fcts) if fcts else float("nan"),
-        "avg_fct": sum(fcts) / len(fcts) if fcts else float("nan"),
-        "unfinished": unfinished,
-        "drops": sim.total_drops,
-        "pauses": len(sim.pause_log),
-    }
+# --------------------------------------------------------------------------- #
+# Scenario configs — one object, both backends
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class Scenario:
+    """A backend-agnostic workload: who sends how much over which fabric."""
+
+    name: str
+    topo: FatTree
+    net: NetworkSpec
+    flows: Tuple[Tuple[int, int, float], ...]  # (src, dst, msg_bytes)
+
+    def default_ticks(self) -> int:
+        """Ticks for a fabric run: worst bottleneck serialisation x margin."""
+        mtu = self.net.mtu_bytes
+        per_dst: dict[int, float] = {}
+        for _, d, b in self.flows:
+            per_dst[d] = per_dst.get(d, 0.0) + math.ceil(b / mtu)
+        bottleneck = max(per_dst.values()) if per_dst else 1.0
+        rtt_ticks = self.net.base_rtt_us / self.net.mtu_serialize_us
+        return int(4 * bottleneck + 30 * rtt_ticks + 1000)
 
 
-def run_incast(sim: NetSim, fan_in: int, msg_bytes: float, dst: int = 0,
-               until: float = 1e9, seed: int = 0) -> dict:
-    """fan_in sources (on other ToRs where possible) -> one destination."""
+def permutation_scenario(topo: FatTree, msg_bytes: float,
+                         net: Optional[NetworkSpec] = None,
+                         seed: int = 0) -> Scenario:
+    net = net or NetworkSpec()
+    pairs = permutation_pairs(topo.n_hosts, seed)
+    return Scenario(name=f"permutation_{topo.n_hosts}", topo=topo, net=net,
+                    flows=tuple((s, d, float(msg_bytes)) for s, d in pairs))
+
+
+def incast_scenario(topo: FatTree, fan_in: int, msg_bytes: float,
+                    dst: int = 0, net: Optional[NetworkSpec] = None,
+                    seed: int = 0) -> Scenario:
+    """fan_in sources -> one destination (sampled like the legacy runner)."""
+    net = net or NetworkSpec()
     rng = random.Random(seed)
-    candidates = [h for h in range(sim.topo.n_hosts) if h != dst]
+    candidates = [h for h in range(topo.n_hosts) if h != dst]
     srcs = rng.sample(candidates, min(fan_in, len(candidates)))
-    for s in srcs:
-        sim.add_flow(s, dst, msg_bytes)
+    return Scenario(name=f"incast_{fan_in}to1", topo=topo, net=net,
+                    flows=tuple((s, dst, float(msg_bytes)) for s in srcs))
+
+
+def oversub_scenario(n_tor: int, hosts_per_tor: int, ratio: int,
+                     msg_bytes: float, net: Optional[NetworkSpec] = None,
+                     seed: int = 0) -> Scenario:
+    topo = oversubscribed(n_tor, hosts_per_tor, ratio)
+    sc = permutation_scenario(topo, msg_bytes, net, seed)
+    return Scenario(name=f"oversub_{ratio}:1", topo=topo, net=sc.net,
+                    flows=sc.flows)
+
+
+def linkdown_scenario(topo_kw: dict, frac_links_down: float,
+                      msg_bytes: float, net: Optional[NetworkSpec] = None,
+                      seed: int = 0) -> Scenario:
+    """Permutation over an asymmetric (dead-link) full-bisection fabric."""
+    base = full_bisection(**topo_kw)
+    n_links = base.n_tor * base.n_spine
+    n_down = max(1, int(frac_links_down * n_links))
+    topo = with_link_failures(base, n_down,
+                              n_tors_affected=max(1, base.n_tor // 2),
+                              seed=seed)
+    sc = permutation_scenario(topo, msg_bytes, net, seed)
+    return Scenario(name=f"linkdown_{n_down}", topo=topo, net=sc.net,
+                    flows=sc.flows)
+
+
+# --------------------------------------------------------------------------- #
+# Backend runners
+# --------------------------------------------------------------------------- #
+
+def run_on_fabric(sc: Scenario, n_ticks: Optional[int] = None,
+                  lb_mode: str = "adaptive", max_paths: int = 64) -> dict:
+    """Run a scenario on the jitted fat-tree; event-oracle-style summary."""
+    from .fabric import FabricConfig, run_fabric, summarize
+    cfg = FabricConfig(net=sc.net, max_paths=max_paths, lb_mode=lb_mode)
+    _, metrics = run_fabric(sc.topo, sc.flows,
+                            n_ticks or sc.default_ticks(), cfg)
+    out = summarize(metrics)
+    out["backend"] = "fabric"
+    return out
+
+
+def run_on_events(sc: Scenario, transport: str = "strack",
+                  until: float = 1e9, **netsim_kw) -> dict:
+    """Run the same scenario on the discrete-event oracle."""
+    sim = NetSim(sc.topo, sc.net, transport=transport, **netsim_kw)
+    return run_scenario_on_sim(sim, sc, until=until)
+
+
+def run_scenario_on_sim(sim: NetSim, sc: Scenario,
+                        until: float = 1e9) -> dict:
+    """Run a scenario on a prebuilt NetSim (custom params / queue logging)."""
+    for s, d, b in sc.flows:
+        sim.add_flow(s, d, b)
     sim.run(until=until)
+    out = _summarize_sim(sim)
+    out["backend"] = "events"
+    return out
+
+
+def _summarize_sim(sim: NetSim) -> dict:
     fcts = [fl.fct for fl in sim.flows.values() if fl.fct is not None]
-    unfinished = sum(1 for fl in sim.flows.values() if fl.fct is None)
     return {
         "max_fct": max(fcts) if fcts else float("nan"),
         "avg_fct": sum(fcts) / len(fcts) if fcts else float("nan"),
-        "unfinished": unfinished,
+        "unfinished": sum(1 for fl in sim.flows.values() if fl.fct is None),
         "drops": sim.total_drops,
         "pauses": len(sim.pause_log),
     }
 
 
 # --------------------------------------------------------------------------- #
-# Dependency-scheduled message traces (collectives)
+# Legacy NetSim entry points (benchmarks/incast.py, collectives, examples)
+# --------------------------------------------------------------------------- #
+
+def run_permutation(sim: NetSim, msg_bytes: float, seed: int = 0,
+                    until: float = 1e9) -> dict:
+    pairs = permutation_pairs(sim.topo.n_hosts, seed)
+    for s, d in pairs:
+        sim.add_flow(s, d, msg_bytes)
+    sim.run(until=until)
+    return _summarize_sim(sim)
+
+
+def run_incast(sim: NetSim, fan_in: int, msg_bytes: float, dst: int = 0,
+               until: float = 1e9, seed: int = 0) -> dict:
+    """fan_in sources (on other ToRs where possible) -> one destination."""
+    sc = incast_scenario(sim.topo, fan_in, msg_bytes, dst=dst, seed=seed,
+                         net=sim.net)
+    for s, d, b in sc.flows:
+        sim.add_flow(s, d, b)
+    sim.run(until=until)
+    return _summarize_sim(sim)
+
+
+# --------------------------------------------------------------------------- #
+# Dependency-scheduled message traces (collectives) — events backend only
 # --------------------------------------------------------------------------- #
 
 @dataclass

@@ -20,10 +20,11 @@ mesh = make_mesh((2, 4, 2), ("pod", "data", "model"))
 x = jax.random.normal(jax.random.PRNGKey(0), (16, 64), jnp.float32)
 xs = jax.device_put(x, jax.sharding.NamedSharding(mesh, P(("pod", "data"))))
 got = jax.jit(lambda v: hierarchical_int8_psum(v, mesh))(xs)
-want = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v, ("pod", "data")),
-                             mesh=mesh, in_specs=P(("pod", "data")),
-                             out_specs=P(("pod", "data")),
-                             check_vma=False))(xs)
+from repro.compat import shard_map
+want = jax.jit(shard_map(lambda v: jax.lax.psum(v, ("pod", "data")),
+                         mesh=mesh, in_specs=P(("pod", "data")),
+                         out_specs=P(("pod", "data")),
+                         check_vma=False))(xs)
 err = float(jnp.max(jnp.abs(got - want))) / float(jnp.max(jnp.abs(want)))
 assert err < 0.02, err          # int8 quantisation error only
 

@@ -1,0 +1,146 @@
+"""Multi-queue jitted fabric vs the event-driven oracle (semantics parity)
+plus the multipath regressions the single-queue simulator could never test:
+ECMP bit-exactness, spray spreading over live uplinks, and adaptive spray
+beating single-path pinning on an asymmetric (dead-link) fabric.
+"""
+import numpy as np
+import pytest
+
+from repro.core.params import NetworkSpec
+from repro.sim.fabric import (ArrayTopo, FabricConfig, ecmp_mix, run_fabric,
+                              summarize)
+from repro.sim.topology import FatTree, full_bisection
+from repro.sim.workloads import (incast_scenario, permutation_scenario,
+                                 run_on_events, run_on_fabric)
+
+NET = NetworkSpec(link_gbps=400.0)
+TOPO44 = full_bisection(4, 4)        # 16 hosts, 4 ToRs, 4 spines
+
+# fabric is a tick-quantised approximation of the event oracle; completion
+# times must agree within this factor, drop counts within 2x
+FCT_TOL = (0.6, 1.6)
+
+
+def _fct_ratio(fabric_res, events_res):
+    return fabric_res["max_fct"] / events_res["max_fct"]
+
+
+# --------------------------------------------------------------------------- #
+# parity vs the oracle (acceptance: >=4 ToR / >=4 spine, incast+permutation)
+# --------------------------------------------------------------------------- #
+
+def test_incast_parity_vs_oracle():
+    """8->1 incast, 512KB: drops happen on both backends and FCTs agree."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    ev = run_on_events(sc, transport="strack", until=2e6)
+    fb = run_on_fabric(sc)
+    assert ev["unfinished"] == 0 and fb["unfinished"] == 0
+    r = _fct_ratio(fb, ev)
+    assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
+    # both lossy backends shed the incast burst in the same ballpark
+    assert ev["drops"] > 0 and fb["drops"] > 0
+    dr = fb["drops"] / ev["drops"]
+    assert 0.5 < dr < 2.0, (fb["drops"], ev["drops"])
+
+
+def test_permutation_parity_vs_oracle():
+    """16-host permutation, 256KB: full-bisection fabric, no drops."""
+    sc = permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET, seed=0)
+    ev = run_on_events(sc, transport="strack", until=1e6)
+    fb = run_on_fabric(sc)
+    assert ev["unfinished"] == 0 and fb["unfinished"] == 0
+    r = _fct_ratio(fb, ev)
+    assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
+    assert ev["drops"] == 0 and fb["drops"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# multipath semantics
+# --------------------------------------------------------------------------- #
+
+def test_ecmp_matches_python_topology():
+    """The jnp ECMP hash is bit-exact vs FatTree.ecmp_spine, dead links
+    included."""
+    import jax.numpy as jnp
+    topo = FatTree(n_tor=4, hosts_per_tor=4, n_spine=4,
+                   dead_links=frozenset({(0, 0), (0, 1), (2, 3)}))
+    at = ArrayTopo.from_fat_tree(topo)
+    srcs, dsts, ents = [], [], []
+    for src in range(topo.n_hosts):
+        for dst in range(0, topo.n_hosts, 3):
+            if topo.same_tor(src, dst):
+                continue
+            for ent in (0, 1, 7, 63, 255):
+                srcs.append(src), dsts.append(dst), ents.append(ent)
+    got = np.asarray(at.ecmp_spine(jnp.asarray(srcs, jnp.int32),
+                                   jnp.asarray(dsts, jnp.int32),
+                                   jnp.asarray(ents, jnp.int32)))
+    want = np.asarray([topo.ecmp_spine(s, d, e)
+                       for s, d, e in zip(srcs, dsts, ents)])
+    np.testing.assert_array_equal(got, want)
+    # every chosen spine is a live uplink of the source ToR
+    live = np.asarray(at.live_mask)
+    tors = np.asarray(srcs) // topo.hosts_per_tor
+    assert live[tors, got].all()
+
+
+@pytest.fixture(scope="module")
+def asymmetric_runs():
+    """Permutation on a fabric with dead uplinks (>=2 live per ToR),
+    adaptive spray vs fixed single-path pinning."""
+    topo = FatTree(n_tor=4, hosts_per_tor=4, n_spine=4,
+                   dead_links=frozenset({(0, 0), (0, 1), (1, 0)}))
+    flows = permutation_scenario(topo, 512 * 2 ** 10, net=NET, seed=1).flows
+    out = {}
+    for mode in ("adaptive", "fixed"):
+        final, m = run_fabric(topo, flows, 16000,
+                              FabricConfig(net=NET, lb_mode=mode))
+        out[mode] = (final, summarize(m))
+    return topo, out
+
+
+def test_adaptive_spray_beats_fixed_path_under_asymmetry(asymmetric_runs):
+    """With dead links, Algorithm 2's spray must measurably beat pinning."""
+    _, out = asymmetric_runs
+    ad, fx = out["adaptive"][1], out["fixed"][1]
+    assert ad["unfinished"] == 0 and fx["unfinished"] == 0
+    assert ad["max_fct"] < 0.95 * fx["max_fct"], (ad["max_fct"],
+                                                  fx["max_fct"])
+
+
+def test_spray_uses_every_live_uplink(asymmetric_runs):
+    """Adaptive spray spreads each ToR's traffic over ALL its live uplinks
+    (the single-queue simulator could not represent this at all)."""
+    topo, out = asymmetric_runs
+    final = out["adaptive"][0]
+    T, S = topo.n_tor, topo.n_spine
+    served = np.asarray(final.qhead)[:T * S].reshape(T, S)
+    for t in range(T):
+        for s in range(S):
+            if (t, s) in topo.dead_links:
+                assert served[t, s] == 0, (t, s)
+            else:
+                assert served[t, s] > 0, (t, s)
+
+
+def test_fixed_path_never_sprays(asymmetric_runs):
+    """Single-path pinning sends each flow over exactly one uplink, so some
+    live uplinks stay cold — the contrast that makes spray matter."""
+    topo, out = asymmetric_runs
+    final = out["fixed"][0]
+    T, S = topo.n_tor, topo.n_spine
+    served = np.asarray(final.qhead)[:T * S].reshape(T, S)
+    n_flows = 16
+    # at most one uplink per (src ToR) per flow -> <= n_flows warm uplinks
+    assert (served > 0).sum() <= n_flows
+    # and strictly fewer warm uplinks than adaptive spray lights up
+    ad_served = np.asarray(out["adaptive"][0].qhead)[:T * S]
+    assert (served > 0).sum() < (ad_served > 0).sum()
+
+
+def test_ecmp_mix_matches_reference_scalar():
+    from repro.sim.topology import _mix
+    import jax.numpy as jnp
+    for a, b, c in [(0, 0, 0), (1, 2, 3), (15, 7, 255), (123, 45, 63)]:
+        got = int(ecmp_mix(jnp.int32(a), jnp.int32(b), jnp.int32(c)))
+        assert got == _mix(a, b, c), (a, b, c)

@@ -7,6 +7,8 @@ fixed-shape JAX)."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
