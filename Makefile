@@ -8,9 +8,10 @@ PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 tier1:
 	$(PP) $(PY) -m pytest -x -q
 
-# 2k-tick jitted fabric run: perf canary for the lax.scan hot path.
+# 2k-tick jitted fabric runs (STrack + RoCEv2-on-fabric canary): perf and
+# baseline-port regressions on the lax.scan hot path fail fast here.
 fabric-smoke:
-	$(PP) $(PY) -m benchmarks.fabric_smoke 2000
+	$(PP) $(PY) -m benchmarks.fabric_smoke 2000 all
 
 # What CI should run on every change.
 smoke: tier1 fabric-smoke

@@ -16,17 +16,39 @@ MSG_SIZES_FULL = MSG_SIZES_QUICK + [8 * 2**20]
 
 TRANSPORTS = ["strack", "strack-obl", "roce", "roce4"]
 
-# STrack spray variants that run on the jitted fabric fast path
-# (RoCEv2 baselines stay on the event oracle — PFC/go-back-N live there).
+# STrack spray variants that run on the jitted fabric fast path.
 FABRIC_LB = {"strack": "adaptive", "strack-obl": "oblivious",
              "strack-fixed": "fixed"}
+# Everything the fabric can run: the spray variants plus the ported RoCEv2
+# (DCQCN + go-back-N + PFC) baseline.  Only the 4-QP striped variant still
+# needs the event oracle.
+FABRIC_TRANSPORTS = list(FABRIC_LB) + ["roce"]
 
 
-def run_fabric_transport(transport: str, scenario, n_ticks=None) -> dict:
-    """Run one STrack spray variant on the jitted fabric backend."""
+def run_fabric_transport(transport: str, scenario, n_ticks=None,
+                         trace_queues: bool = False) -> dict:
+    """Run one transport variant on the jitted fabric backend."""
     from repro.sim.workloads import run_on_fabric
+    if transport == "roce":
+        return run_on_fabric(scenario, n_ticks=n_ticks, protocol="rocev2",
+                             trace_queues=trace_queues)
     return run_on_fabric(scenario, n_ticks=n_ticks,
-                         lb_mode=FABRIC_LB[transport])
+                         lb_mode=FABRIC_LB[transport],
+                         trace_queues=trace_queues)
+
+
+def sweep_fabric_transport(transport: str, scenarios, n_ticks=None,
+                           trace_queues: bool = False) -> list:
+    """Run one transport over a batch of same-shape scenarios (seed sweep)
+    in a single vmapped jit; returns per-seed summaries."""
+    from repro.sim.workloads import run_seed_sweep_on_fabric
+    if transport == "roce":
+        return run_seed_sweep_on_fabric(scenarios, n_ticks=n_ticks,
+                                        protocol="rocev2",
+                                        trace_queues=trace_queues)
+    return run_seed_sweep_on_fabric(scenarios, n_ticks=n_ticks,
+                                    lb_mode=FABRIC_LB[transport],
+                                    trace_queues=trace_queues)
 
 
 def run_events_transport(transport: str, scenario, until: float = 1e6,
@@ -48,10 +70,10 @@ def make_sim(transport: str, topo: FatTree, net: NetworkSpec, **kw) -> NetSim:
     if transport == "roce":
         return NetSim(topo, net, transport="roce", **kw)
     if transport == "roce4":
-        from repro.core.params import RoCEParams, make_dcqcn_params
+        from repro.core.params import make_roce_params
         return NetSim(topo, net, transport="roce",
-                      roce_params=RoCEParams(dcqcn=make_dcqcn_params(net),
-                                             qps_per_conn=4), **kw)
+                      roce_params=make_roce_params(net, qps_per_conn=4),
+                      **kw)
     raise ValueError(transport)
 
 

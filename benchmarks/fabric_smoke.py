@@ -1,10 +1,14 @@
 """2k-tick fabric smoke run — catches perf regressions on the jitted path.
 
 Runs a 16-host permutation on the 4x4 multi-queue fabric twice (cold =
-compile + run, warm = run only) and prints wall times and warm ticks/sec.
+compile + run, warm = run only) and prints wall times and warm ticks/sec —
+once per protocol: the STrack fast path AND the ported RoCEv2 (DCQCN +
+go-back-N + PFC) baseline, so a regression in either leg fails CI fast.
 ``make smoke`` chains this after the tier-1 tests.
 
-    PYTHONPATH=src python -m benchmarks.fabric_smoke [n_ticks]
+    PYTHONPATH=src python -m benchmarks.fabric_smoke [n_ticks] [protocol]
+
+``protocol`` is ``strack``, ``rocev2`` or ``all`` (default).
 """
 from __future__ import annotations
 
@@ -17,10 +21,10 @@ from repro.sim.topology import full_bisection
 from repro.sim.workloads import permutation_scenario
 
 
-def main(n_ticks: int = 2000) -> None:
+def run_one(protocol: str, n_ticks: int) -> None:
     sc = permutation_scenario(full_bisection(4, 4), 64 * 2 ** 10,
                               net=NetworkSpec())
-    cfg = FabricConfig(net=sc.net)
+    cfg = FabricConfig(net=sc.net, protocol=protocol)
     t0 = time.time()
     _, m = run_fabric(sc.topo, sc.flows, n_ticks, cfg)
     cold_s = time.time() - t0
@@ -30,11 +34,24 @@ def main(n_ticks: int = 2000) -> None:
     s = summarize(m)
     assert s["unfinished"] == 0, s
     assert s["drops"] == 0, s
-    print(f"fabric-smoke ok: {n_ticks} ticks x 16 flows on 4x4 fat-tree | "
-          f"cold {cold_s:.2f}s (jit+run), warm {warm_s:.2f}s "
+    if protocol == "rocev2":
+        # lossless canary: this light permutation must neither pause (a
+        # nonzero count here means the PFC accounting leaked) nor stall
+        # (go-back-N/DCQCN livelock would blow the FCT out)
+        assert s["pauses"] == 0, s
+        assert s["max_fct"] < 50.0, s
+    print(f"fabric-smoke[{protocol}] ok: {n_ticks} ticks x 16 flows on 4x4 "
+          f"fat-tree | cold {cold_s:.2f}s (jit+run), warm {warm_s:.2f}s "
           f"({n_ticks / warm_s:,.0f} ticks/s) | "
-          f"max_fct {s['max_fct']:.1f}us")
+          f"max_fct {s['max_fct']:.1f}us pauses {s['pauses']}")
+
+
+def main(n_ticks: int = 2000, protocol: str = "all") -> None:
+    for proto in (("strack", "rocev2") if protocol == "all"
+                  else (protocol,)):
+        run_one(proto, n_ticks)
 
 
 if __name__ == "__main__":
-    main(int(sys.argv[1]) if len(sys.argv) > 1 else 2000)
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 2000,
+         sys.argv[2] if len(sys.argv) > 2 else "all")

@@ -11,25 +11,37 @@ import statistics
 
 from repro.core.params import NetworkSpec
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import run_incast
+from repro.sim.workloads import incast_scenario, run_incast, run_on_fabric
 
 from .common import make_sim, timed
 
 
 def run_fct(fan_in: int = 8, msg: float = 512 * 2 ** 10, topo_kw=None,
-            seed: int = 0):
-    """Fig 19: STrack vs RoCEv2 incast completion parity."""
+            seed: int = 0, backend: str = "fabric"):
+    """Fig 19: STrack vs RoCEv2 incast completion parity.
+
+    Both legs run on the jitted fabric by default (STrack lossy, RoCEv2
+    lossless with PFC); ``backend="events"`` uses the oracle instead.
+    """
     topo_kw = topo_kw or dict(n_tor=4, hosts_per_tor=max(4, fan_in // 2))
     rows = []
     fcts = {}
     for tr in ("strack", "roce"):
         net = NetworkSpec()
         topo = full_bisection(**topo_kw)
-        sim = make_sim(tr, topo, net, seed=seed)
-        res, wall = timed(run_incast, sim, fan_in, msg, until=2e6, seed=seed)
+        if backend == "fabric":
+            sc = incast_scenario(topo, fan_in, msg, net=net, seed=seed)
+            res, wall = timed(
+                run_on_fabric, sc,
+                protocol="rocev2" if tr == "roce" else "strack")
+        else:
+            sim = make_sim(tr, topo, net, seed=seed)
+            res, wall = timed(run_incast, sim, fan_in, msg, until=2e6,
+                              seed=seed)
         fcts[tr] = res["max_fct"]
         rows.append({"fig": "19", "workload": f"incast_{fan_in}to1",
                      "msg": msg, "transport": tr,
+                     "backend": res.get("backend", "events"),
                      "max_fct_us": res["max_fct"], "drops": res["drops"],
                      "pauses": res["pauses"],
                      "unfinished": res["unfinished"], "wall_s": wall})

@@ -4,27 +4,30 @@ link failures (asymmetric network).
 Validates: STrack's joint CC+LB keeps winning (up to 3x / 6x in the paper);
 adaptive spray beats oblivious especially with failed links (60% in paper).
 
-STrack spray variants (adaptive / oblivious / fixed-path pinning) run on
-the jitted multi-queue fabric; the RoCEv2 baseline runs on the event
-oracle.  The scenario objects are shared, so both backends see the same
-flows on the same (oversubscribed / dead-link) topology.
+All transports run on the jitted multi-queue fabric: STrack spray variants
+(adaptive / oblivious / fixed-path pinning) AND the RoCEv2/DCQCN/PFC
+baseline.  The scenario objects are shared, so every leg sees the same
+flows on the same (oversubscribed / dead-link) topology.  Pass
+``backend="events"`` to fall back to the oracle.
 """
 from __future__ import annotations
 
 from repro.core.params import NetworkSpec
 from repro.sim.workloads import linkdown_scenario, oversub_scenario
 
-from .common import (FABRIC_LB, QUICK_TOPO, run_events_transport,
+from .common import (FABRIC_TRANSPORTS, QUICK_TOPO, run_events_transport,
                      run_fabric_transport, timed)
 
 
 def _run_matrix(sc, fig: str, workload: str, msg: float, seed: int,
-                until: float = 1e6):
+                until: float = 1e6, backend: str = "fabric"):
     rows = []
     fcts = {}
-    for tr in list(FABRIC_LB) + ["roce"]:
-        if tr in FABRIC_LB:
+    for tr in FABRIC_TRANSPORTS:
+        if backend == "fabric":
             res, wall = timed(run_fabric_transport, tr, sc)
+        elif tr == "strack-fixed":
+            continue  # single-path pinning only exists on the fabric
         else:
             (res, _), wall = timed(run_events_transport, tr, sc,
                                    until=until, seed=seed)
@@ -36,7 +39,9 @@ def _run_matrix(sc, fig: str, workload: str, msg: float, seed: int,
                      "unfinished": res["unfinished"], "wall_s": wall})
     rows[-1]["speedup_vs_roce"] = fcts["roce"] / fcts["strack"]
     rows[-1]["adaptive_vs_oblivious"] = fcts["strack-obl"] / fcts["strack"]
-    rows[-1]["adaptive_vs_fixed"] = fcts["strack-fixed"] / fcts["strack"]
+    if "strack-fixed" in fcts:
+        rows[-1]["adaptive_vs_fixed"] = (fcts["strack-fixed"]
+                                         / fcts["strack"])
     return rows
 
 

@@ -4,10 +4,13 @@ Validates: STrack >> RoCEv2 (up to 6.3x in the paper at 8K nodes), adaptive
 spray > oblivious spray for large messages, and queue-delay settling
 (Fig. 8).  Reduced scale: 16-256 hosts vs the paper's 8192.
 
-STrack spray variants (adaptive / oblivious / fixed-path) run on the jitted
-multi-queue fabric (``repro.sim.fabric``) — one XLA program per run; the
-RoCEv2 baselines run on the event oracle (PFC/go-back-N only exist there).
-Pass ``backend="events"`` to run everything on the oracle instead.
+Both legs of the figure run on the jitted multi-queue fabric
+(``repro.sim.fabric``): STrack spray variants AND the RoCEv2/DCQCN/PFC
+baseline — one XLA program per (transport, message size), with a
+vmap-over-seeds sweep (``run_seed_sweep_on_fabric``) batching ``--seeds``
+repetitions into a single jit.  Only the 4-QP striped RoCEv2 variant still
+uses the event oracle.  Pass ``backend="events"`` to run everything on the
+oracle instead.
 """
 from __future__ import annotations
 
@@ -15,13 +18,28 @@ from repro.core.params import NetworkSpec
 from repro.sim.topology import full_bisection
 from repro.sim.workloads import permutation_scenario
 
-from .common import (FABRIC_LB, MSG_SIZES_QUICK, QUICK_TOPO, TRANSPORTS,
-                     run_events_transport, run_fabric_transport, timed)
+from .common import (FABRIC_TRANSPORTS, MSG_SIZES_QUICK, QUICK_TOPO,
+                     TRANSPORTS, run_events_transport,
+                     sweep_fabric_transport, timed)
+
+
+def _agg_seeds(per_seed: list) -> dict:
+    """Collapse a seed sweep into one row: mean FCTs/drops across seeds
+    (the per-seed values ride along under ``*_seeds``)."""
+    n = len(per_seed)
+    out = dict(per_seed[0])
+    for k in ("max_fct", "avg_fct", "drops", "pauses"):
+        out[k] = sum(r[k] for r in per_seed) / n
+    out["unfinished"] = sum(r["unfinished"] for r in per_seed)
+    out["max_fct_seeds"] = [r["max_fct"] for r in per_seed]
+    if "queue_settle_us" in per_seed[0]:
+        out["queue_settle_us"] = max(r["queue_settle_us"] for r in per_seed)
+    return out
 
 
 def run(quick: bool = True, link_gbps: float = 400.0, msg_sizes=None,
         topo_kw=None, seed: int = 0, trace_queues: bool = False,
-        backend: str = "fabric"):
+        backend: str = "fabric", seeds: int = 1):
     topo_kw = topo_kw or QUICK_TOPO
     msg_sizes = msg_sizes or MSG_SIZES_QUICK
     rows = []
@@ -30,12 +48,17 @@ def run(quick: bool = True, link_gbps: float = 400.0, msg_sizes=None,
         topo = full_bisection(**topo_kw)
         sc = permutation_scenario(topo, msg, net=net, seed=seed)
         fcts = {}
-        transports = (list(FABRIC_LB) + ["roce", "roce4"]
+        transports = (FABRIC_TRANSPORTS + ["roce4"]
                       if backend == "fabric" else TRANSPORTS)
         for tr in transports:
-            if backend == "fabric" and tr in FABRIC_LB:
-                res, wall = timed(run_fabric_transport, tr, sc)
-                queue_settle = None
+            if backend == "fabric" and tr in FABRIC_TRANSPORTS:
+                scs = [permutation_scenario(topo, msg, net=net,
+                                            seed=seed + i)
+                       for i in range(seeds)]
+                per_seed, wall = timed(sweep_fabric_transport, tr, scs,
+                                       trace_queues=trace_queues)
+                res = _agg_seeds(per_seed)
+                queue_settle = res.get("queue_settle_us")
             else:
                 (res, sim), wall = timed(run_events_transport, tr, sc,
                                          until=5e5, seed=seed,
@@ -49,6 +72,7 @@ def run(quick: bool = True, link_gbps: float = 400.0, msg_sizes=None,
                 "fig": "9-11", "workload": "permutation",
                 "backend": res.get("backend", "events"),
                 "link_gbps": link_gbps, "msg": msg, "transport": tr,
+                "seeds": seeds if tr in FABRIC_TRANSPORTS else 1,
                 "max_fct_us": res["max_fct"], "avg_fct_us": res["avg_fct"],
                 "drops": res["drops"], "unfinished": res["unfinished"],
                 "wall_s": wall,
@@ -68,12 +92,15 @@ def main():
     ap.add_argument("--trace-queues", action="store_true")
     ap.add_argument("--backend", choices=["fabric", "events"],
                     default="fabric")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="vmap this many seeds per fabric run")
     args = ap.parse_args()
     from .common import FULL_TOPO, MSG_SIZES_FULL
     rows = run(quick=not args.full, link_gbps=args.link_gbps,
                msg_sizes=MSG_SIZES_FULL if args.full else None,
                topo_kw=FULL_TOPO if args.full else None,
-               trace_queues=args.trace_queues, backend=args.backend)
+               trace_queues=args.trace_queues, backend=args.backend,
+               seeds=args.seeds)
     for r in rows:
         print(r)
 

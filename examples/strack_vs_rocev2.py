@@ -1,10 +1,11 @@
 """The paper's headline comparison: permutation + incast + one collective,
 STrack vs RoCEv2.
 
-STrack (adaptive and oblivious spray) runs on the jitted multi-queue
-fat-tree fabric — one XLA program per run; the RoCEv2 baseline runs on the
-event-driven oracle (PFC/go-back-N live there).  Both backends consume the
-same scenario objects, so the flows and topology are identical.
+BOTH legs run on the jitted multi-queue fat-tree fabric — STrack (adaptive
+and oblivious spray, lossy) and the RoCEv2 baseline (DCQCN + go-back-N,
+lossless via the fabric's PFC pause model) — one XLA program per run, over
+identical scenario objects.  Only the dependency-scheduled collective trace
+at the end still uses the event-driven oracle.
 
     PYTHONPATH=src python examples/strack_vs_rocev2.py
 """
@@ -13,8 +14,7 @@ from repro.core.params import NetworkSpec
 from repro.sim.events import NetSim
 from repro.sim.topology import full_bisection
 from repro.sim.workloads import (TraceRunner, incast_scenario,
-                                 permutation_scenario, run_on_events,
-                                 run_on_fabric)
+                                 permutation_scenario, run_on_fabric)
 
 
 def main():
@@ -29,8 +29,7 @@ def main():
             ("strack", lambda: run_on_fabric(sc, lb_mode="adaptive")),
             ("strack-oblivious",
              lambda: run_on_fabric(sc, lb_mode="oblivious")),
-            ("roce", lambda: run_on_events(sc, transport="roce",
-                                           until=1e6))]:
+            ("roce", lambda: run_on_fabric(sc, protocol="rocev2"))]:
         r = runner()
         res[tr] = r["max_fct"]
         print(f"  {tr:18s} max FCT = {r['max_fct']:8.1f} us   "
@@ -44,8 +43,7 @@ def main():
     sc = incast_scenario(topo, 8, 512 * 2 ** 10, net=net)
     for tr, runner in [
             ("strack", lambda: run_on_fabric(sc)),
-            ("roce", lambda: run_on_events(sc, transport="roce",
-                                           until=2e6))]:
+            ("roce", lambda: run_on_fabric(sc, protocol="rocev2"))]:
         r = runner()
         print(f"  {tr:18s} max FCT = {r['max_fct']:8.1f} us   "
               f"drops={r['drops']} pauses={r['pauses']} "

@@ -186,3 +186,8 @@ class RoCEParams:
     ecn_kmax_bdp: float = 1.0
     pfc_xoff_bytes: float = 512 * 1024.0   # per-ingress pause threshold
     pfc_xon_frac: float = 0.5
+
+
+def make_roce_params(net: NetworkSpec, *, qps_per_conn: int = 1) -> RoCEParams:
+    """RoCEv2 baseline config scaled to ``net`` (DCQCN steps follow rate)."""
+    return RoCEParams(dcqcn=make_dcqcn_params(net), qps_per_conn=qps_per_conn)

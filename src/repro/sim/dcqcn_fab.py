@@ -1,0 +1,287 @@
+"""RoCEv2 on the fast path — DCQCN + go-back-N as fixed-shape JAX transitions.
+
+The jnp mirror of the event oracle's RoCEv2 engines (``core/ref.py``:
+``RoCESender`` / ``RoCEReceiver`` / ``DCQCNState``), shaped so the jitted
+fabric can ``vmap`` them across flows exactly like the STrack engines in
+``core/transport.py``:
+
+  * **DCQCN** (Zhu et al., SIGCOMM'15): rate-based CC — the receiver turns
+    ECN marks into CNPs (at most one per ``cnp_interval_us`` per flow), the
+    sender cuts ``rate *= 1 - alpha/2`` per CNP, ewma's alpha, and recovers
+    through fast-recovery / additive-increase / hyper-increase stages driven
+    by the byte counter and the rate timer.  Constants come from
+    ``core.params.make_dcqcn_params``.
+  * **Go-back-N**: the receiver only accepts in-order PSNs; a gap produces a
+    NACK carrying the expected PSN and the sender rewinds ``psn_next`` to it,
+    retransmitting the whole tail.  An RTO rewind covers tail drops.
+  * Single path: each flow carries one fixed entropy value (one QP), as in
+    the paper's un-striped RoCEv2 baseline.
+
+Everything here is a pure function over :class:`RoceFlow` / :class:`RoceRcv`
+NamedTuples; ``fabric.make_rocev2_protocol`` packages them into the
+fabric's :class:`~repro.sim.fabric.Protocol` dispatch record.  The PFC pause
+model itself lives in the fabric's queue layer (it is a switch property,
+not a flow property).  Times in us, sizes in bytes, rates in bytes/us.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.params import DCQCNParams, NetworkSpec, RoCEParams
+
+
+@dataclasses.dataclass(frozen=True)
+class RoceFabParams:
+    """Scalars the vmapped RoCEv2 transitions close over."""
+
+    dcqcn: DCQCNParams
+    mtu_bytes: int
+    line_rate_Bpus: float
+    window_pkts: float         # static send window (lossless net): ~1 BDP
+    rto_us: float
+    ack_coalesce_pkts: int
+    cnp_interval_us: float
+    tick_us: float             # pacing comparisons tolerate half a tick
+
+
+def make_roce_fab_params(net: NetworkSpec, rp: RoCEParams) -> RoceFabParams:
+    return RoceFabParams(
+        dcqcn=rp.dcqcn,
+        mtu_bytes=net.mtu_bytes,
+        line_rate_Bpus=net.rate_Bpus,
+        window_pkts=net.bdp_pkts,
+        rto_us=rp.rto_us,
+        ack_coalesce_pkts=rp.ack_coalesce_pkts,
+        cnp_interval_us=rp.dcqcn.cnp_interval_us,
+        tick_us=net.mtu_serialize_us,
+    )
+
+
+class RoceFlow(NamedTuple):
+    """Sender state: go-back-N window + DCQCN rate machine."""
+
+    snd_una: jax.Array        # i32: cumulative ack point
+    psn_next: jax.Array       # i32
+    total_pkts: jax.Array     # i32
+    rate: jax.Array           # f32, bytes/us (current sending rate)
+    target: jax.Array         # f32, bytes/us (fast-recovery target)
+    alpha: jax.Array          # f32: ECN ewma
+    t_stage: jax.Array        # i32: rate-timer stages since last CNP
+    b_stage: jax.Array        # i32: byte-counter stages since last CNP
+    bytes_ctr: jax.Array      # f32
+    last_rate_ts: jax.Array   # f32
+    last_alpha_ts: jax.Array  # f32
+    next_send_ts: jax.Array   # f32: pacing gate
+    rto_deadline: jax.Array   # f32
+    entropy: jax.Array        # i32: fixed path (one QP)
+    retransmits: jax.Array    # i32
+
+
+class RoceRcv(NamedTuple):
+    """In-order-only receiver: cumulative ACKs, NACKs on gaps, CNPs on ECN."""
+
+    epsn: jax.Array           # i32
+    total_pkts: jax.Array     # i32
+    since_ack: jax.Array      # i32: packets since last cumulative ack
+    last_cnp_ts: jax.Array    # f32
+    bytes_recvd: jax.Array    # f32
+
+
+class RoceMsg(NamedTuple):
+    """Return-pipe wire format (the RoCE analogue of ``SackMsg``).
+
+    One delivered data packet can produce a CNP *and* an ACK/NACK in the
+    oracle; here they ride the same pipe slot and ``roce_on_ack`` applies
+    both effects.
+    """
+
+    valid: jax.Array          # bool: any of ack/nack/cnp present
+    ack: jax.Array            # bool
+    nack: jax.Array           # bool
+    cnp: jax.Array            # bool
+    epsn: jax.Array           # i32 (for ack/nack)
+    bytes_recvd: jax.Array    # f32
+
+
+def init_roce_flow(p: RoceFabParams, total_pkts, entropy,
+                   now: float = 0.0) -> RoceFlow:
+    f = lambda v: jnp.full((), v, jnp.float32)
+    i = lambda v: jnp.asarray(v, jnp.int32)
+    return RoceFlow(
+        snd_una=i(0), psn_next=i(0), total_pkts=i(total_pkts),
+        rate=f(p.line_rate_Bpus), target=f(p.line_rate_Bpus),
+        alpha=f(1.0), t_stage=i(0), b_stage=i(0), bytes_ctr=f(0.0),
+        last_rate_ts=f(now), last_alpha_ts=f(now), next_send_ts=f(now),
+        rto_deadline=f(now + p.rto_us), entropy=i(entropy),
+        retransmits=i(0))
+
+
+def init_roce_rcv(total_pkts) -> RoceRcv:
+    return RoceRcv(epsn=jnp.zeros((), jnp.int32),
+                   total_pkts=jnp.asarray(total_pkts, jnp.int32),
+                   since_ack=jnp.zeros((), jnp.int32),
+                   last_cnp_ts=jnp.full((), -1e18, jnp.float32),
+                   bytes_recvd=jnp.zeros((), jnp.float32))
+
+
+def empty_roce_msgs(h: int, n: int) -> RoceMsg:
+    z = lambda dt: jnp.zeros((h, n), dt)
+    return RoceMsg(valid=z(bool), ack=z(bool), nack=z(bool), cnp=z(bool),
+                   epsn=z(jnp.int32), bytes_recvd=z(jnp.float32))
+
+
+def roce_done(fs: RoceFlow) -> jax.Array:
+    return fs.snd_una >= fs.total_pkts
+
+
+def _increase(p: DCQCNParams, rate, target, t_stage, b_stage, max_rate):
+    """DCQCN phase step: hyper when BOTH counters passed F, additive when
+    EITHER did, else fast recovery (rate -> (rate+target)/2)."""
+    hyper = jnp.minimum(t_stage, b_stage) > p.f_fast_recovery
+    addi = jnp.maximum(t_stage, b_stage) > p.f_fast_recovery
+    target = jnp.where(hyper, jnp.minimum(target + p.hai_mbps, max_rate),
+                       jnp.where(addi,
+                                 jnp.minimum(target + p.rai_mbps, max_rate),
+                                 target))
+    rate = jnp.minimum((rate + target) / 2.0, max_rate)
+    return rate, target
+
+
+def roce_next_packet(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
+    """on_sending_packet: window + pacing gate, byte-counter stage update.
+
+    Returns (new_state, (valid, psn, entropy, is_rtx)). The caller only
+    commits ``new_state`` for the flow its NIC actually selected this tick.
+    """
+    now = jnp.asarray(now, jnp.float32)
+    dc = p.dcqcn
+    done = roce_done(fs)
+    # half-a-tick pacing tolerance: f32 `now` accumulates rounding error and
+    # an exact >= comparison would skip ticks at line rate
+    can = (~done) & (fs.psn_next < fs.total_pkts) \
+        & (now + 0.5 * p.tick_us >= fs.next_send_ts) \
+        & ((fs.psn_next - fs.snd_una).astype(jnp.float32) < p.window_pkts)
+    psn = fs.psn_next
+    is_rtx = can & (psn < fs.snd_una)  # never true: kept for TxPacket shape
+
+    # DCQCN byte counter (oracle: on_bytes_sent before pacing the next send)
+    bytes_ctr = fs.bytes_ctr + jnp.float32(p.mtu_bytes)
+    b_hit = bytes_ctr >= dc.byte_counter
+    b_stage = fs.b_stage + b_hit.astype(jnp.int32)
+    inc_rate, inc_target = _increase(dc, fs.rate, fs.target, fs.t_stage,
+                                     b_stage, p.line_rate_Bpus)
+    rate = jnp.where(b_hit, inc_rate, fs.rate)
+    target = jnp.where(b_hit, inc_target, fs.target)
+    bytes_ctr = jnp.where(b_hit, 0.0, bytes_ctr)
+
+    next_send_ts = now + p.mtu_bytes / jnp.maximum(rate, 1e-9)
+    new = fs._replace(
+        psn_next=psn + 1,
+        rate=rate, target=target,
+        b_stage=b_stage, bytes_ctr=bytes_ctr,
+        next_send_ts=next_send_ts)
+    new = jax.tree.map(lambda n_, o: jnp.where(can, n_, o), new, fs)
+    return new, (can, psn, fs.entropy, is_rtx)
+
+
+def roce_on_ack(fs: RoceFlow, p: RoceFabParams, msg: RoceMsg,
+                now: jax.Array) -> RoceFlow:
+    """Apply one return-pipe message: CNP rate cut, then ACK/NACK."""
+    now = jnp.asarray(now, jnp.float32)
+    dc = p.dcqcn
+
+    # --- CNP: multiplicative cut + alpha ewma + stage reset ---
+    cnp = msg.valid & msg.cnp
+    rate = jnp.where(cnp,
+                     jnp.maximum(fs.rate * (1 - fs.alpha / 2),
+                                 dc.min_rate_Bpus), fs.rate)
+    target = jnp.where(cnp, fs.rate, fs.target)
+    alpha = jnp.where(cnp, (1 - dc.g) * fs.alpha + dc.g, fs.alpha)
+    t_stage = jnp.where(cnp, 0, fs.t_stage)
+    b_stage = jnp.where(cnp, 0, fs.b_stage)
+    bytes_ctr = jnp.where(cnp, 0.0, fs.bytes_ctr)
+    last_rate_ts = jnp.where(cnp, now, fs.last_rate_ts)
+    last_alpha_ts = jnp.where(cnp, now, fs.last_alpha_ts)
+
+    # --- cumulative ack / go-back-N rewind ---
+    acked = msg.valid & (msg.ack | msg.nack)
+    adv = acked & (msg.epsn > fs.snd_una)
+    snd_una = jnp.where(adv, msg.epsn, fs.snd_una)
+    nack = msg.valid & msg.nack
+    rewind_to = jnp.maximum(snd_una, msg.epsn)
+    retransmits = fs.retransmits + jnp.where(
+        nack, jnp.maximum(fs.psn_next - msg.epsn, 0), 0)
+    psn_next = jnp.where(nack, rewind_to, fs.psn_next)
+    rto_deadline = jnp.where(adv | nack, now + p.rto_us, fs.rto_deadline)
+
+    return fs._replace(
+        snd_una=snd_una, psn_next=psn_next,
+        rate=rate, target=target, alpha=alpha,
+        t_stage=t_stage, b_stage=b_stage, bytes_ctr=bytes_ctr,
+        last_rate_ts=last_rate_ts, last_alpha_ts=last_alpha_ts,
+        rto_deadline=rto_deadline, retransmits=retransmits)
+
+
+def roce_on_timer(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
+    """Alpha-decay + rate-increase timers, RTO go-back-N rewind.
+
+    Returns (new_state, emit_probe) — RoCEv2 sends no probes, so the probe
+    flag is always False (the fabric's TxPacket slot stays empty).
+    """
+    now = jnp.asarray(now, jnp.float32)
+    dc = p.dcqcn
+    active = ~roce_done(fs)
+
+    alpha_due = active & (now - fs.last_alpha_ts >= dc.alpha_timer_us)
+    alpha = jnp.where(alpha_due, (1 - dc.g) * fs.alpha, fs.alpha)
+    last_alpha_ts = jnp.where(alpha_due, now, fs.last_alpha_ts)
+
+    rate_due = active & (now - fs.last_rate_ts >= dc.rate_timer_us)
+    t_stage = fs.t_stage + rate_due.astype(jnp.int32)
+    inc_rate, inc_target = _increase(dc, fs.rate, fs.target, t_stage,
+                                     fs.b_stage, p.line_rate_Bpus)
+    rate = jnp.where(rate_due, inc_rate, fs.rate)
+    target = jnp.where(rate_due, inc_target, fs.target)
+    last_rate_ts = jnp.where(rate_due, now, fs.last_rate_ts)
+
+    rto = active & (now >= fs.rto_deadline)
+    psn_next = jnp.where(rto, fs.snd_una, fs.psn_next)
+    rto_deadline = jnp.where(rto, now + p.rto_us, fs.rto_deadline)
+
+    return fs._replace(
+        alpha=alpha, last_alpha_ts=last_alpha_ts,
+        rate=rate, target=target, t_stage=t_stage,
+        last_rate_ts=last_rate_ts,
+        psn_next=psn_next, rto_deadline=rto_deadline), jnp.zeros((), bool)
+
+
+def roce_on_data(rs: RoceRcv, p: RoceFabParams, psn: jax.Array,
+                 size: jax.Array, ecn: jax.Array, now: jax.Array,
+                 ) -> tuple[RoceRcv, RoceMsg]:
+    """Receiver: cumulative ack (coalesced), NACK on gap, paced CNP on ECN."""
+    now = jnp.asarray(now, jnp.float32)
+    psn = jnp.asarray(psn, jnp.int32)
+
+    cnp = jnp.asarray(ecn, bool) & (now - rs.last_cnp_ts >= p.cnp_interval_us)
+    last_cnp_ts = jnp.where(cnp, now, rs.last_cnp_ts)
+
+    inorder = psn == rs.epsn
+    dup = psn < rs.epsn
+    ooo = psn > rs.epsn
+
+    epsn = jnp.where(inorder, rs.epsn + 1, rs.epsn)
+    bytes_recvd = rs.bytes_recvd + jnp.where(
+        inorder, jnp.asarray(size, jnp.float32), 0.0)
+    since_ack = rs.since_ack + inorder.astype(jnp.int32)
+    ack = (inorder & ((since_ack >= p.ack_coalesce_pkts)
+                      | (epsn >= rs.total_pkts))) | dup
+    since_ack = jnp.where(inorder & ack, 0, since_ack)
+
+    msg = RoceMsg(valid=ack | ooo | cnp, ack=ack, nack=ooo, cnp=cnp,
+                  epsn=epsn, bytes_recvd=bytes_recvd)
+    return RoceRcv(epsn=epsn, total_pkts=rs.total_pkts, since_ack=since_ack,
+                   last_cnp_ts=last_cnp_ts, bytes_recvd=bytes_recvd), msg

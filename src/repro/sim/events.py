@@ -16,9 +16,13 @@ htsim-style discrete-event simulation of the paper's evaluation fabric:
 Transports plug in through the engines in ``repro.core.ref`` (STrack) and
 the RoCEv2/DCQCN baseline.  Times in us, sizes in bytes.
 
-This module is the *semantics oracle*: the jitted multi-queue fabric
-(``fabric.py``, ~1000x faster, STrack-only) is parity-tested against it in
-``tests/test_fabric.py``.  See the sim/ module map in ``fabric.py``.
+This module is the *semantics oracle plus collective-trace runner*: both
+protocols now also run on the jitted multi-queue fabric (``fabric.py`` +
+``dcqcn_fab.py``, ~1000x faster), which is parity-tested against this
+implementation in ``tests/test_fabric.py`` (STrack) and
+``tests/test_fabric_roce.py`` (RoCEv2/PFC).  Dependency-scheduled
+collective traces (figs 21-28) remain event-backend-only.  See the sim/
+module map in ``fabric.py``.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ from typing import Callable, Optional
 
 from ..core import ref
 from ..core.params import (NetworkSpec, RoCEParams, STrackParams,
-                           make_dcqcn_params, make_strack_params)
+                           make_roce_params, make_strack_params)
 from .topology import FatTree
 
 PROP_DELAY_US = 0.5  # per-link propagation (4 links x 2 directions = 8us RTT
@@ -228,7 +232,7 @@ class NetSim:
         self.transport = transport
         self.oblivious = oblivious_spray
         self.sp = strack_params or make_strack_params(net)
-        self.rp = roce_params or RoCEParams(dcqcn=make_dcqcn_params(net))
+        self.rp = roce_params or make_roce_params(net)
         self.now = 0.0
         self.evq: list = []
         self.seq = itertools.count()

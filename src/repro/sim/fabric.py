@@ -1,13 +1,25 @@
-"""Vectorized multi-queue fat-tree fabric — one XLA program, real multipath.
+"""Vectorized multi-queue fat-tree fabric — one XLA program, every protocol.
 
 The jitted counterpart of the ``events.py`` oracle: a 2-tier Clos fabric
 (host NICs -> per-ToR uplink queues -> per-spine downlink queues -> per-host
 downlink queues) simulated as fixed-shape ring-buffer arrays inside a single
-``lax.scan``.  Path entropy now *matters* on the fast path: every packet is
-ECMP-hashed (the jnp mirror of ``topology._mix``) onto a live uplink of its
-source ToR, so the vmapped flow engines in ``core/transport.py`` see
-genuinely divergent per-path ECN/RTT signals and Algorithm 2's spray state
-steers real queues.
+``lax.scan``.  The fabric is *protocol-generic*: per-flow transport logic is
+plugged in through a :class:`Protocol` record of init / on-data / on-ack /
+on-timer / next-packet transition functions, and both of the paper's
+transports run on this fast path:
+
+  * **STrack** (``core/transport.py``): window-based CC + adaptive spray +
+    selective retransmission.  Path entropy matters: every packet is
+    ECMP-hashed (the jnp mirror of ``topology._mix``) onto a live uplink,
+    so Algorithm 2's spray state steers real queues.
+  * **RoCEv2** (``dcqcn_fab.py``): DCQCN rate-based CC + go-back-N, single
+    fixed path per flow — the paper's baseline, previously event-sim-only.
+
+The queue layer also models **PFC** (priority flow control) for lossless
+mode: per-ingress byte accounting against the dynamic shared-buffer
+threshold ``xoff = alpha * free / (1 + alpha)`` (mirroring
+``events.Switch``), with pause/resume masks applied inside the scan —
+a paused fabric queue stops serving, a paused NIC stops injecting.
 
 Time model (1 tick = 1 MTU serialization time at link rate):
 
@@ -17,37 +29,46 @@ Time model (1 tick = 1 MTU serialization time at link rate):
     next hop *this* tick and are eligible for service the next tick, so a
     hop costs >=1 tick of serialization plus any queueing,
   * egress ECN marking on the residual queue depth between Kmin..Kmax
-    (deterministic dither), silent tail drop of data beyond 5 BDP,
-  * SACKs ride a fixed-latency per-flow return pipe covering the base-RTT
-    remainder (propagation + reverse path), as in ``jaxsim.py``.
+    (deterministic dither; RoCEv2 mode uses the 1-BDP DCQCN threshold),
+  * lossy mode tail-drops data beyond 5 BDP; lossless (PFC) mode never
+    drops data — backpressure bounds the queues,
+  * ACK/SACK/CNP messages ride a fixed-latency per-flow return pipe
+    covering the base-RTT remainder, as in ``jaxsim.py``.
 
 sim/ module map
 ---------------
-  topology.py  FatTree: Python Clos model + ECMP hash (shared ground truth)
-  fabric.py    this file — the fast path; >=4-ToR fabrics, adaptive /
-               oblivious / fixed-path spray, dead links, oversubscription
-  jaxsim.py    the 1-queue special case of the fabric (incast Figs 16-20)
-  events.py    discrete-event oracle — STrack *and* RoCEv2/PFC baselines,
-               collective traces; ~1000x slower, used for parity tests
-  workloads.py scenario configs (permutation/incast/oversub/linkdown)
-               runnable on either backend
+  topology.py   FatTree: Python Clos model + ECMP hash (shared ground truth)
+  fabric.py     this file — the fast path for BOTH protocols; >=4-ToR
+                fabrics, spray modes, dead links, oversubscription, PFC
+  dcqcn_fab.py  RoCEv2 (DCQCN + go-back-N) per-flow transitions
+  jaxsim.py     the 1-queue special case of the fabric (incast Figs 16-20)
+  events.py     discrete-event oracle + dependency-scheduled collective
+                traces; ~1000x slower, used for parity tests only
+  workloads.py  scenario configs (permutation/incast/oversub/linkdown)
+                runnable on either backend, plus the vmap seed-sweep helper
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core import reliability as rel
 from ..core import transport as tp
-from ..core.params import NetworkSpec, STrackParams, make_strack_params
+from ..core.params import (NetworkSpec, RoCEParams, STrackParams,
+                           make_roce_params, make_strack_params)
 from ..core.reliability import SackMsg
+from .dcqcn_fab import (RoceFabParams, empty_roce_msgs, init_roce_flow,
+                        init_roce_rcv, make_roce_fab_params, roce_done,
+                        roce_next_packet, roce_on_ack, roce_on_data,
+                        roce_on_timer)
 from .topology import FatTree
 
 LB_MODES = ("adaptive", "oblivious", "fixed")
+PROTOCOLS = ("strack", "rocev2")
 
 
 def ecmp_mix(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
@@ -99,6 +120,127 @@ class ArrayTopo(NamedTuple):
         return self.live_list[tor, k]
 
 
+# --------------------------------------------------------------------------- #
+# Protocol dispatch: the per-flow transport plugged into the fabric
+# --------------------------------------------------------------------------- #
+
+class Protocol(NamedTuple):
+    """Per-flow transport engine record (all fns are per-flow; the fabric
+    vmaps them).  Message pytrees must carry a bool ``valid`` leaf named
+    ``valid`` — the return pipe relies on it.
+
+      init(total_pkts[N], entropy0[N]) -> (flow_states, rcv_states)
+      empty_msgs(h, n)                 -> msg pytree, leading dims (h, n)
+      on_data(rcv, psn, size, ecn, ent, ts, probe, now) -> (rcv, msg)
+      on_ack(flow, msg, now)           -> flow
+      on_timer(flow, now)              -> (flow, TxPacket)
+      next_packet(flow, now)           -> (flow, TxPacket)
+      done(flow)                       -> bool
+      cong_pkts(flow)                  -> f32 window-equivalent in packets
+    """
+
+    name: str
+    uses_spray: bool       # fabric lb_mode applies; else protocol's entropy
+    init: Callable
+    empty_msgs: Callable
+    on_data: Callable
+    on_ack: Callable
+    on_timer: Callable
+    next_packet: Callable
+    done: Callable
+    cong_pkts: Callable
+
+
+def _empty_sack_pipe(p: STrackParams, h: int, n: int) -> SackMsg:
+    z = lambda dt: jnp.zeros((h, n), dt)
+    return SackMsg(valid=z(bool), epsn=z(jnp.int32), sack_base=z(jnp.int32),
+                   sack_bits=jnp.zeros((h, n, p.sack_bitmap_bits), bool),
+                   bytes_recvd=z(jnp.float32), ooo_cnt=z(jnp.int32),
+                   ecn=z(bool), entropy=z(jnp.int32), ts=z(jnp.float32),
+                   probe_reply=z(bool))
+
+
+def make_strack_protocol(p: STrackParams) -> Protocol:
+    """STrack: window CC (Algo 3/4) + spray (Algo 2) + SACK reliability."""
+
+    def init(total_pkts, entropy0):
+        del entropy0  # spray picks paths; no per-flow pinned entropy
+        fl = jax.vmap(lambda tpk: tp.init_flow(p, tpk))(total_pkts)
+        rcv = jax.vmap(rel.init_receiver)(total_pkts)
+        return fl, rcv
+
+    def on_data(r, psn, size, ecn, ent, ts, probe, now):
+        del now
+        return rel.receiver_on_data(r, p, psn, size, ecn, ent, ts, probe)
+
+    return Protocol(
+        name="strack", uses_spray=True, init=init,
+        empty_msgs=lambda h, n: _empty_sack_pipe(p, h, n),
+        on_data=on_data,
+        on_ack=lambda f, m, now: tp.flow_on_sack(f, p, m, now),
+        on_timer=lambda f, now: tp.flow_on_timer(f, p, now),
+        next_packet=lambda f, now: tp.flow_next_packet(f, p, now),
+        done=tp.flow_done,
+        cong_pkts=lambda f: f.cc.cwnd)
+
+
+def make_rocev2_protocol(p: RoceFabParams) -> Protocol:
+    """RoCEv2: DCQCN rate CC + go-back-N, one fixed path per flow."""
+
+    def init(total_pkts, entropy0):
+        fl = jax.vmap(lambda tpk, e: init_roce_flow(p, tpk, e))(
+            total_pkts, entropy0)
+        rcv = jax.vmap(init_roce_rcv)(total_pkts)
+        return fl, rcv
+
+    def on_data(r, psn, size, ecn, ent, ts, probe, now):
+        del ent, ts, probe  # single path; RTT is not a DCQCN signal
+        return roce_on_data(r, p, psn, size, ecn, now)
+
+    def next_packet(f, now):
+        f2, (valid, psn, entropy, is_rtx) = roce_next_packet(f, p, now)
+        return f2, tp.TxPacket(valid=valid, psn=psn, entropy=entropy,
+                               is_rtx=is_rtx, is_probe=jnp.zeros((), bool))
+
+    def on_timer(f, now):
+        f2, probe = roce_on_timer(f, p, now)
+        z = jnp.zeros((), jnp.int32)
+        return f2, tp.TxPacket(valid=probe, psn=z, entropy=f.entropy,
+                               is_rtx=jnp.zeros((), bool), is_probe=probe)
+
+    # window-equivalent in packets: instantaneous rate x base-ish RTT
+    rtt_us = p.window_pkts * p.mtu_bytes / p.line_rate_Bpus
+
+    return Protocol(
+        name="rocev2", uses_spray=False, init=init,
+        empty_msgs=empty_roce_msgs,
+        on_data=on_data,
+        on_ack=lambda f, m, now: jax.tree.map(
+            lambda n_, o: jnp.where(m.valid, n_, o),
+            roce_on_ack(f, p, m, now), f),
+        on_timer=on_timer,
+        next_packet=next_packet,
+        done=roce_done,
+        cong_pkts=lambda f: f.rate * rtt_us / p.mtu_bytes)
+
+
+# --------------------------------------------------------------------------- #
+# PFC: dynamic-threshold pause/resume gate (shared with the unit tests)
+# --------------------------------------------------------------------------- #
+
+def pfc_gate(paused: jax.Array, ingress_bytes: jax.Array,
+             xoff_bytes: jax.Array, xon_frac: float = 0.5) -> jax.Array:
+    """One PFC hysteresis step, elementwise over ingress ports.
+
+    Pause when the port's accounted bytes exceed ``xoff``; once paused, stay
+    paused until they fall below ``xon_frac * xoff`` (``events.Switch``
+    semantics: pause > _xoff(), resume < 0.5 * _xoff()).
+    """
+    pause = ingress_bytes > xoff_bytes
+    resume = ingress_bytes < xon_frac * xoff_bytes
+    return pause | (paused & ~resume)
+
+
 class PktQ(NamedTuple):
     """Ring-buffer packet fields, shape [n_queues + 1, cap] (last row trash)."""
 
@@ -111,34 +253,54 @@ class PktQ(NamedTuple):
 
 
 class FabricState(NamedTuple):
-    flows: tp.FlowState      # vmapped [N]
-    rcv: rel.ReceiverState   # vmapped [N] (one receiver context per flow)
+    flows: NamedTuple        # protocol flow states, vmapped [N]
+    rcv: NamedTuple          # protocol receiver states, vmapped [N]
     q: PktQ                  # [Q+1, cap]
     qhead: jax.Array         # i32[Q+1]
     qsize: jax.Array         # i32[Q+1]
-    pipe: SackMsg            # [H, N]: per-flow SACK return pipe
+    pipe: NamedTuple         # [H, N]: per-flow ACK/SACK/CNP return pipe
     obl_rr: jax.Array        # i32[N]: oblivious-spray round robin
     drops: jax.Array         # i32
     delivered: jax.Array     # f32[N]
     done_tick: jax.Array     # i32[N], -1 until message completion
+    # --- PFC (all-zero and untouched when pfc is off) ---
+    ing_host: jax.Array      # f32[NH]: bytes at ToR(h) from host h's NIC
+    ing_sd: jax.Array        # f32[S, T]: bytes at ToR t from spine s
+    ing_up: jax.Array        # f32[T, S]: bytes at spine s from ToR t
+    paused_nic: jax.Array    # bool[NH]
+    paused_sd: jax.Array     # bool[S, T]: spine_down[s][t] paused by ToR t
+    paused_up: jax.Array     # bool[T, S]: tor_up[t][s] paused by spine s
+    pauses: jax.Array        # i32: cumulative pause (xoff) events
 
 
 @dataclasses.dataclass(frozen=True)
 class FabricConfig:
     net: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
     max_paths: int = 64
-    lb_mode: str = "adaptive"        # adaptive | oblivious | fixed
+    lb_mode: str = "adaptive"        # adaptive | oblivious | fixed (STrack)
     timer_every: int = 8             # ticks between timer sweeps
     delay_ticks: Optional[int] = None  # return-pipe latency override
+    protocol: str = "strack"         # strack | rocev2
+    pfc: Optional[bool] = None       # None -> lossless iff rocev2
+    # Shared-buffer bytes per switch for PFC accounting.  NB: the oracle's
+    # NetSim default is 64 MB, which never pauses at reduced scale; the
+    # fabric default is sized so lossless backpressure is actually exercised
+    # (and ring capacity stays bounded).  Parity tests pass the same value
+    # to both backends.
+    switch_buffer_bytes: float = 4e6
+    pfc_alpha: float = 1.0           # dynamic threshold: a * free / (1 + a)
+    pfc_xon_frac: float = 0.5        # resume below this fraction of xoff
+    roce: Optional[RoCEParams] = None  # rocev2 constant overrides
+    # When set, per-flow QP entropy replays ``random.Random(seed)`` in flow
+    # order — the exact draw sequence NetSim uses — so a seed-aligned
+    # fabric-vs-oracle RoCEv2 run sees identical ECMP collisions.  Default
+    # (None) uses a deterministic hash of (src, dst, flow index).
+    roce_entropy_seed: Optional[int] = None
 
-
-def _empty_sack_pipe(p: STrackParams, h: int, n: int) -> SackMsg:
-    z = lambda dt: jnp.zeros((h, n), dt)
-    return SackMsg(valid=z(bool), epsn=z(jnp.int32), sack_base=z(jnp.int32),
-                   sack_bits=jnp.zeros((h, n, p.sack_bitmap_bits), bool),
-                   bytes_recvd=z(jnp.float32), ooo_cnt=z(jnp.int32),
-                   ecn=z(bool), entropy=z(jnp.int32), ts=z(jnp.float32),
-                   probe_reply=z(bool))
+    @property
+    def pfc_enabled(self) -> bool:
+        return self.pfc if self.pfc is not None else (
+            self.protocol == "rocev2")
 
 
 def _bwhere(mask, new, old):
@@ -162,30 +324,62 @@ def _scatter_add(vec, idx, val, n):
     return jnp.concatenate([vec, pad], 0).at[idx].add(val)[:n]
 
 
-def run_fabric(topo: FatTree,
-               flows: Sequence[Tuple[int, int, float]],
-               n_ticks: int,
-               cfg: FabricConfig = FabricConfig()):
-    """Simulate ``flows`` = [(src_host, dst_host, msg_bytes), ...] on a
-    fat-tree for ``n_ticks``; returns (final_state, per-tick metrics)."""
+def _make_protocol(cfg: FabricConfig):
+    """Resolve cfg -> (Protocol, ecn kmin/kmax in packets)."""
+    net = cfg.net
+    if cfg.protocol == "strack":
+        p = make_strack_params(net, max_paths=cfg.max_paths)
+        proto = make_strack_protocol(p)
+        kmin_p = net.ecn_kmin_bytes / net.mtu_bytes
+        kmax_p = net.ecn_kmax_bytes / net.mtu_bytes
+        target_qdelay_us = p.target_qdelay_us
+    elif cfg.protocol == "rocev2":
+        rp = cfg.roce or make_roce_params(net)
+        proto = make_rocev2_protocol(make_roce_fab_params(net, rp))
+        # "ECN threshold to one BDP for DCQCN" (paper Section 4.1)
+        kmin_p = rp.ecn_kmin_bdp * net.bdp_pkts
+        kmax_p = rp.ecn_kmax_bdp * net.bdp_pkts
+        target_qdelay_us = net.base_rtt_us
+    else:
+        raise ValueError(f"unknown protocol {cfg.protocol!r}; "
+                         f"expected one of {PROTOCOLS}")
+    return proto, kmin_p, kmax_p, target_qdelay_us
+
+
+def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
+                  cfg: FabricConfig):
+    """Build the pure jnp fabric program for fixed (topology, N, ticks).
+
+    Returns ``program(src, dst, total_pkts) -> (final_state, tick_metrics)``
+    — jittable and vmappable (the seed-sweep helper vmaps it over stacked
+    flow arrays).
+    """
     assert cfg.lb_mode in LB_MODES, cfg.lb_mode
     net = cfg.net
-    p = make_strack_params(net, max_paths=cfg.max_paths)
+    proto, kmin_p, kmax_p, _ = _make_protocol(cfg)
+    pfc = cfg.pfc_enabled
     at = ArrayTopo.from_fat_tree(topo)
     T, S, NH = at.n_tor, at.n_spine, at.n_hosts
+    HPT = at.hosts_per_tor
     TS = T * S
     Q = 2 * TS + NH                     # tor_up + spine_down + host_down
-    N = len(flows)
+    N = n_flows
     assert N > 0
 
     tick_us = net.mtu_serialize_us
-    kmin_p = net.ecn_kmin_bytes / net.mtu_bytes
-    kmax_p = net.ecn_kmax_bytes / net.mtu_bytes
     drop_pkts = int(net.drop_bytes // net.mtu_bytes)
+    buffer_pkts = int(cfg.switch_buffer_bytes // net.mtu_bytes)
     # worst-case same-tick arrivals at one queue: every ToR host injecting
     # data+probe (tor_up / host_down) or every spine/ToR handing down a pkt
-    max_extra = max(T, S + 2 * at.hosts_per_tor)
-    hard_pkts = drop_pkts + max_extra   # probes squeeze past the data drop
+    max_extra = max(T, S + 2 * HPT)
+    if pfc:
+        # lossless: PFC backpressure bounds the queues; data is only shed
+        # at the (never-expected) ring hard cap
+        data_drop_pkts = buffer_pkts + max_extra
+        hard_pkts = data_drop_pkts
+    else:
+        data_drop_pkts = drop_pkts
+        hard_pkts = drop_pkts + max_extra  # probes squeeze past data drop
     cap = hard_pkts + max_extra + 2
     if cfg.delay_ticks is not None:
         D = int(cfg.delay_ticks)
@@ -193,209 +387,354 @@ def run_fabric(topo: FatTree,
         D = max(1, round(net.base_rtt_us / tick_us) - 3)
     H = D + 2
 
-    src = jnp.asarray([f[0] for f in flows], jnp.int32)
-    dst = jnp.asarray([f[1] for f in flows], jnp.int32)
-    for s_, d_ in [(f[0], f[1]) for f in flows]:
-        assert 0 <= s_ < NH and 0 <= d_ < NH and s_ != d_, (s_, d_)
-    total_pkts = jnp.asarray(
-        [int(math.ceil(f[2] / net.mtu_bytes)) for f in flows], jnp.int32)
-    src_tor = src // at.hosts_per_tor
-    dst_tor = dst // at.hosts_per_tor
-    same_tor = src_tor == dst_tor
-    iota_n = jnp.arange(N, dtype=jnp.int32)
-    fixed_ent = ecmp_mix(src, dst, iota_n) % p.max_paths
     mtu_f = jnp.float32(net.mtu_bytes)
-
-    fl0 = jax.vmap(lambda tpk: tp.init_flow(p, tpk))(total_pkts)
-    rcv0 = jax.vmap(rel.init_receiver)(total_pkts)
-    q0 = PktQ(flow=jnp.full((Q + 1, cap), -1, jnp.int32),
-              psn=jnp.zeros((Q + 1, cap), jnp.int32),
-              ts=jnp.zeros((Q + 1, cap), jnp.float32),
-              probe=jnp.zeros((Q + 1, cap), bool),
-              ecn=jnp.zeros((Q + 1, cap), bool),
-              ent=jnp.zeros((Q + 1, cap), jnp.int32))
-    st0 = FabricState(
-        flows=fl0, rcv=rcv0, q=q0,
-        qhead=jnp.zeros((Q + 1,), jnp.int32),
-        qsize=jnp.zeros((Q + 1,), jnp.int32),
-        pipe=_empty_sack_pipe(p, H, N),
-        obl_rr=iota_n % p.max_paths,   # stagger oblivious spray starts
-        drops=jnp.zeros((), jnp.int32),
-        delivered=jnp.zeros((N,), jnp.float32),
-        done_tick=jnp.full((N,), -1, jnp.int32))
-
+    buffer_b = jnp.float32(cfg.switch_buffer_bytes)
     qrows = jnp.arange(Q, dtype=jnp.int32)
     is_up_row = qrows < TS
     spine_of_row = jnp.where(is_up_row, qrows % S, (qrows - TS) // T)
+    host_tor = jnp.arange(NH, dtype=jnp.int32) // HPT
 
-    def tick_fn(st: FabricState, t):
-        now = t.astype(jnp.float32) * tick_us
+    def program(src, dst, total_pkts, ent0):
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        total_pkts = jnp.asarray(total_pkts, jnp.int32)
+        src_tor = src // HPT
+        dst_tor = dst // HPT
+        same_tor = src_tor == dst_tor
+        iota_n = jnp.arange(N, dtype=jnp.int32)
+        fixed_ent = ecmp_mix(src, dst, iota_n) % cfg.max_paths
 
-        # ---- 1. serve: every queue pops its head packet ------------------
-        qs = st.qsize[:Q]
-        has = qs > 0
-        hidx = st.qhead[:Q] % cap
-        pop = PktQ(*[f[qrows, hidx] for f in st.q])
-        residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
-        frac = jnp.clip((residual - kmin_p)
-                        / jnp.maximum(kmax_p - kmin_p, 1e-9), 0.0, 1.0)
-        dither = jnp.abs(jnp.sin(t.astype(jnp.float32) * 12.9898
-                                 + qrows.astype(jnp.float32) * 78.233))
-        mark = has & (~pop.probe) & (frac > dither * 0.999)
-        ecn_out = pop.ecn | mark
-        served = has.astype(jnp.int32)
-        qhead = st.qhead.at[:Q].add(served)
-        qsize = st.qsize.at[:Q].add(-served)
+        fl0, rcv0 = proto.init(total_pkts, ent0)
+        q0 = PktQ(flow=jnp.full((Q + 1, cap), -1, jnp.int32),
+                  psn=jnp.zeros((Q + 1, cap), jnp.int32),
+                  ts=jnp.zeros((Q + 1, cap), jnp.float32),
+                  probe=jnp.zeros((Q + 1, cap), bool),
+                  ecn=jnp.zeros((Q + 1, cap), bool),
+                  ent=jnp.zeros((Q + 1, cap), jnp.int32))
+        st0 = FabricState(
+            flows=fl0, rcv=rcv0, q=q0,
+            qhead=jnp.zeros((Q + 1,), jnp.int32),
+            qsize=jnp.zeros((Q + 1,), jnp.int32),
+            pipe=proto.empty_msgs(H, N),
+            obl_rr=iota_n % cfg.max_paths,  # stagger oblivious spray starts
+            drops=jnp.zeros((), jnp.int32),
+            delivered=jnp.zeros((N,), jnp.float32),
+            done_tick=jnp.full((N,), -1, jnp.int32),
+            ing_host=jnp.zeros((NH,), jnp.float32),
+            ing_sd=jnp.zeros((S, T), jnp.float32),
+            ing_up=jnp.zeros((T, S), jnp.float32),
+            paused_nic=jnp.zeros((NH,), bool),
+            paused_sd=jnp.zeros((S, T), bool),
+            paused_up=jnp.zeros((T, S), bool),
+            pauses=jnp.zeros((), jnp.int32))
 
-        fclip = jnp.clip(pop.flow, 0, N - 1)
-        # fabric advance targets (tor_up -> spine_down -> host_down)
-        adv_tgt = jnp.where(
-            is_up_row, TS + spine_of_row * T + dst_tor[fclip],
-            2 * TS + dst[fclip])[:2 * TS]
-        adv_valid = has[:2 * TS]
-        adv = PktQ(flow=pop.flow[:2 * TS], psn=pop.psn[:2 * TS],
-                   ts=pop.ts[:2 * TS], probe=pop.probe[:2 * TS],
-                   ecn=ecn_out[:2 * TS], ent=pop.ent[:2 * TS])
+        def tick_fn(st: FabricState, t):
+            now = t.astype(jnp.float32) * tick_us
 
-        # ---- 2. deliveries -> per-flow receivers (one host = one queue) --
-        del_has = has[2 * TS:]
-        del_flow = fclip[2 * TS:]
-        rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
-        rnew, sack = jax.vmap(
-            lambda r, psn, ecn, ent, ts, pb: rel.receiver_on_data(
-                r, p, psn, mtu_f, ecn, ent, ts, pb))(
-            rrows, pop.psn[2 * TS:], ecn_out[2 * TS:], pop.ent[2 * TS:],
-            pop.ts[2 * TS:], pop.probe[2 * TS:])
-        rnew = _bwhere(del_has, rnew, rrows)
-        rcv = _scatter_rows(st.rcv, rnew,
-                            jnp.where(del_has, del_flow, N), N)
-        delivered = _scatter_add(
-            st.delivered,
-            jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
-            mtu_f, N)
+            # ---- 1. serve: every unpaused queue pops its head packet -----
+            qs = st.qsize[:Q]
+            if pfc:
+                paused_row = jnp.concatenate(
+                    [st.paused_up.reshape(-1), st.paused_sd.reshape(-1),
+                     jnp.zeros((NH,), bool)])
+                has = (qs > 0) & (~paused_row)
+            else:
+                has = qs > 0
+            hidx = st.qhead[:Q] % cap
+            pop = PktQ(*[f[qrows, hidx] for f in st.q])
+            residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
+            frac = jnp.clip((residual - kmin_p)
+                            / jnp.maximum(kmax_p - kmin_p, 1e-9), 0.0, 1.0)
+            dither = jnp.abs(jnp.sin(t.astype(jnp.float32) * 12.9898
+                                     + qrows.astype(jnp.float32) * 78.233))
+            mark = has & (~pop.probe) & (frac > dither * 0.999)
+            ecn_out = pop.ecn | mark
+            served = has.astype(jnp.int32)
+            qhead = st.qhead.at[:Q].add(served)
+            qsize = st.qsize.at[:Q].add(-served)
 
-        # write emitted SACKs into the return pipe, slot t + D
-        sack_valid = sack.valid & del_has
-        wslot = (t + D) % H
-        prow = jax.tree.map(lambda a: a[wslot], st.pipe)
-        prow = _scatter_rows(prow, sack._replace(valid=sack_valid),
-                             jnp.where(sack_valid, del_flow, N), N)
-        pipe = jax.tree.map(lambda a, r: a.at[wslot].set(r), st.pipe, prow)
+            fclip = jnp.clip(pop.flow, 0, N - 1)
+            # fabric advance targets (tor_up -> spine_down -> host_down)
+            adv_tgt = jnp.where(
+                is_up_row, TS + spine_of_row * T + dst_tor[fclip],
+                2 * TS + dst[fclip])[:2 * TS]
+            adv_valid = has[:2 * TS]
+            adv = PktQ(flow=pop.flow[:2 * TS], psn=pop.psn[:2 * TS],
+                       ts=pop.ts[:2 * TS], probe=pop.probe[:2 * TS],
+                       ecn=ecn_out[:2 * TS], ent=pop.ent[:2 * TS])
 
-        # ---- 3. due SACKs reach their senders ----------------------------
-        cur = t % H
-        due = jax.tree.map(lambda a: a[cur], pipe)
-        flows = jax.vmap(lambda f, s_: tp.flow_on_sack(f, p, s_, now))(
-            st.flows, due)
-        pipe = pipe._replace(
-            valid=pipe.valid.at[cur].set(jnp.zeros((N,), bool)))
+            # ---- 2. deliveries -> per-flow receivers (one host = one q) --
+            del_has = has[2 * TS:]
+            del_flow = fclip[2 * TS:]
+            rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
+            rnew, sack = jax.vmap(
+                lambda r, psn, ecn, ent, ts, pb: proto.on_data(
+                    r, psn, mtu_f, ecn, ent, ts, pb, now))(
+                rrows, pop.psn[2 * TS:], ecn_out[2 * TS:], pop.ent[2 * TS:],
+                pop.ts[2 * TS:], pop.probe[2 * TS:])
+            rnew = _bwhere(del_has, rnew, rrows)
+            rcv = _scatter_rows(st.rcv, rnew,
+                                jnp.where(del_has, del_flow, N), N)
+            delivered = _scatter_add(
+                st.delivered,
+                jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
+                mtu_f, N)
 
-        # ---- 4. timers (probes / RTO) every timer_every ticks ------------
-        def timers(fl):
-            return jax.vmap(lambda f: tp.flow_on_timer(f, p, now))(fl)
+            # write emitted messages into the return pipe, slot t + D
+            sack_valid = sack.valid & del_has
+            wslot = (t + D) % H
+            prow = jax.tree.map(lambda a: a[wslot], st.pipe)
+            prow = _scatter_rows(prow, sack._replace(valid=sack_valid),
+                                 jnp.where(sack_valid, del_flow, N), N)
+            pipe = jax.tree.map(lambda a, r: a.at[wslot].set(r),
+                                st.pipe, prow)
 
-        empty_tx = tp.TxPacket(
-            valid=jnp.zeros((N,), bool), psn=jnp.zeros((N,), jnp.int32),
-            entropy=jnp.zeros((N,), jnp.int32),
-            is_rtx=jnp.zeros((N,), bool), is_probe=jnp.zeros((N,), bool))
-        flows, probe_tx = jax.lax.cond(
-            (t % cfg.timer_every) == 0, timers,
-            lambda fl: (fl, empty_tx), flows)
+            # ---- 3. due messages reach their senders ---------------------
+            cur = t % H
+            due = jax.tree.map(lambda a: a[cur], pipe)
+            flows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
+                st.flows, due)
+            pipe = pipe._replace(
+                valid=pipe.valid.at[cur].set(jnp.zeros((N,), bool)))
 
-        # ---- 5. sends: each NIC clocks out <=1 data pkt (RR arbitration) -
-        flows_sent, tx = jax.vmap(
-            lambda f: tp.flow_next_packet(f, p, now))(flows)
-        score = jnp.where(tx.valid, (iota_n - t) % N, N)
-        best = jax.ops.segment_min(score, src, num_segments=NH)
-        sel = tx.valid & (score == best[src])
-        flows = _bwhere(sel, flows_sent, flows)
+            # ---- 4. timers (probes / RTO / DCQCN) every timer_every ticks
+            def timers(fl):
+                return jax.vmap(lambda f: proto.on_timer(f, now))(fl)
 
-        if cfg.lb_mode == "adaptive":
-            ent = tx.entropy
-            ent_probe = probe_tx.entropy
-            obl_rr = st.obl_rr
-        elif cfg.lb_mode == "oblivious":
-            ent = (st.obl_rr + 1) % p.max_paths
-            ent_probe = ent
-            obl_rr = jnp.where(sel, ent, st.obl_rr)
-        else:  # fixed: single-path pinning baseline
-            ent = fixed_ent
-            ent_probe = fixed_ent
-            obl_rr = st.obl_rr
+            empty_tx = tp.TxPacket(
+                valid=jnp.zeros((N,), bool), psn=jnp.zeros((N,), jnp.int32),
+                entropy=jnp.zeros((N,), jnp.int32),
+                is_rtx=jnp.zeros((N,), bool), is_probe=jnp.zeros((N,), bool))
+            flows_t, probe_tx = jax.lax.cond(
+                (t % cfg.timer_every) == 0, timers,
+                lambda fl: (fl, empty_tx), flows)
+            probe_valid = probe_tx.valid
+            if pfc:
+                # A paused NIC emits nothing.  Withhold the timer-state
+                # commit for flows whose probe was blocked (their probe
+                # deadline and spray state stay put), so the probe is
+                # *delayed* until resume — as in the oracle, where it waits
+                # in the paused NIC queue — not silently lost.
+                blocked = probe_tx.valid & st.paused_nic[src]
+                flows = _bwhere(~blocked, flows_t, flows)
+                probe_valid = probe_tx.valid & (~blocked)
+            else:
+                flows = flows_t
 
-        spine = at.ecmp_spine(src, dst, ent)
-        inj_q = jnp.where(same_tor, 2 * TS + dst, src_tor * S + spine)
-        spine_p = at.ecmp_spine(src, dst, ent_probe)
-        inj_qp = jnp.where(same_tor, 2 * TS + dst, src_tor * S + spine_p)
+            # ---- 5. sends: each NIC clocks out <=1 data pkt (RR arb.) ----
+            flows_sent, tx = jax.vmap(
+                lambda f: proto.next_packet(f, now))(flows)
+            score = jnp.where(tx.valid, (iota_n - t) % N, N)
+            best = jax.ops.segment_min(score, src, num_segments=NH)
+            sel = tx.valid & (score == best[src])
+            if pfc:
+                # a paused NIC injects nothing (state update withheld too,
+                # so the flow re-offers the same packet next tick)
+                sel = sel & (~st.paused_nic[src])
+            flows = _bwhere(sel, flows_sent, flows)
 
-        # ---- 6. enqueue: fabric advances + data + probes -----------------
-        cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
-        cand_valid = jnp.concatenate([adv_valid, sel, probe_tx.valid])
-        now_n = jnp.full((N,), now, jnp.float32)
-        zb, ob = jnp.zeros((N,), bool), jnp.ones((N,), bool)
-        cand = PktQ(
-            flow=jnp.concatenate([adv.flow, iota_n, iota_n]),
-            psn=jnp.concatenate([adv.psn, tx.psn, probe_tx.psn]),
-            ts=jnp.concatenate([adv.ts, now_n, now_n]),
-            probe=jnp.concatenate([adv.probe, zb, ob]),
-            ecn=jnp.concatenate([adv.ecn, zb, zb]),
-            ent=jnp.concatenate([adv.ent, ent, ent_probe]))
-        M = 2 * TS + 2 * N
-        # Two-pass enqueue. Pass 1: drop decision from the occupancy bound
-        # qsize + rank-among-valid (over-counts same-tick earlier drops by
-        # design — the queue is at threshold then anyway).  Pass 2: ring
-        # positions from rank-among-ACCEPTED, so accepted packets pack the
-        # ring contiguously and a drop never leaves a stale gap slot.
-        tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
-        same_q = cand_qid[:, None] == cand_qid[None, :]
-        rank_v = jnp.sum(same_q & cand_valid[None, :] & tril,
-                         axis=1).astype(jnp.int32)
-        occ = qsize[cand_qid] + rank_v
-        dropped = cand_valid & (((~cand.probe) & (occ >= drop_pkts))
-                                | (occ >= hard_pkts))
-        accept = cand_valid & (~dropped)
-        rank_a = jnp.sum(same_q & accept[None, :] & tril,
-                         axis=1).astype(jnp.int32)
-        pos = (qhead[cand_qid] + qsize[cand_qid] + rank_a) % cap
-        flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
-        q = PktQ(*[f.reshape(-1).at[flat_idx].set(v).reshape(Q + 1, cap)
-                   for f, v in zip(st.q, cand)])
-        added = jax.ops.segment_sum(
-            accept.astype(jnp.int32),
-            jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
-        qsize = (qsize + added).at[Q].set(0)
-        qhead = qhead.at[Q].set(0)
-        drops = st.drops + jnp.sum(dropped).astype(jnp.int32)
+            if not proto.uses_spray:
+                ent = tx.entropy
+                ent_probe = probe_tx.entropy
+                obl_rr = st.obl_rr
+            elif cfg.lb_mode == "adaptive":
+                ent = tx.entropy
+                ent_probe = probe_tx.entropy
+                obl_rr = st.obl_rr
+            elif cfg.lb_mode == "oblivious":
+                ent = (st.obl_rr + 1) % cfg.max_paths
+                ent_probe = ent
+                obl_rr = jnp.where(sel, ent, st.obl_rr)
+            else:  # fixed: single-path pinning baseline
+                ent = fixed_ent
+                ent_probe = fixed_ent
+                obl_rr = st.obl_rr
 
-        # ---- 7. completion + metrics ------------------------------------
-        done = jax.vmap(tp.flow_done)(flows)
-        done_tick = jnp.where(done & (st.done_tick < 0),
-                              t.astype(jnp.int32), st.done_tick)
+            spine = at.ecmp_spine(src, dst, ent)
+            inj_q = jnp.where(same_tor, 2 * TS + dst, src_tor * S + spine)
+            spine_p = at.ecmp_spine(src, dst, ent_probe)
+            inj_qp = jnp.where(same_tor, 2 * TS + dst,
+                               src_tor * S + spine_p)
 
-        new_st = FabricState(flows=flows, rcv=rcv, q=q, qhead=qhead,
-                             qsize=qsize, pipe=pipe, obl_rr=obl_rr,
-                             drops=drops, delivered=delivered,
-                             done_tick=done_tick)
-        metrics = {
-            "qsize": qsize[:Q],
-            "drops": drops,
-            "done": jnp.sum(done).astype(jnp.int32),
-            "cwnd_mean": jnp.mean(flows.cc.cwnd),
-            "delivered": delivered,
-        }
-        return new_st, metrics
+            # ---- 6. enqueue: fabric advances + data + probes -------------
+            cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
+            cand_valid = jnp.concatenate([adv_valid, sel, probe_valid])
+            now_n = jnp.full((N,), now, jnp.float32)
+            zb, ob = jnp.zeros((N,), bool), jnp.ones((N,), bool)
+            cand = PktQ(
+                flow=jnp.concatenate([adv.flow, iota_n, iota_n]),
+                psn=jnp.concatenate([adv.psn, tx.psn, probe_tx.psn]),
+                ts=jnp.concatenate([adv.ts, now_n, now_n]),
+                probe=jnp.concatenate([adv.probe, zb, ob]),
+                ecn=jnp.concatenate([adv.ecn, zb, zb]),
+                ent=jnp.concatenate([adv.ent, ent, ent_probe]))
+            M = 2 * TS + 2 * N
+            # Two-pass enqueue. Pass 1: drop decision from the occupancy
+            # bound qsize + rank-among-valid (over-counts same-tick earlier
+            # drops by design — the queue is at threshold then anyway).
+            # Pass 2: ring positions from rank-among-ACCEPTED, so accepted
+            # packets pack the ring contiguously and a drop never leaves a
+            # stale gap slot.
+            tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
+            same_q = cand_qid[:, None] == cand_qid[None, :]
+            rank_v = jnp.sum(same_q & cand_valid[None, :] & tril,
+                             axis=1).astype(jnp.int32)
+            occ = qsize[cand_qid] + rank_v
+            dropped = cand_valid & (((~cand.probe) & (occ >= data_drop_pkts))
+                                    | (occ >= hard_pkts))
+            accept = cand_valid & (~dropped)
+            rank_a = jnp.sum(same_q & accept[None, :] & tril,
+                             axis=1).astype(jnp.int32)
+            pos = (qhead[cand_qid] + qsize[cand_qid] + rank_a) % cap
+            flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
+            q = PktQ(*[f.reshape(-1).at[flat_idx].set(v)
+                       .reshape(Q + 1, cap)
+                       for f, v in zip(st.q, cand)])
+            added = jax.ops.segment_sum(
+                accept.astype(jnp.int32),
+                jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
+            qsize = (qsize + added).at[Q].set(0)
+            qhead = qhead.at[Q].set(0)
+            drops = st.drops + jnp.sum(dropped).astype(jnp.int32)
 
-    @jax.jit
-    def run(st):
-        return jax.lax.scan(tick_fn, st,
+            # ---- 6b. PFC: per-ingress accounting + pause/resume masks ----
+            # Ingress attribution is derivable per packet: a packet's port
+            # at any switch follows from (flow src/dst, queue row, entropy),
+            # so the counters are maintained incrementally without storing
+            # a port field in the ring.  All packets are accounted as one
+            # MTU (probes are rare and absent in RoCEv2 mode).
+            if pfc:
+                # dequeues leaving a switch buffer
+                f_up, f_sd, f_hd = (fclip[:TS], fclip[TS:2 * TS],
+                                    fclip[2 * TS:])
+                ing_host = _scatter_add(
+                    st.ing_host, jnp.where(has[:TS], src[f_up], NH),
+                    -mtu_f, NH)
+                sd_i = jnp.arange(TS, dtype=jnp.int32)
+                sd_s = sd_i // T   # spine of spine_down row TS + s*T + t
+                up_flat = st.ing_up.reshape(-1)
+                up_flat = _scatter_add(
+                    up_flat,
+                    jnp.where(has[TS:2 * TS], src_tor[f_sd] * S + sd_s, TS),
+                    -mtu_f, TS)
+                pkt_spine = at.ecmp_spine(src[f_hd], dst[f_hd],
+                                          pop.ent[2 * TS:])
+                hd_same = same_tor[f_hd]
+                served_hd = has[2 * TS:]
+                ing_host = _scatter_add(
+                    ing_host,
+                    jnp.where(served_hd & hd_same, src[f_hd], NH),
+                    -mtu_f, NH)
+                sd_flat = st.ing_sd.reshape(-1)
+                sd_flat = _scatter_add(
+                    sd_flat,
+                    jnp.where(served_hd & (~hd_same),
+                              pkt_spine * T + host_tor, TS),
+                    -mtu_f, TS)
+                # enqueues entering a switch buffer
+                up_i = jnp.arange(TS, dtype=jnp.int32)  # t*S+s of source row
+                up_flat = _scatter_add(
+                    up_flat, jnp.where(accept[:TS], up_i, TS), mtu_f, TS)
+                sd_flat = _scatter_add(
+                    sd_flat, jnp.where(accept[TS:2 * TS], sd_i, TS),
+                    mtu_f, TS)
+                acc_data = accept[2 * TS:2 * TS + N]
+                acc_probe = accept[2 * TS + N:]
+                ing_host = _scatter_add(
+                    ing_host, jnp.where(acc_data, src, NH), mtu_f, NH)
+                ing_host = _scatter_add(
+                    ing_host, jnp.where(acc_probe, src, NH), mtu_f, NH)
+                ing_sd = sd_flat.reshape(S, T)
+                ing_up = up_flat.reshape(T, S)
+
+                # dynamic shared-buffer threshold per switch
+                qsz_b = qsize[:Q].astype(jnp.float32) * mtu_f
+                tor_occ = (qsz_b[:TS].reshape(T, S).sum(1)
+                           + qsz_b[2 * TS:].reshape(T, HPT).sum(1))
+                spine_occ = qsz_b[TS:2 * TS].reshape(S, T).sum(1)
+                a = cfg.pfc_alpha
+                xoff_tor = a * jnp.maximum(buffer_b - tor_occ, 0.0) / (1 + a)
+                xoff_spine = a * jnp.maximum(buffer_b - spine_occ, 0.0) \
+                    / (1 + a)
+
+                paused_nic = pfc_gate(st.paused_nic, ing_host,
+                                      xoff_tor[host_tor], cfg.pfc_xon_frac)
+                paused_sd = pfc_gate(st.paused_sd, ing_sd,
+                                     xoff_tor[None, :], cfg.pfc_xon_frac)
+                paused_up = pfc_gate(st.paused_up, ing_up,
+                                     xoff_spine[None, :], cfg.pfc_xon_frac)
+                pauses = st.pauses + (
+                    jnp.sum(paused_nic & ~st.paused_nic)
+                    + jnp.sum(paused_sd & ~st.paused_sd)
+                    + jnp.sum(paused_up & ~st.paused_up)).astype(jnp.int32)
+            else:
+                ing_host, ing_sd, ing_up = (st.ing_host, st.ing_sd,
+                                            st.ing_up)
+                paused_nic, paused_sd, paused_up = (
+                    st.paused_nic, st.paused_sd, st.paused_up)
+                pauses = st.pauses
+
+            # ---- 7. completion + metrics --------------------------------
+            done = jax.vmap(proto.done)(flows)
+            done_tick = jnp.where(done & (st.done_tick < 0),
+                                  t.astype(jnp.int32), st.done_tick)
+
+            new_st = FabricState(
+                flows=flows, rcv=rcv, q=q, qhead=qhead, qsize=qsize,
+                pipe=pipe, obl_rr=obl_rr, drops=drops, delivered=delivered,
+                done_tick=done_tick, ing_host=ing_host, ing_sd=ing_sd,
+                ing_up=ing_up, paused_nic=paused_nic, paused_sd=paused_sd,
+                paused_up=paused_up, pauses=pauses)
+            metrics = {
+                "qsize": qsize[:Q],
+                "drops": drops,
+                "done": jnp.sum(done).astype(jnp.int32),
+                "cwnd_mean": jnp.mean(jax.vmap(proto.cong_pkts)(flows)),
+                "delivered": delivered,
+                "pauses": pauses,
+                "paused_ports": (jnp.sum(paused_nic) + jnp.sum(paused_sd)
+                                 + jnp.sum(paused_up)).astype(jnp.int32),
+            }
+            return new_st, metrics
+
+        return jax.lax.scan(tick_fn, st0,
                             jnp.arange(n_ticks, dtype=jnp.int32))
 
-    final, metrics = run(st0)
-    done_tick = jax.device_get(final.done_tick)
+    program.dims = dict(T=T, S=S, NH=NH, TS=TS, Q=Q, cap=cap, D=D, H=H)
+    return program
+
+
+def _check_flows(flows, n_hosts: int) -> None:
+    for s_, d_, _ in flows:
+        assert 0 <= s_ < n_hosts and 0 <= d_ < n_hosts and s_ != d_, (s_, d_)
+
+
+def _flow_arrays(flows, cfg: FabricConfig):
+    src = jnp.asarray([f[0] for f in flows], jnp.int32)
+    dst = jnp.asarray([f[1] for f in flows], jnp.int32)
+    total_pkts = jnp.asarray(
+        [int(math.ceil(f[2] / cfg.net.mtu_bytes)) for f in flows], jnp.int32)
+    if cfg.roce_entropy_seed is not None:
+        import random
+        rng = random.Random(cfg.roce_entropy_seed)
+        ent0 = jnp.asarray([rng.randrange(1 << 16) for _ in flows],
+                           jnp.int32)
+    else:
+        # per-flow pinned entropy for non-spray protocols (one QP each, the
+        # analogue of the oracle's rng.randrange(1 << 16))
+        iota_n = jnp.arange(len(flows), dtype=jnp.int32)
+        ent0 = ecmp_mix(src, dst, iota_n + jnp.int32(40503)) % (1 << 16)
+    return src, dst, total_pkts, ent0
+
+
+def _finish_metrics(metrics: dict, done_tick, cfg: FabricConfig,
+                    T: int, S: int, TS: int) -> dict:
+    tick_us = cfg.net.mtu_serialize_us
+    _, _, _, target_qdelay_us = _make_protocol(cfg)
     metrics["tick_us"] = tick_us
-    metrics["target_qdelay_pkts"] = p.target_qdelay_us / tick_us
+    metrics["target_qdelay_pkts"] = target_qdelay_us / tick_us
     metrics["done_tick"] = done_tick
-    # +1: a message is complete when its last SACK lands, i.e. at tick end
+    # +1: a message is complete when its last ACK lands, i.e. at tick end
     metrics["fct_us"] = [
         float((dt + 1) * tick_us) if dt >= 0 else None for dt in done_tick]
     metrics["queue_ids"] = {
@@ -403,11 +742,64 @@ def run_fabric(topo: FatTree,
         "spine_down": lambda s_, t_: TS + s_ * T + t_,
         "host_down": lambda h_: 2 * TS + h_,
     }
+    return metrics
+
+
+def run_fabric(topo: FatTree,
+               flows: Sequence[Tuple[int, int, float]],
+               n_ticks: int,
+               cfg: FabricConfig = FabricConfig()):
+    """Simulate ``flows`` = [(src_host, dst_host, msg_bytes), ...] on a
+    fat-tree for ``n_ticks``; returns (final_state, per-tick metrics)."""
+    _check_flows(flows, topo.n_hosts)
+    src, dst, total_pkts, ent0 = _flow_arrays(flows, cfg)
+    program = _make_program(topo, len(flows), n_ticks, cfg)
+    final, metrics = jax.jit(program)(src, dst, total_pkts, ent0)
+    d = program.dims
+    done_tick = jax.device_get(final.done_tick)
+    metrics = _finish_metrics(metrics, done_tick, cfg,
+                              d["T"], d["S"], d["TS"])
     return final, metrics
 
 
+def run_fabric_batch(topo: FatTree,
+                     flows_batch: Sequence[Sequence[Tuple[int, int, float]]],
+                     n_ticks: int,
+                     cfg: FabricConfig = FabricConfig()):
+    """vmap a batch of same-shape flow lists (e.g. seeds of one workload)
+    through ONE jitted fabric program.
+
+    All batch entries must have the same flow count and run on the same
+    topology/config; returns (stacked_final_state, [metrics_dict_per_entry]).
+    """
+    n = {len(fl) for fl in flows_batch}
+    assert len(n) == 1, f"flow lists must be same-shape, got sizes {n}"
+    for fl in flows_batch:
+        _check_flows(fl, topo.n_hosts)
+    arrs = [_flow_arrays(fl, cfg) for fl in flows_batch]
+    srcs = jnp.stack([a[0] for a in arrs])
+    dsts = jnp.stack([a[1] for a in arrs])
+    pkts = jnp.stack([a[2] for a in arrs])
+    ents = jnp.stack([a[3] for a in arrs])
+    program = _make_program(topo, n.pop(), n_ticks, cfg)
+    finals, stacked = jax.jit(jax.vmap(program))(srcs, dsts, pkts, ents)
+    d = program.dims
+    done_ticks = jax.device_get(finals.done_tick)
+    per_seed = []
+    for i in range(len(flows_batch)):
+        m = {k: v[i] for k, v in stacked.items()}
+        per_seed.append(_finish_metrics(m, done_ticks[i], cfg,
+                                        d["T"], d["S"], d["TS"]))
+    return finals, per_seed
+
+
 def summarize(metrics: dict) -> dict:
-    """Event-oracle-style summary (max/avg FCT, unfinished, drops)."""
+    """Event-oracle-style summary (max/avg FCT, unfinished, drops, pauses).
+
+    Keys match ``workloads._summarize_sim`` so fabric and oracle results are
+    directly comparable; ``pauses`` counts PFC xoff events (0 when PFC is
+    off or the protocol runs lossy).
+    """
     import numpy as np
     fcts = [f for f in metrics["fct_us"] if f is not None]
     return {
@@ -415,5 +807,5 @@ def summarize(metrics: dict) -> dict:
         "avg_fct": sum(fcts) / len(fcts) if fcts else float("nan"),
         "unfinished": sum(1 for f in metrics["fct_us"] if f is None),
         "drops": int(np.asarray(metrics["drops"])[-1]),
-        "pauses": 0,   # the fabric is lossy-only (no PFC)
+        "pauses": int(np.asarray(metrics["pauses"])[-1]),
     }

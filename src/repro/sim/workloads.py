@@ -5,16 +5,20 @@ object — topology + network + an explicit flow list — that runs unchanged
 on either simulator:
 
 * ``run_on_fabric``  — the jitted multi-queue fat-tree (``fabric.py``),
-  STrack only (adaptive / oblivious / fixed-path spray), ~1000x faster;
-* ``run_on_events`` — the discrete-event oracle (``events.py``), STrack
-  *and* RoCEv2/PFC, plus collective traces via :class:`TraceRunner`.
+  running BOTH protocols: STrack (adaptive / oblivious / fixed-path spray)
+  and RoCEv2 (DCQCN + go-back-N, with or without PFC), ~1000x faster;
+  ``run_seed_sweep_on_fabric`` vmaps a batch of same-shape scenarios
+  (e.g. N seeds of one workload) through a single jitted program;
+* ``run_on_events`` — the discrete-event oracle (``events.py``), used for
+  parity testing plus dependency-scheduled collective traces via
+  :class:`TraceRunner`.
 
 Builders cover the paper's evaluation matrix: ``permutation_scenario``
 (Figs 8-11), ``incast_scenario`` (Figs 16-20), ``oversub_scenario``
 (Figs 12-13) and ``linkdown_scenario`` (Figs 14-15).  Both runners return
 the same summary dict (max_fct / avg_fct / unfinished / drops / pauses) so
 results are directly comparable — the parity tests in
-``tests/test_fabric.py`` rely on that.
+``tests/test_fabric.py`` and ``tests/test_fabric_roce.py`` rely on that.
 
 Legacy entry points ``run_permutation(sim, ...)`` / ``run_incast(sim, ...)``
 keep working on a prebuilt :class:`NetSim`.
@@ -24,7 +28,7 @@ from __future__ import annotations
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 from ..core.params import NetworkSpec
 from .events import NetSim
@@ -115,16 +119,93 @@ def linkdown_scenario(topo_kw: dict, frac_links_down: float,
 # Backend runners
 # --------------------------------------------------------------------------- #
 
+def _fabric_cfg(sc: Scenario, lb_mode: str, max_paths: int, protocol: str,
+                pfc: Optional[bool], switch_buffer_bytes: Optional[float],
+                roce_entropy_seed: Optional[int]):
+    from .fabric import FabricConfig
+    kw = dict(net=sc.net, max_paths=max_paths, lb_mode=lb_mode,
+              protocol=protocol, pfc=pfc,
+              roce_entropy_seed=roce_entropy_seed)
+    if switch_buffer_bytes is not None:
+        kw["switch_buffer_bytes"] = switch_buffer_bytes
+    return FabricConfig(**kw)
+
+
+def _queue_settle_us(metrics: dict, threshold_us: float) -> float:
+    """Last simulated time any fabric queue's delay (depth x tick) exceeded
+    ``threshold_us`` — the fabric analogue of the event backend's
+    queue-delay logs (Fig 8 settling time)."""
+    import numpy as np
+    q = np.asarray(metrics["qsize"], dtype=float)      # [ticks, Q]
+    tick = metrics["tick_us"]
+    over = np.nonzero((q * tick > threshold_us).any(axis=1))[0]
+    return float((over[-1] + 1) * tick) if len(over) else 0.0
+
+
 def run_on_fabric(sc: Scenario, n_ticks: Optional[int] = None,
-                  lb_mode: str = "adaptive", max_paths: int = 64) -> dict:
-    """Run a scenario on the jitted fat-tree; event-oracle-style summary."""
-    from .fabric import FabricConfig, run_fabric, summarize
-    cfg = FabricConfig(net=sc.net, max_paths=max_paths, lb_mode=lb_mode)
+                  lb_mode: str = "adaptive", max_paths: int = 64,
+                  protocol: str = "strack", pfc: Optional[bool] = None,
+                  switch_buffer_bytes: Optional[float] = None,
+                  roce_entropy_seed: Optional[int] = None,
+                  trace_queues: bool = False,
+                  qdelay_threshold_us: float = 8.0) -> dict:
+    """Run a scenario on the jitted fat-tree; event-oracle-style summary.
+
+    ``protocol`` selects the transport ("strack" | "rocev2"); ``pfc`` makes
+    the queues lossless (defaults to on for rocev2, off for strack).  With
+    ``trace_queues`` the summary gains ``queue_settle_us`` derived from the
+    per-tick queue-depth traces.
+    """
+    from .fabric import run_fabric, summarize
+    cfg = _fabric_cfg(sc, lb_mode, max_paths, protocol, pfc,
+                      switch_buffer_bytes, roce_entropy_seed)
     _, metrics = run_fabric(sc.topo, sc.flows,
                             n_ticks or sc.default_ticks(), cfg)
     out = summarize(metrics)
     out["backend"] = "fabric"
+    if trace_queues:
+        out["queue_settle_us"] = _queue_settle_us(metrics,
+                                                  qdelay_threshold_us)
     return out
+
+
+def run_seed_sweep_on_fabric(scenarios: Sequence[Scenario],
+                             n_ticks: Optional[int] = None,
+                             lb_mode: str = "adaptive", max_paths: int = 64,
+                             protocol: str = "strack",
+                             pfc: Optional[bool] = None,
+                             switch_buffer_bytes: Optional[float] = None,
+                             roce_entropy_seed: Optional[int] = None,
+                             trace_queues: bool = False,
+                             qdelay_threshold_us: float = 8.0) -> list:
+    """Batch same-shape scenarios (seeds of one workload) into ONE vmapped
+    jit of the fabric — amortizing compile and pipelining the sweep.
+
+    All scenarios must share topology, network and flow count (different
+    src/dst/size patterns are fine — that is the point).  Returns one
+    summary dict per scenario, in order.
+    """
+    from .fabric import run_fabric_batch, summarize
+    assert scenarios, "need at least one scenario"
+    sc0 = scenarios[0]
+    for sc in scenarios[1:]:
+        assert sc.topo == sc0.topo and sc.net == sc0.net, \
+            "seed sweep requires a shared topology and network"
+    cfg = _fabric_cfg(sc0, lb_mode, max_paths, protocol, pfc,
+                      switch_buffer_bytes, roce_entropy_seed)
+    ticks = n_ticks or max(sc.default_ticks() for sc in scenarios)
+    _, per_seed = run_fabric_batch(sc0.topo, [sc.flows for sc in scenarios],
+                                   ticks, cfg)
+    outs = []
+    for sc, metrics in zip(scenarios, per_seed):
+        out = summarize(metrics)
+        out["backend"] = "fabric"
+        out["name"] = sc.name
+        if trace_queues:
+            out["queue_settle_us"] = _queue_settle_us(metrics,
+                                                      qdelay_threshold_us)
+        outs.append(out)
+    return outs
 
 
 def run_on_events(sc: Scenario, transport: str = "strack",

@@ -1,0 +1,233 @@
+"""RoCEv2 (DCQCN + go-back-N + PFC) on the jitted fabric vs the event
+oracle, plus unit tests of the pieces the port introduced: the go-back-N
+rewind, the DCQCN CNP rate cut, the in-order receiver, and the PFC
+pause/resume hysteresis gate.
+
+Parity runs pin ``roce_entropy_seed`` to the oracle's NetSim seed so both
+backends assign identical per-flow QP entropies — the ECMP hash is
+bit-exact, so the two simulators then contend on the *same* links and the
+tick-quantisation tolerance bands stay meaningful.
+"""
+import numpy as np
+import pytest
+
+from repro.core.params import NetworkSpec, make_roce_params
+from repro.sim.dcqcn_fab import (RoceMsg, init_roce_flow, init_roce_rcv,
+                                 make_roce_fab_params, roce_done,
+                                 roce_next_packet, roce_on_ack,
+                                 roce_on_data, roce_on_timer)
+from repro.sim.fabric import FabricConfig, pfc_gate, run_fabric, summarize
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import (incast_scenario, permutation_scenario,
+                                 run_on_events, run_on_fabric)
+
+NET = NetworkSpec(link_gbps=400.0)
+TOPO44 = full_bisection(4, 4)        # 16 hosts, 4 ToRs, 4 spines
+SEED = 1234                          # NetSim's default rng seed
+BUF = 1e6                            # small shared buffer => PFC exercised
+
+# fabric is a tick-quantised approximation of the event oracle; completion
+# times must agree within this factor, drops (where any) within 2x
+FCT_TOL = (0.6, 1.6)
+
+
+@pytest.fixture(scope="module")
+def rp():
+    return make_roce_fab_params(NET, make_roce_params(NET))
+
+
+# --------------------------------------------------------------------------- #
+# parity vs the oracle (acceptance: incast + permutation, lossless RoCEv2)
+# --------------------------------------------------------------------------- #
+
+def test_incast_roce_parity_vs_oracle():
+    """8->1 incast, 512KB, lossless: FCTs agree, zero drops, PFC pauses
+    fire on both backends."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    ev = run_on_events(sc, transport="roce", until=2e6, seed=SEED,
+                       switch_buffer_bytes=BUF)
+    fb = run_on_fabric(sc, protocol="rocev2", switch_buffer_bytes=BUF,
+                       roce_entropy_seed=SEED)
+    assert ev["unfinished"] == 0 and fb["unfinished"] == 0
+    r = fb["max_fct"] / ev["max_fct"]
+    assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
+    # lossless on both sides: PFC holds every packet
+    assert ev["drops"] == 0 and fb["drops"] == 0
+    assert ev["pauses"] > 0 and fb["pauses"] > 0, (ev["pauses"],
+                                                   fb["pauses"])
+
+
+def test_permutation_roce_parity_vs_oracle():
+    """16-host permutation, 256KB: single-path DCQCN flows collide on the
+    same ECMP uplinks on both backends; FCTs agree, nothing dropped."""
+    sc = permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET, seed=0)
+    ev = run_on_events(sc, transport="roce", until=1e6, seed=SEED,
+                       switch_buffer_bytes=2e6)
+    fb = run_on_fabric(sc, protocol="rocev2", switch_buffer_bytes=2e6,
+                       roce_entropy_seed=SEED)
+    assert ev["unfinished"] == 0 and fb["unfinished"] == 0
+    r = fb["max_fct"] / ev["max_fct"]
+    assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
+    assert ev["drops"] == 0 and fb["drops"] == 0
+
+
+def test_summary_contract_reports_real_pauses():
+    """summarize() carries the oracle's summary-dict contract, with real
+    pause counts from the PFC model (not the old hardcoded 0)."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    fb = run_on_fabric(sc, protocol="rocev2", switch_buffer_bytes=BUF)
+    assert set(fb) >= {"max_fct", "avg_fct", "unfinished", "drops",
+                       "pauses", "backend"}
+    assert fb["pauses"] > 0
+    # lossy STrack on the same scenario: no PFC, pauses must stay 0
+    st = run_on_fabric(sc)
+    assert st["pauses"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# PFC: hysteresis gate unit test + pause/resume integration
+# --------------------------------------------------------------------------- #
+
+def test_pfc_gate_pause_resume_hysteresis():
+    import jax.numpy as jnp
+    xoff = jnp.asarray([100.0, 100.0, 100.0, 100.0])
+    paused = jnp.asarray([False, True, True, False])
+    ing = jnp.asarray([150.0,   70.0,  30.0,  70.0])
+    out = np.asarray(pfc_gate(paused, ing, xoff, xon_frac=0.5))
+    # above xoff -> pause; paused stays paused until below xon; unpaused
+    # stays unpaused anywhere below xoff
+    assert out.tolist() == [True, True, False, False]
+
+
+def test_pfc_pauses_stop_drain_and_resume():
+    """Integration: a deep lossless incast pauses ingress ports mid-run
+    (queues stop draining, so nothing is dropped) and resumes them once
+    the standing queue falls below the xon threshold."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    cfg = FabricConfig(net=NET, protocol="rocev2",
+                       switch_buffer_bytes=BUF)
+    _, m = run_fabric(sc.topo, sc.flows, sc.default_ticks(), cfg)
+    s = summarize(m)
+    assert s["unfinished"] == 0 and s["drops"] == 0
+    paused = np.asarray(m["paused_ports"])
+    assert paused.max() > 0, "PFC never paused an ingress port"
+    assert paused[-1] == 0, "pauses must clear once the incast drains"
+    # while ports are paused the paused upstream queues stop draining:
+    # pause events and zero drops together are only possible if the
+    # backpressure actually held the excess in upstream buffers
+    assert s["pauses"] > 0
+
+
+def test_lossy_vs_lossless_rocev2():
+    """pfc=False turns the same RoCEv2 run lossy: go-back-N now has to
+    recover real drops, which PFC mode never sees."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    lossless = run_on_fabric(sc, protocol="rocev2",
+                             switch_buffer_bytes=BUF)
+    lossy = run_on_fabric(sc, protocol="rocev2", pfc=False,
+                          n_ticks=30000)
+    assert lossless["drops"] == 0 and lossless["unfinished"] == 0
+    assert lossy["pauses"] == 0
+    assert lossy["drops"] > 0, "8:1 incast into a 5-BDP tail-drop queue " \
+                               "must shed packets without PFC"
+    assert lossy["unfinished"] == 0, "go-back-N failed to recover drops"
+
+
+# --------------------------------------------------------------------------- #
+# go-back-N + DCQCN unit tests (pure transitions, no fabric)
+# --------------------------------------------------------------------------- #
+
+def _send_n(fs, p, n, now=0.0):
+    psns = []
+    for k in range(n):
+        fs, (valid, psn, _, _) = roce_next_packet(fs, p, now + k * p.tick_us)
+        assert bool(valid)
+        psns.append(int(psn))
+    return fs, psns
+
+
+def test_goback_n_nack_retransmits_whole_tail(rp):
+    """One gap NACK rewinds psn_next to the expected PSN: the entire tail
+    after the loss is retransmitted, not just the missing packet."""
+    fs = init_roce_flow(rp, total_pkts=10, entropy=7)
+    fs, psns = _send_n(fs, rp, 6)
+    assert psns == [0, 1, 2, 3, 4, 5]
+    # receiver saw 0,1 then a gap (2 lost): NACK carries epsn=2
+    nack = RoceMsg(valid=np.True_, ack=np.False_, nack=np.True_,
+                   cnp=np.False_, epsn=np.int32(2),
+                   bytes_recvd=np.float32(2 * rp.mtu_bytes))
+    fs = roce_on_ack(fs, rp, nack, now=1.0)
+    assert int(fs.psn_next) == 2, "go-back-N must rewind to the gap"
+    assert int(fs.retransmits) == 4  # 2,3,4,5 all go again
+    fs, psns = _send_n(fs, rp, 4, now=2.0)
+    assert psns == [2, 3, 4, 5], "tail must be resent in order"
+
+
+def test_rto_rewinds_to_snd_una(rp):
+    fs = init_roce_flow(rp, total_pkts=8, entropy=3)
+    fs, _ = _send_n(fs, rp, 8)
+    ack = RoceMsg(valid=np.True_, ack=np.True_, nack=np.False_,
+                  cnp=np.False_, epsn=np.int32(3),
+                  bytes_recvd=np.float32(3 * rp.mtu_bytes))
+    fs = roce_on_ack(fs, rp, ack, now=1.0)
+    assert int(fs.snd_una) == 3
+    # silence until RTO: everything from snd_una is resent
+    fs, _ = roce_on_timer(fs, rp, now=1.0 + rp.rto_us + 1.0)
+    assert int(fs.psn_next) == 3
+
+
+def test_dcqcn_cnp_cuts_rate_and_recovers(rp):
+    fs = init_roce_flow(rp, total_pkts=1000, entropy=0)
+    line = rp.line_rate_Bpus
+    assert float(fs.rate) == pytest.approx(line)
+    cnp = RoceMsg(valid=np.True_, ack=np.False_, nack=np.False_,
+                  cnp=np.True_, epsn=np.int32(0),
+                  bytes_recvd=np.float32(0.0))
+    fs = roce_on_ack(fs, rp, cnp, now=1.0)
+    # alpha starts at 1.0: first CNP halves the rate, target remembers line
+    assert float(fs.rate) == pytest.approx(line / 2)
+    assert float(fs.target) == pytest.approx(line)
+    # the ewma keeps alpha at 1.0 until the alpha timer decays it
+    assert float(fs.alpha) == pytest.approx(1.0)
+    # rate-increase timer: fast recovery climbs back toward target (and the
+    # alpha timer decays alpha in the same sweep)
+    r0 = float(fs.rate)
+    fs, _ = roce_on_timer(fs, rp, now=1.0 + rp.dcqcn.rate_timer_us + 1.0)
+    assert float(fs.alpha) < 1.0
+    assert float(fs.rate) > r0
+    assert float(fs.rate) == pytest.approx((r0 + line) / 2)
+
+
+def test_roce_receiver_acks_nacks_cnps(rp):
+    rcv = init_roce_rcv(total_pkts=4)
+    mtu = float(rp.mtu_bytes)
+    # in-order, below coalesce threshold: no message yet
+    rcv, m = roce_on_data(rcv, rp, psn=0, size=mtu, ecn=False, now=0.0)
+    assert not bool(m.valid)
+    # second in-order packet hits ack_coalesce_pkts=2
+    rcv, m = roce_on_data(rcv, rp, psn=1, size=mtu, ecn=False, now=0.1)
+    assert bool(m.valid) and bool(m.ack) and int(m.epsn) == 2
+    # gap: NACK with the expected psn, nothing delivered
+    rcv, m = roce_on_data(rcv, rp, psn=3, size=mtu, ecn=False, now=0.2)
+    assert bool(m.nack) and int(m.epsn) == 2
+    assert float(rcv.bytes_recvd) == pytest.approx(2 * mtu)
+    # ECN mark: CNP rides along, then is paced for cnp_interval_us
+    rcv, m = roce_on_data(rcv, rp, psn=2, size=mtu, ecn=True, now=0.3)
+    assert bool(m.cnp)
+    rcv, m = roce_on_data(rcv, rp, psn=3, size=mtu, ecn=True, now=0.4)
+    assert not bool(m.cnp), "CNPs must be paced per cnp_interval_us"
+    assert int(rcv.epsn) == 4 and bool(m.ack), "final packet acks the tail"
+
+
+def test_roce_done_and_window(rp):
+    fs = init_roce_flow(rp, total_pkts=2, entropy=0)
+    assert not bool(roce_done(fs))
+    fs, _ = _send_n(fs, rp, 2)
+    # window: nothing more to send until acked
+    fs2, (valid, _, _, _) = roce_next_packet(fs, rp, now=5.0)
+    assert not bool(valid)
+    ack = RoceMsg(valid=np.True_, ack=np.True_, nack=np.False_,
+                  cnp=np.False_, epsn=np.int32(2),
+                  bytes_recvd=np.float32(2 * rp.mtu_bytes))
+    fs = roce_on_ack(fs, rp, ack, now=5.0)
+    assert bool(roce_done(fs))
