@@ -2,7 +2,7 @@
 PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fabric-smoke smoke benchmarks
+.PHONY: tier1 fabric-smoke collective-smoke smoke benchmarks
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
@@ -13,8 +13,14 @@ tier1:
 fabric-smoke:
 	$(PP) $(PY) -m benchmarks.fabric_smoke 2000 all
 
+# 2k-tick dependency-scheduled collective on the fabric (ring allreduce,
+# strack + rocev2 + 4-QP striped rocev2): gating/striping regressions on
+# the unified run(scenario, cfg) path fail fast here.
+collective-smoke:
+	$(PP) $(PY) -m benchmarks.collectives --backend fabric --smoke
+
 # What CI should run on every change.
-smoke: tier1 fabric-smoke
+smoke: tier1 fabric-smoke collective-smoke
 
 # Full paper-figure benchmark sweep (slow).
 benchmarks:

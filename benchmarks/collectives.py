@@ -2,45 +2,51 @@
 windowed AlltoAll), multi-job, full-bisection + 4:1 oversubscribed.
 
 Validates: STrack > RoCEv2 (27.4% on AllReduce vs tuned 4-QP RoCEv2 in the
-paper), and tighter finishing-time CDFs (fairness)."""
-from __future__ import annotations
+paper), and tighter finishing-time CDFs (fairness).
 
-import statistics
+All three transports — STrack adaptive spray, RoCEv2 and the 4-QP striped
+RoCEv2 — run the dependency-scheduled traces on the jitted fabric by
+default (``run(collective_scenario(...), RunConfig(...))``); pass
+``--backend events`` for the TraceRunner oracle.
+
+    PYTHONPATH=src python -m benchmarks.collectives [--backend fabric]
+    PYTHONPATH=src python -m benchmarks.collectives --smoke   # 2k-tick CI canary
+"""
+from __future__ import annotations
 
 from repro.core.params import NetworkSpec
 from repro.sim.topology import full_bisection, oversubscribed
-from repro.sim.workloads import TraceRunner
-from repro.collective.algorithms import multi_job
+from repro.sim.workloads import collective_scenario
 
-from .common import make_sim, timed
+from .common import run_transport, timed
 
 
 def run_collectives(algo: str = "dbt", n_jobs: int = 4,
                     ranks_per_job: int = 8, collective_mb: float = 1.0,
                     oversub: int = 1, window: int = 8, seed: int = 0,
-                    transports=("strack", "roce", "roce4")):
+                    transports=("strack", "roce", "roce4"),
+                    backend: str = "fabric", link_gbps: float = 400.0,
+                    chunk: float = 128 * 1024, n_ticks=None):
     n_hosts_needed = n_jobs * ranks_per_job
     hp = 8
     n_tor = max(2, (n_hosts_needed + hp - 1) // hp)
+    net = NetworkSpec(link_gbps=link_gbps)
+    topo = (full_bisection(n_tor, hp) if oversub == 1
+            else oversubscribed(n_tor, hp, oversub))
+    kw = dict(window=window) if algo == "a2a" else {}
+    sc = collective_scenario(topo, algo, n_jobs, ranks_per_job,
+                             collective_mb * 2 ** 20, net=net, seed=seed,
+                             chunk=chunk, **kw)
     rows = []
     fct = {}
     for tr in transports:
-        net = NetworkSpec()
-        topo = (full_bisection(n_tor, hp) if oversub == 1
-                else oversubscribed(n_tor, hp, oversub))
-        kw = dict(window=window) if algo == "a2a" else {}
-        msgs, placement = multi_job(algo, n_jobs, ranks_per_job,
-                                    topo.n_hosts,
-                                    collective_mb * 2 ** 20, seed=seed,
-                                    **kw)
-        sim = make_sim(tr, topo, net, seed=seed)
-        runner = TraceRunner(sim, msgs, placement)
-        res, wall = timed(runner.run, until=1e7)
+        res, wall = timed(run_transport, tr, sc, backend=backend,
+                          n_ticks=n_ticks, until=1e7, seed=seed)
         times = list(res["group_fct"].values())
         fct[tr] = res["max_collective_time"]
         rows.append({
             "fig": "21-28", "workload": f"{algo}_x{n_jobs}_oversub{oversub}",
-            "transport": tr,
+            "transport": tr, "backend": res["backend"],
             "max_collective_us": res["max_collective_time"],
             "min_collective_us": min(times) if times else None,
             "cdf_spread": ((max(times) - min(times)) / max(times)
@@ -56,21 +62,54 @@ def run_collectives(algo: str = "dbt", n_jobs: int = 4,
     return rows
 
 
-def run_motivation(seed: int = 0):
+def run_motivation(seed: int = 0, backend: str = "fabric"):
     """Figs 1-2: single collective, DBT vs A2A, one job taking the
     cluster — RoCE single path vs STrack."""
     rows = []
     for algo in ("dbt", "a2a"):
         rows += run_collectives(algo, n_jobs=1, ranks_per_job=16,
-                                collective_mb=4.0, seed=seed)
+                                collective_mb=4.0, seed=seed,
+                                backend=backend)
+    return rows
+
+
+def run_smoke(n_ticks: int = 2000) -> list:
+    """CI canary: a small ring collective must complete within ``n_ticks``
+    on the jitted fabric for every transport (dependency gating + striping
+    regressions fail fast here; chained via ``make smoke``)."""
+    rows = run_collectives("ring", n_jobs=1, ranks_per_job=8,
+                           collective_mb=0.125, link_gbps=100.0,
+                           chunk=32 * 1024, n_ticks=n_ticks,
+                           backend="fabric")
+    for r in rows:
+        assert r["backend"] == "fabric", r
+        assert r["finished"] == r["total"], \
+            f"collective canary unfinished: {r}"
+        print(f"collective-smoke[{r['transport']}] ok: ring x8 on fabric in "
+              f"{n_ticks} ticks | max_collective "
+              f"{r['max_collective_us']:.1f}us drops {r['drops']} "
+              f"({r['wall_s']:.1f}s wall)")
     return rows
 
 
 def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["fabric", "events"],
+                    default="fabric")
+    ap.add_argument("--smoke", action="store_true",
+                    help="2k-tick collective-on-fabric CI canary")
+    ap.add_argument("--n-ticks", type=int, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args.n_ticks or 2000)
+        return
     rows = []
     for algo in ("ring", "dbt", "hd", "a2a"):
-        rows += run_collectives(algo)
-        rows += run_collectives(algo, oversub=4)
+        rows += run_collectives(algo, backend=args.backend,
+                                n_ticks=args.n_ticks)
+        rows += run_collectives(algo, oversub=4, backend=args.backend,
+                                n_ticks=args.n_ticks)
     for r in rows:
         print(r)
 

@@ -1,12 +1,19 @@
-"""Shared benchmark helpers: reduced-scale topologies + transport variants."""
+"""Shared benchmark helpers: reduced-scale topologies + transport variants.
+
+Every driver goes through the ONE experiment API
+(``repro.sim.workloads.run``/``sweep``): a transport name from
+``TRANSPORTS`` maps to a :class:`~repro.sim.workloads.RunConfig` via
+``transport_config(tr, backend=...)``, so each figure is one
+``run(scenario, cfg)`` call whichever backend/protocol/striping it needs.
+"""
 from __future__ import annotations
 
 import time
 
 from repro.core.params import NetworkSpec
 from repro.sim.events import NetSim
-from repro.sim.topology import (FatTree, full_bisection, oversubscribed,
-                                with_link_failures)
+from repro.sim.topology import FatTree
+from repro.sim.workloads import RunConfig, run, sweep
 
 # Reduced scale (container = 1 CPU core). Paper: 8192 hosts, <=100MB msgs.
 QUICK_TOPO = dict(n_tor=4, hosts_per_tor=4)      # 16 hosts
@@ -14,41 +21,56 @@ FULL_TOPO = dict(n_tor=16, hosts_per_tor=16)     # 256 hosts
 MSG_SIZES_QUICK = [4 * 2**10, 128 * 2**10, 512 * 2**10, 2 * 2**20]
 MSG_SIZES_FULL = MSG_SIZES_QUICK + [8 * 2**20]
 
+# Transport variant -> RunConfig fields.  ALL of these run on the jitted
+# fabric now, including the 4-QP striped RoCEv2 ("roce4", previously the
+# last event-backend benchmark leg).
+TRANSPORT_CFG = {
+    "strack": dict(protocol="strack", lb_mode="adaptive"),
+    "strack-obl": dict(protocol="strack", lb_mode="oblivious"),
+    "strack-fixed": dict(protocol="strack", lb_mode="fixed"),
+    "roce": dict(protocol="rocev2"),
+    "roce4": dict(protocol="rocev2", subflows=4),
+}
+
 TRANSPORTS = ["strack", "strack-obl", "roce", "roce4"]
-
-# STrack spray variants that run on the jitted fabric fast path.
-FABRIC_LB = {"strack": "adaptive", "strack-obl": "oblivious",
-             "strack-fixed": "fixed"}
-# Everything the fabric can run: the spray variants plus the ported RoCEv2
-# (DCQCN + go-back-N + PFC) baseline.  Only the 4-QP striped variant still
-# needs the event oracle.
-FABRIC_TRANSPORTS = list(FABRIC_LB) + ["roce"]
+FABRIC_TRANSPORTS = list(TRANSPORT_CFG)
 
 
+def transport_config(transport: str, backend: str = "fabric",
+                     **overrides) -> RunConfig:
+    """RunConfig for one named transport variant on one backend."""
+    if transport not in TRANSPORT_CFG:
+        raise ValueError(f"unknown transport {transport!r}; expected one "
+                         f"of {sorted(TRANSPORT_CFG)}")
+    return RunConfig(backend=backend, **{**TRANSPORT_CFG[transport],
+                                         **overrides})
+
+
+def run_transport(transport: str, scenario, backend: str = "fabric",
+                  **overrides) -> dict:
+    """``run(scenario, cfg)`` for one named transport variant."""
+    return run(scenario, transport_config(transport, backend, **overrides))
+
+
+def sweep_transport(transport: str, scenarios, backend: str = "fabric",
+                    **overrides) -> list:
+    """``sweep(scenarios, cfg)`` for one named transport variant (fabric:
+    one vmapped jit over the batch)."""
+    return sweep(scenarios, transport_config(transport, backend,
+                                             **overrides))
+
+
+# Back-compat spellings (pre-RunConfig helpers).
 def run_fabric_transport(transport: str, scenario, n_ticks=None,
                          trace_queues: bool = False) -> dict:
-    """Run one transport variant on the jitted fabric backend."""
-    from repro.sim.workloads import run_on_fabric
-    if transport == "roce":
-        return run_on_fabric(scenario, n_ticks=n_ticks, protocol="rocev2",
-                             trace_queues=trace_queues)
-    return run_on_fabric(scenario, n_ticks=n_ticks,
-                         lb_mode=FABRIC_LB[transport],
-                         trace_queues=trace_queues)
+    return run_transport(transport, scenario, backend="fabric",
+                         n_ticks=n_ticks, trace_queues=trace_queues)
 
 
 def sweep_fabric_transport(transport: str, scenarios, n_ticks=None,
                            trace_queues: bool = False) -> list:
-    """Run one transport over a batch of same-shape scenarios (seed sweep)
-    in a single vmapped jit; returns per-seed summaries."""
-    from repro.sim.workloads import run_seed_sweep_on_fabric
-    if transport == "roce":
-        return run_seed_sweep_on_fabric(scenarios, n_ticks=n_ticks,
-                                        protocol="rocev2",
-                                        trace_queues=trace_queues)
-    return run_seed_sweep_on_fabric(scenarios, n_ticks=n_ticks,
-                                    lb_mode=FABRIC_LB[transport],
-                                    trace_queues=trace_queues)
+    return sweep_transport(transport, scenarios, backend="fabric",
+                           n_ticks=n_ticks, trace_queues=trace_queues)
 
 
 def run_events_transport(transport: str, scenario, until: float = 1e6,
@@ -62,6 +84,7 @@ def run_events_transport(transport: str, scenario, until: float = 1e6,
 
 
 def make_sim(transport: str, topo: FatTree, net: NetworkSpec, **kw) -> NetSim:
+    """Prebuilt NetSim for a named transport (queue-logging drivers)."""
     if transport == "strack":
         return NetSim(topo, net, transport="strack", **kw)
     if transport == "strack-obl":

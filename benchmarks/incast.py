@@ -11,9 +11,9 @@ import statistics
 
 from repro.core.params import NetworkSpec
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import incast_scenario, run_incast, run_on_fabric
+from repro.sim.workloads import incast_scenario, run_incast
 
-from .common import make_sim, timed
+from .common import make_sim, run_transport, timed
 
 
 def run_fct(fan_in: int = 8, msg: float = 512 * 2 ** 10, topo_kw=None,
@@ -31,9 +31,7 @@ def run_fct(fan_in: int = 8, msg: float = 512 * 2 ** 10, topo_kw=None,
         topo = full_bisection(**topo_kw)
         if backend == "fabric":
             sc = incast_scenario(topo, fan_in, msg, net=net, seed=seed)
-            res, wall = timed(
-                run_on_fabric, sc,
-                protocol="rocev2" if tr == "roce" else "strack")
+            res, wall = timed(run_transport, tr, sc, backend="fabric")
         else:
             sim = make_sim(tr, topo, net, seed=seed)
             res, wall = timed(run_incast, sim, fan_in, msg, until=2e6,

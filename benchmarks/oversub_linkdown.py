@@ -4,9 +4,10 @@ link failures (asymmetric network).
 Validates: STrack's joint CC+LB keeps winning (up to 3x / 6x in the paper);
 adaptive spray beats oblivious especially with failed links (60% in paper).
 
-All transports run on the jitted multi-queue fabric: STrack spray variants
-(adaptive / oblivious / fixed-path pinning) AND the RoCEv2/DCQCN/PFC
-baseline.  The scenario objects are shared, so every leg sees the same
+All transports run on the jitted multi-queue fabric through the one
+experiment API: STrack spray variants (adaptive / oblivious / fixed-path
+pinning), the RoCEv2/DCQCN/PFC baseline AND the 4-QP striped RoCEv2
+variant.  The scenario objects are shared, so every leg sees the same
 flows on the same (oversubscribed / dead-link) topology.  Pass
 ``backend="events"`` to fall back to the oracle.
 """
@@ -16,7 +17,7 @@ from repro.core.params import NetworkSpec
 from repro.sim.workloads import linkdown_scenario, oversub_scenario
 
 from .common import (FABRIC_TRANSPORTS, QUICK_TOPO, run_events_transport,
-                     run_fabric_transport, timed)
+                     run_transport, timed)
 
 
 def _run_matrix(sc, fig: str, workload: str, msg: float, seed: int,
@@ -25,7 +26,7 @@ def _run_matrix(sc, fig: str, workload: str, msg: float, seed: int,
     fcts = {}
     for tr in FABRIC_TRANSPORTS:
         if backend == "fabric":
-            res, wall = timed(run_fabric_transport, tr, sc)
+            res, wall = timed(run_transport, tr, sc, backend="fabric")
         elif tr == "strack-fixed":
             continue  # single-path pinning only exists on the fabric
         else:

@@ -4,13 +4,13 @@ Validates: STrack >> RoCEv2 (up to 6.3x in the paper at 8K nodes), adaptive
 spray > oblivious spray for large messages, and queue-delay settling
 (Fig. 8).  Reduced scale: 16-256 hosts vs the paper's 8192.
 
-Both legs of the figure run on the jitted multi-queue fabric
-(``repro.sim.fabric``): STrack spray variants AND the RoCEv2/DCQCN/PFC
-baseline — one XLA program per (transport, message size), with a
-vmap-over-seeds sweep (``run_seed_sweep_on_fabric``) batching ``--seeds``
-repetitions into a single jit.  Only the 4-QP striped RoCEv2 variant still
-uses the event oracle.  Pass ``backend="events"`` to run everything on the
-oracle instead.
+EVERY leg of the figure runs on the jitted multi-queue fabric
+(``repro.sim.fabric``) through the one experiment API: STrack spray
+variants, the RoCEv2/DCQCN/PFC baseline AND the 4-QP striped RoCEv2
+variant (``subflows=4`` message striping) — one XLA program per
+(transport, message size), with a vmap-over-seeds ``sweep()`` batching
+``--seeds`` repetitions into a single jit.  Pass ``backend="events"`` to
+run everything on the oracle instead.
 """
 from __future__ import annotations
 
@@ -19,8 +19,8 @@ from repro.sim.topology import full_bisection
 from repro.sim.workloads import permutation_scenario
 
 from .common import (FABRIC_TRANSPORTS, MSG_SIZES_QUICK, QUICK_TOPO,
-                     TRANSPORTS, run_events_transport,
-                     sweep_fabric_transport, timed)
+                     TRANSPORTS, run_events_transport, sweep_transport,
+                     timed)
 
 
 def _agg_seeds(per_seed: list) -> dict:
@@ -48,14 +48,14 @@ def run(quick: bool = True, link_gbps: float = 400.0, msg_sizes=None,
         topo = full_bisection(**topo_kw)
         sc = permutation_scenario(topo, msg, net=net, seed=seed)
         fcts = {}
-        transports = (FABRIC_TRANSPORTS + ["roce4"]
-                      if backend == "fabric" else TRANSPORTS)
+        transports = (FABRIC_TRANSPORTS if backend == "fabric"
+                      else TRANSPORTS)
         for tr in transports:
-            if backend == "fabric" and tr in FABRIC_TRANSPORTS:
+            if backend == "fabric":
                 scs = [permutation_scenario(topo, msg, net=net,
                                             seed=seed + i)
                        for i in range(seeds)]
-                per_seed, wall = timed(sweep_fabric_transport, tr, scs,
+                per_seed, wall = timed(sweep_transport, tr, scs,
                                        trace_queues=trace_queues)
                 res = _agg_seeds(per_seed)
                 queue_settle = res.get("queue_settle_us")

@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows. ``us_per_call`` is the
 simulated metric (max FCT / collective time in us); ``derived`` carries the
 paper-claim validation (speedups, parity ratios, queue stability).
 
+Every figure is driven through the ONE experiment API
+(``repro.sim.workloads.run(scenario, RunConfig(...))``) — one command
+reproduces the whole evaluation matrix on the jitted fabric, collectives
+and 4-QP striped RoCEv2 included.
+
 Full-scale variants of each figure are available via the per-module mains
 (e.g. ``python -m benchmarks.permutation --full``).
 """
@@ -11,8 +16,29 @@ from __future__ import annotations
 
 import sys
 
+MIGRATION_TABLE = """\
+old entry point                                -> unified API call
+----------------------------------------------------------------------------
+run_on_fabric(sc, protocol=, lb_mode=, ...)    -> run(sc, RunConfig(backend="fabric", protocol=, lb_mode=, ...))
+run_seed_sweep_on_fabric(scs, ...)             -> sweep(scs, RunConfig(...))
+run_on_events(sc, transport="roce", ...)       -> run(sc, RunConfig(backend="events", protocol="rocev2", ...))
+TraceRunner(sim, msgs, placement).run()        -> run(collective_scenario(...), RunConfig(...))
+run_permutation(sim, msg)                      -> run(permutation_scenario(topo, msg), RunConfig(backend="events"))
+run_incast(sim, fan_in, msg)                   -> run(incast_scenario(topo, fan_in, msg), RunConfig(backend="events"))
+NetSim(..., roce_params=make_roce_params(net,
+       qps_per_conn=4)) [4-QP striping]        -> run(sc, RunConfig(protocol="rocev2", subflows=4))
+
+See docs/experiments.md for the full guide."""
+
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        epilog="Migration from the legacy entry points:\n\n"
+               + MIGRATION_TABLE,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.parse_args()
     from . import permutation, oversub_linkdown, incast, collectives
     rows = []
     print("name,us_per_call,derived")

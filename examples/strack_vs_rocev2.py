@@ -1,36 +1,33 @@
 """The paper's headline comparison: permutation + incast + one collective,
 STrack vs RoCEv2.
 
-BOTH legs run on the jitted multi-queue fat-tree fabric — STrack (adaptive
-and oblivious spray, lossy) and the RoCEv2 baseline (DCQCN + go-back-N,
-lossless via the fabric's PFC pause model) — one XLA program per run, over
-identical scenario objects.  Only the dependency-scheduled collective trace
-at the end still uses the event-driven oracle.
+EVERY leg — permutation, incast AND the dependency-scheduled DBT allreduce
+collective — runs on the jitted multi-queue fat-tree fabric through the one
+experiment API: ``run(scenario, RunConfig(...))``.  STrack runs adaptive /
+oblivious spray (lossy); RoCEv2 runs DCQCN + go-back-N (lossless via the
+fabric's PFC pause model), plus the tuned 4-QP striped variant
+(``subflows=4``) on the collective.
 
     PYTHONPATH=src python examples/strack_vs_rocev2.py
 """
-from repro.collective.algorithms import multi_job
 from repro.core.params import NetworkSpec
-from repro.sim.events import NetSim
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import (TraceRunner, incast_scenario,
-                                 permutation_scenario, run_on_fabric)
+from repro.sim.workloads import (RunConfig, collective_scenario,
+                                 incast_scenario, permutation_scenario, run)
 
 
 def main():
     net = NetworkSpec(link_gbps=400.0)
-    topo_kw = dict(n_tor=4, hosts_per_tor=4)
-    topo = full_bisection(**topo_kw)
+    topo = full_bisection(4, 4)
 
     print("== permutation, 16 hosts, 2MB messages ==")
     sc = permutation_scenario(topo, 2 * 2 ** 20, net=net)
     res = {}
-    for tr, runner in [
-            ("strack", lambda: run_on_fabric(sc, lb_mode="adaptive")),
-            ("strack-oblivious",
-             lambda: run_on_fabric(sc, lb_mode="oblivious")),
-            ("roce", lambda: run_on_fabric(sc, protocol="rocev2"))]:
-        r = runner()
+    for tr, cfg in [
+            ("strack", RunConfig(lb_mode="adaptive")),
+            ("strack-oblivious", RunConfig(lb_mode="oblivious")),
+            ("roce", RunConfig(protocol="rocev2"))]:
+        r = run(sc, cfg)
         res[tr] = r["max_fct"]
         print(f"  {tr:18s} max FCT = {r['max_fct']:8.1f} us   "
               f"drops={r['drops']} pauses={r['pauses']} "
@@ -41,23 +38,25 @@ def main():
 
     print("== incast 8->1, 512KB ==")
     sc = incast_scenario(topo, 8, 512 * 2 ** 10, net=net)
-    for tr, runner in [
-            ("strack", lambda: run_on_fabric(sc)),
-            ("roce", lambda: run_on_fabric(sc, protocol="rocev2"))]:
-        r = runner()
+    for tr, cfg in [("strack", RunConfig()),
+                    ("roce", RunConfig(protocol="rocev2"))]:
+        r = run(sc, cfg)
         print(f"  {tr:18s} max FCT = {r['max_fct']:8.1f} us   "
               f"drops={r['drops']} pauses={r['pauses']} "
               f"[{r['backend']}]")
     print("  -> lossy STrack ~ lossless RoCEv2 (paper Fig 19 parity)")
 
     print("== 2 x DBT all-reduce (1MB), 16 hosts ==")
-    for tr in ("strack", "roce"):
-        sim = NetSim(full_bisection(**topo_kw), net, transport=tr)
-        msgs, placement = multi_job("dbt", 2, 8, 16, 1 * 2 ** 20)
-        r = TraceRunner(sim, msgs, placement).run(until=1e7)
+    sc = collective_scenario(topo, "dbt", 2, 8, 1 * 2 ** 20, net=net)
+    for tr, cfg in [
+            ("strack", RunConfig()),
+            ("roce", RunConfig(protocol="rocev2")),
+            ("roce-4qp", RunConfig(protocol="rocev2", subflows=4))]:
+        r = run(sc, cfg)
         print(f"  {tr:18s} max collective = "
               f"{r['max_collective_time']:8.1f} us "
-              f"({r['finished_groups']}/{r['total_groups']} done)")
+              f"({r['finished_groups']}/{r['total_groups']} done) "
+              f"[{r['backend']}]")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Collective-algorithm trace generators (paper Section 4.3).
 
-Each generator emits a list of ``TraceMessage`` with dependency edges
+Each generator emits a list of ``Message`` records with dependency edges
 exactly as the paper describes: "messages from later steps are sent only
 after messages in previous steps are received".  Messages are chunked (the
 paper uses 128 KB chunks "to utilize the pipeline") — chunk c of step s
@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import math
 
-from ..sim.workloads import TraceMessage
+from ..sim.workloads import Message
 
 
 def _flat(deps):
@@ -23,7 +23,7 @@ def _flat(deps):
 
 class _Trace:
     def __init__(self, group):
-        self.msgs: list[TraceMessage] = []
+        self.msgs: list[Message] = []
         self.group = group
 
     def add(self, src, dst, size, deps=None, chunk=None):
@@ -34,8 +34,8 @@ class _Trace:
         chunk counts match (step pipelining), else on all parent chunks."""
         deps = list(deps or [])
         if chunk is None or size <= chunk:
-            m = TraceMessage(mid=len(self.msgs), src=src, dst=dst, size=size,
-                             deps=_flat(deps), group=self.group)
+            m = Message(mid=len(self.msgs), src=src, dst=dst, size=size,
+                        deps=_flat(deps), group=self.group)
             self.msgs.append(m)
             return [m.mid]
         n = math.ceil(size / chunk)
@@ -50,15 +50,15 @@ class _Trace:
                     dd.extend(e)
                 else:
                     dd.append(e)
-            m = TraceMessage(mid=len(self.msgs), src=src, dst=dst, size=sz,
-                             deps=dd, group=self.group)
+            m = Message(mid=len(self.msgs), src=src, dst=dst, size=sz,
+                        deps=dd, group=self.group)
             self.msgs.append(m)
             ids.append(m.mid)
         return ids
 
 
 def ring_allreduce(n: int, total_bytes: float, group: int = 0,
-                   chunk: float = 128 * 1024) -> list[TraceMessage]:
+                   chunk: float = 128 * 1024) -> list[Message]:
     """Ring: reduce-scatter (n-1 steps) + all-gather (n-1 steps)."""
     tr = _Trace(group)
     seg = total_bytes / n
@@ -83,7 +83,7 @@ def _btree_children(n, root_shift=0):
 
 
 def dbt_allreduce(n: int, total_bytes: float, group: int = 0,
-                  chunk: float = 128 * 1024) -> list[TraceMessage]:
+                  chunk: float = 128 * 1024) -> list[Message]:
     """DoubleBinaryTree: two trees, half the payload each; reduce to root
     then broadcast (the 2:1 incast pattern the paper highlights)."""
     tr = _Trace(group)
@@ -127,7 +127,7 @@ def dbt_allreduce(n: int, total_bytes: float, group: int = 0,
 
 
 def hd_allreduce(n: int, total_bytes: float, group: int = 0,
-                 chunk: float = 128 * 1024) -> list[TraceMessage]:
+                 chunk: float = 128 * 1024) -> list[Message]:
     """HalvingDoubling: log2(n) RS rounds + log2(n) AG rounds (XOR pairs)."""
     assert n & (n - 1) == 0, "HD needs power-of-two ranks"
     tr = _Trace(group)
@@ -156,7 +156,7 @@ def hd_allreduce(n: int, total_bytes: float, group: int = 0,
 
 def alltoall(n: int, total_bytes: float, group: int = 0,
              window: int = 32, chunk: float = 128 * 1024
-             ) -> list[TraceMessage]:
+             ) -> list[Message]:
     """AlltoAll, sequenced (n+1),(n+2),... with ≤ ``window`` active
     connections per sender/receiver (paper's incast-ordering)."""
     tr = _Trace(group)
@@ -181,13 +181,16 @@ def multi_job(algo: str, n_jobs: int, ranks_per_job: int, n_hosts: int,
               collective_bytes: float, seed: int = 0, **kw):
     """The paper's multi-job setup: ``n_jobs`` identical collectives,
     each group randomly placed on the cluster. Returns (messages,
-    placement) where placement maps global rank-id -> host."""
+    placement) where placement maps global rank-id -> host.
+
+    ``workloads.collective_scenario`` wraps this into a backend-agnostic
+    :class:`~repro.sim.workloads.Scenario` (hosts resolved, deps kept)."""
     import random
     rng = random.Random(seed)
     hosts = list(range(n_hosts))
     rng.shuffle(hosts)
     assert n_jobs * ranks_per_job <= n_hosts
-    msgs: list[TraceMessage] = []
+    msgs: list[Message] = []
     placement: dict[int, int] = {}
     gen = ALGOS[algo]
     for j in range(n_jobs):
@@ -195,10 +198,10 @@ def multi_job(algo: str, n_jobs: int, ranks_per_job: int, n_hosts: int,
         base = len(msgs)
         rank_base = j * ranks_per_job
         for m in sub:
-            msgs.append(TraceMessage(
+            msgs.append(Message(
                 mid=m.mid + base, src=m.src + rank_base,
                 dst=m.dst + rank_base, size=m.size,
-                deps=[d + base for d in m.deps], group=j))
+                deps=tuple(d + base for d in m.deps), group=j))
         for r in range(ranks_per_job):
             placement[rank_base + r] = hosts[rank_base + r]
     return msgs, placement

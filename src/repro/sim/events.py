@@ -16,13 +16,15 @@ htsim-style discrete-event simulation of the paper's evaluation fabric:
 Transports plug in through the engines in ``repro.core.ref`` (STrack) and
 the RoCEv2/DCQCN baseline.  Times in us, sizes in bytes.
 
-This module is the *semantics oracle plus collective-trace runner*: both
-protocols now also run on the jitted multi-queue fabric (``fabric.py`` +
+This module is the *semantics oracle*: both protocols, dependency-
+scheduled collective traces (figs 21-28) and 4-QP sub-flow striping all
+also run on the jitted multi-queue fabric (``fabric.py`` +
 ``dcqcn_fab.py``, ~1000x faster), which is parity-tested against this
-implementation in ``tests/test_fabric.py`` (STrack) and
-``tests/test_fabric_roce.py`` (RoCEv2/PFC).  Dependency-scheduled
-collective traces (figs 21-28) remain event-backend-only.  See the sim/
-module map in ``fabric.py``.
+implementation in ``tests/test_fabric.py`` (STrack),
+``tests/test_fabric_roce.py`` (RoCEv2/PFC) and
+``tests/test_collective_fabric.py`` (collectives, via
+``workloads.TraceRunner`` on this engine).  See the sim/ module map in
+``fabric.py``; the public entry point is ``workloads.run(scenario, cfg)``.
 """
 from __future__ import annotations
 

@@ -35,23 +35,37 @@ Time model (1 tick = 1 MTU serialization time at link rate):
   * ACK/SACK/CNP messages ride a fixed-latency per-flow return pipe
     covering the base-RTT remainder, as in ``jaxsim.py``.
 
+Dependency-scheduled messages (collective traces, Figs 21-28) run inside
+the same ``lax.scan``: every flow belongs to a *message*, messages carry
+static dependency edges, and per-message pending-dep counters gate sending —
+a message becomes sendable the tick its counter reaches zero, and its
+completion decrements its children's counters.  Messages optionally fan out
+into ``subflows`` striped sub-flows (the paper's 4-QP "optimized RoCEv2"),
+each a single-path flow with its own entropy; the message completes when the
+last sub-flow completes.  Plain flow lists are the deps-free, 1-sub-flow
+special case of the same machinery.
+
 sim/ module map
 ---------------
   topology.py   FatTree: Python Clos model + ECMP hash (shared ground truth)
   fabric.py     this file — the fast path for BOTH protocols; >=4-ToR
-                fabrics, spray modes, dead links, oversubscription, PFC
+                fabrics, spray modes, dead links, oversubscription, PFC,
+                dependency gating + sub-flow striping for collective traces
   dcqcn_fab.py  RoCEv2 (DCQCN + go-back-N) per-flow transitions
   jaxsim.py     the 1-queue special case of the fabric (incast Figs 16-20)
-  events.py     discrete-event oracle + dependency-scheduled collective
-                traces; ~1000x slower, used for parity tests only
-  workloads.py  scenario configs (permutation/incast/oversub/linkdown)
-                runnable on either backend, plus the vmap seed-sweep helper
+  events.py     discrete-event oracle (parity tests + TraceRunner oracle
+                for the collective parity gates); ~1000x slower
+  workloads.py  the one experiment API: Scenario (dependency-edged
+                messages) + RunConfig + run()/sweep() over both backends
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import random
 from typing import Callable, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -173,12 +187,21 @@ def make_strack_protocol(p: STrackParams) -> Protocol:
         del now
         return rel.receiver_on_data(r, p, psn, size, ecn, ent, ts, probe)
 
+    def on_timer(f, now):
+        # The oracle only arms a flow's timers when the flow is added
+        # (i.e. when its dependencies released it); mirror that by holding
+        # probes until the flow has actually sent data.
+        f2, tx = tp.flow_on_timer(f, p, now)
+        started = f.rel.bytes_sent > 0
+        probe = tx.valid & started
+        return f2, tx._replace(valid=probe, is_probe=probe)
+
     return Protocol(
         name="strack", uses_spray=True, init=init,
         empty_msgs=lambda h, n: _empty_sack_pipe(p, h, n),
         on_data=on_data,
         on_ack=lambda f, m, now: tp.flow_on_sack(f, p, m, now),
-        on_timer=lambda f, now: tp.flow_on_timer(f, p, now),
+        on_timer=on_timer,
         next_packet=lambda f, now: tp.flow_next_packet(f, p, now),
         done=tp.flow_done,
         cong_pkts=lambda f: f.cc.cwnd)
@@ -241,6 +264,97 @@ def pfc_gate(paused: jax.Array, ingress_bytes: jax.Array,
     return pause | (paused & ~resume)
 
 
+# --------------------------------------------------------------------------- #
+# Messages: dependency structure + sub-flow striping (static per program)
+# --------------------------------------------------------------------------- #
+
+class _FlowMsg(NamedTuple):
+    """Minimal message record for the deps-free ``run_fabric`` wrapper
+    (``workloads.Message`` is the duck-typed public equivalent)."""
+
+    mid: int
+    src: int
+    dst: int
+    size: float
+    deps: tuple = ()
+    group: int = 0
+
+
+class DepSpec(NamedTuple):
+    """Static message/dependency structure a fabric program closes over.
+
+    Flows are the striped sub-flows of messages: ``msg_of_flow`` maps each
+    sub-flow back to its message; ``edge_parent[e] -> edge_child[e]`` are
+    the dependency edges (child waits for parent); ``init_pending`` is each
+    message's dependency in-degree.  ``msg_ids`` / ``group_ids`` keep the
+    caller's original identifiers for reporting.
+    """
+
+    n_msgs: int
+    n_groups: int
+    msg_of_flow: jax.Array   # i32[N]
+    group_of_msg: jax.Array  # i32[n_msgs]
+    init_pending: jax.Array  # i32[n_msgs]
+    edge_parent: jax.Array   # i32[E]
+    edge_child: jax.Array    # i32[E]
+    msg_ids: tuple           # original mids, program order
+    group_ids: tuple         # original group ids, program order
+
+
+def expand_messages(messages, subflows: int = 1):
+    """Fan messages out into striped sub-flows.
+
+    Returns ``(flows, dep)`` where ``flows`` is the [(src, dst, bytes), ...]
+    list of sub-flows (each message split into ``subflows`` equal stripes,
+    mirroring the oracle's multi-QP striping) and ``dep`` the
+    :class:`DepSpec` tying them back together.
+    """
+    k = max(1, int(subflows))
+    messages = list(messages)
+    if not messages:
+        raise ValueError("expand_messages() needs at least one message")
+    mid_ix = {m.mid: i for i, m in enumerate(messages)}
+    if len(mid_ix) != len(messages):
+        raise ValueError("duplicate message ids in trace")
+    group_ids = tuple(sorted({m.group for m in messages}))
+    gid_ix = {g: i for i, g in enumerate(group_ids)}
+    flows, msg_of_flow = [], []
+    edge_parent, edge_child, pending = [], [], []
+    for i, m in enumerate(messages):
+        pending.append(len(m.deps))
+        for d in m.deps:
+            if d not in mid_ix:
+                raise ValueError(f"message {m.mid} depends on unknown "
+                                 f"message {d}")
+            edge_parent.append(mid_ix[d])
+            edge_child.append(i)
+        for _ in range(k):
+            flows.append((m.src, m.dst, m.size / k))
+            msg_of_flow.append(i)
+    return flows, DepSpec(
+        n_msgs=len(messages), n_groups=len(group_ids),
+        msg_of_flow=jnp.asarray(msg_of_flow, jnp.int32),
+        group_of_msg=jnp.asarray([gid_ix[m.group] for m in messages],
+                                 jnp.int32),
+        init_pending=jnp.asarray(pending, jnp.int32),
+        edge_parent=jnp.asarray(edge_parent, jnp.int32),
+        edge_child=jnp.asarray(edge_child, jnp.int32),
+        msg_ids=tuple(m.mid for m in messages),
+        group_ids=group_ids)
+
+
+def _trivial_dep(flows) -> DepSpec:
+    """Deps-free 1:1 flow<->message mapping (the plain-flow special case)."""
+    n = len(flows)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    e = jnp.zeros((0,), jnp.int32)
+    return DepSpec(n_msgs=n, n_groups=1, msg_of_flow=iota,
+                   group_of_msg=jnp.zeros((n,), jnp.int32),
+                   init_pending=jnp.zeros((n,), jnp.int32),
+                   edge_parent=e, edge_child=e,
+                   msg_ids=tuple(range(n)), group_ids=(0,))
+
+
 class PktQ(NamedTuple):
     """Ring-buffer packet fields, shape [n_queues + 1, cap] (last row trash)."""
 
@@ -271,6 +385,12 @@ class FabricState(NamedTuple):
     paused_sd: jax.Array     # bool[S, T]: spine_down[s][t] paused by ToR t
     paused_up: jax.Array     # bool[T, S]: tor_up[t][s] paused by spine s
     pauses: jax.Array        # i32: cumulative pause (xoff) events
+    # --- dependency scheduling (trivial when the trace has no deps) ---
+    pending: jax.Array           # i32[n_msgs]: unmet dependency count
+    msg_done: jax.Array          # bool[n_msgs]
+    msg_release_tick: jax.Array  # i32[n_msgs], -1 until sendable
+    msg_done_tick: jax.Array     # i32[n_msgs], -1 until complete
+    group_done_tick: jax.Array   # i32[G], -1 until all group msgs complete
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +402,11 @@ class FabricConfig:
     delay_ticks: Optional[int] = None  # return-pipe latency override
     protocol: str = "strack"         # strack | rocev2
     pfc: Optional[bool] = None       # None -> lossless iff rocev2
+    # Message -> sub-flow striping (paper's 4-QP "optimized RoCEv2"): each
+    # message is split into this many equal-size single-QP sub-flows, each
+    # with its own path entropy; the message completes when the last
+    # sub-flow does.
+    subflows: int = 1
     # Shared-buffer bytes per switch for PFC accounting.  NB: the oracle's
     # NetSim default is 64 MB, which never pauses at reduced scale; the
     # fabric default is sized so lossless backpressure is actually exercised
@@ -324,6 +449,26 @@ def _scatter_add(vec, idx, val, n):
     return jnp.concatenate([vec, pad], 0).at[idx].add(val)[:n]
 
 
+def _rank_in_queue(qid: jax.Array, flag: jax.Array) -> jax.Array:
+    """Rank of each candidate among flag-set candidates of the same queue,
+    in candidate-index order.
+
+    Sort-based O(M log M) replacement for the all-pairs lower-triangle mask
+    (O(M^2) per tick, which dominated once collective traces pushed the
+    candidate count into the thousands).  Entries are keyed (qid, ~flag) so
+    a stable sort puts each queue's flagged candidates first, index-ordered;
+    rank = position - start-of-queue-run.  Values at non-flagged entries
+    are meaningless — callers only read ranks where ``flag`` holds.
+    """
+    m = qid.shape[0]
+    key = qid * 2 + (~flag).astype(jnp.int32)
+    order = jnp.argsort(key, stable=True)
+    sq = qid[order]
+    start = jnp.searchsorted(sq, sq, side="left").astype(jnp.int32)
+    rank_sorted = jnp.arange(m, dtype=jnp.int32) - start
+    return jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+
+
 def _make_protocol(cfg: FabricConfig):
     """Resolve cfg -> (Protocol, ecn kmin/kmax in packets)."""
     net = cfg.net
@@ -347,14 +492,17 @@ def _make_protocol(cfg: FabricConfig):
 
 
 def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
-                  cfg: FabricConfig):
+                  cfg: FabricConfig, dep: Optional[DepSpec] = None):
     """Build the pure jnp fabric program for fixed (topology, N, ticks).
 
     Returns ``program(src, dst, total_pkts) -> (final_state, tick_metrics)``
     — jittable and vmappable (the seed-sweep helper vmaps it over stacked
-    flow arrays).
+    flow arrays).  ``dep`` is the static message/dependency structure the
+    program closes over; ``None`` means one deps-free message per flow.
     """
-    assert cfg.lb_mode in LB_MODES, cfg.lb_mode
+    if cfg.lb_mode not in LB_MODES:
+        raise ValueError(f"unknown lb_mode {cfg.lb_mode!r}; "
+                         f"expected one of {LB_MODES}")
     net = cfg.net
     proto, kmin_p, kmax_p, _ = _make_protocol(cfg)
     pfc = cfg.pfc_enabled
@@ -364,7 +512,12 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     TS = T * S
     Q = 2 * TS + NH                     # tor_up + spine_down + host_down
     N = n_flows
-    assert N > 0
+    if N <= 0:
+        raise ValueError("fabric program needs at least one flow")
+    if dep is None:
+        dep = _trivial_dep(range(N))
+    n_msgs, n_groups = dep.n_msgs, dep.n_groups
+    n_edges = int(dep.edge_parent.shape[0])
 
     tick_us = net.mtu_serialize_us
     drop_pkts = int(net.drop_bytes // net.mtu_bytes)
@@ -426,10 +579,23 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             paused_nic=jnp.zeros((NH,), bool),
             paused_sd=jnp.zeros((S, T), bool),
             paused_up=jnp.zeros((T, S), bool),
-            pauses=jnp.zeros((), jnp.int32))
+            pauses=jnp.zeros((), jnp.int32),
+            pending=dep.init_pending,
+            msg_done=jnp.zeros((n_msgs,), bool),
+            msg_release_tick=jnp.full((n_msgs,), -1, jnp.int32),
+            msg_done_tick=jnp.full((n_msgs,), -1, jnp.int32),
+            group_done_tick=jnp.full((n_groups,), -1, jnp.int32))
 
         def tick_fn(st: FabricState, t):
             now = t.astype(jnp.float32) * tick_us
+
+            # ---- 0. dependency gate: a message is sendable the tick its
+            # pending-dep counter reaches zero (deps-free traces: always) --
+            sendable_msg = st.pending <= 0
+            sendable = sendable_msg[dep.msg_of_flow]
+            msg_release_tick = jnp.where(
+                sendable_msg & (st.msg_release_tick < 0),
+                t.astype(jnp.int32), st.msg_release_tick)
 
             # ---- 1. serve: every unpaused queue pops its head packet -----
             qs = st.qsize[:Q]
@@ -508,7 +674,10 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             flows_t, probe_tx = jax.lax.cond(
                 (t % cfg.timer_every) == 0, timers,
                 lambda fl: (fl, empty_tx), flows)
-            probe_valid = probe_tx.valid
+            # Gated (dependency-pending) flows keep their init-time timer
+            # state — their deadlines effectively start counting at release,
+            # as in the oracle where timers are armed at add_flow time.
+            probe_valid = probe_tx.valid & sendable
             if pfc:
                 # A paused NIC emits nothing.  Withhold the timer-state
                 # commit for flows whose probe was blocked (their probe
@@ -516,17 +685,18 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 # *delayed* until resume — as in the oracle, where it waits
                 # in the paused NIC queue — not silently lost.
                 blocked = probe_tx.valid & st.paused_nic[src]
-                flows = _bwhere(~blocked, flows_t, flows)
-                probe_valid = probe_tx.valid & (~blocked)
+                flows = _bwhere(sendable & (~blocked), flows_t, flows)
+                probe_valid = probe_valid & (~blocked)
             else:
-                flows = flows_t
+                flows = _bwhere(sendable, flows_t, flows)
 
             # ---- 5. sends: each NIC clocks out <=1 data pkt (RR arb.) ----
             flows_sent, tx = jax.vmap(
                 lambda f: proto.next_packet(f, now))(flows)
-            score = jnp.where(tx.valid, (iota_n - t) % N, N)
+            can_tx = tx.valid & sendable
+            score = jnp.where(can_tx, (iota_n - t) % N, N)
             best = jax.ops.segment_min(score, src, num_segments=NH)
-            sel = tx.valid & (score == best[src])
+            sel = can_tx & (score == best[src])
             if pfc:
                 # a paused NIC injects nothing (state update withheld too,
                 # so the flow re-offers the same packet next tick)
@@ -568,23 +738,31 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 probe=jnp.concatenate([adv.probe, zb, ob]),
                 ecn=jnp.concatenate([adv.ecn, zb, zb]),
                 ent=jnp.concatenate([adv.ent, ent, ent_probe]))
-            M = 2 * TS + 2 * N
             # Two-pass enqueue. Pass 1: drop decision from the occupancy
             # bound qsize + rank-among-valid (over-counts same-tick earlier
             # drops by design — the queue is at threshold then anyway).
             # Pass 2: ring positions from rank-among-ACCEPTED, so accepted
             # packets pack the ring contiguously and a drop never leaves a
-            # stale gap slot.
-            tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
-            same_q = cand_qid[:, None] == cand_qid[None, :]
-            rank_v = jnp.sum(same_q & cand_valid[None, :] & tril,
-                             axis=1).astype(jnp.int32)
+            # stale gap slot.  Small candidate counts use the all-pairs
+            # mask (cheaper than two sorts); collective-scale traces use
+            # the sort-based rank (the mask is O(M^2) per tick).
+            M = 2 * TS + 2 * N
+            if M <= 256:
+                tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
+                same_q = cand_qid[:, None] == cand_qid[None, :]
+
+                def rank_among(flag):
+                    return jnp.sum(same_q & flag[None, :] & tril,
+                                   axis=1).astype(jnp.int32)
+            else:
+                def rank_among(flag):
+                    return _rank_in_queue(cand_qid, flag)
+            rank_v = rank_among(cand_valid)
             occ = qsize[cand_qid] + rank_v
             dropped = cand_valid & (((~cand.probe) & (occ >= data_drop_pkts))
                                     | (occ >= hard_pkts))
             accept = cand_valid & (~dropped)
-            rank_a = jnp.sum(same_q & accept[None, :] & tril,
-                             axis=1).astype(jnp.int32)
+            rank_a = rank_among(accept)
             pos = (qhead[cand_qid] + qsize[cand_qid] + rank_a) % cap
             flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
             q = PktQ(*[f.reshape(-1).at[flat_idx].set(v)
@@ -679,12 +857,40 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             done_tick = jnp.where(done & (st.done_tick < 0),
                                   t.astype(jnp.int32), st.done_tick)
 
+            # message completion: all sub-flows done; newly-completed
+            # messages decrement their children's pending-dep counters
+            # (the children become sendable NEXT tick, step 0 above)
+            undone = jax.ops.segment_sum((~done).astype(jnp.int32),
+                                         dep.msg_of_flow,
+                                         num_segments=n_msgs)
+            msg_done = undone == 0
+            newly = msg_done & (~st.msg_done)
+            if n_edges > 0:
+                dec = jax.ops.segment_sum(
+                    newly[dep.edge_parent].astype(jnp.int32),
+                    dep.edge_child, num_segments=n_msgs)
+                pending = st.pending - dec
+            else:
+                pending = st.pending
+            msg_done_tick = jnp.where(newly, t.astype(jnp.int32),
+                                      st.msg_done_tick)
+            g_undone = jax.ops.segment_sum((~msg_done).astype(jnp.int32),
+                                           dep.group_of_msg,
+                                           num_segments=n_groups)
+            group_done_tick = jnp.where(
+                (g_undone == 0) & (st.group_done_tick < 0),
+                t.astype(jnp.int32), st.group_done_tick)
+
             new_st = FabricState(
                 flows=flows, rcv=rcv, q=q, qhead=qhead, qsize=qsize,
                 pipe=pipe, obl_rr=obl_rr, drops=drops, delivered=delivered,
                 done_tick=done_tick, ing_host=ing_host, ing_sd=ing_sd,
                 ing_up=ing_up, paused_nic=paused_nic, paused_sd=paused_sd,
-                paused_up=paused_up, pauses=pauses)
+                paused_up=paused_up, pauses=pauses,
+                pending=pending, msg_done=msg_done,
+                msg_release_tick=msg_release_tick,
+                msg_done_tick=msg_done_tick,
+                group_done_tick=group_done_tick)
             metrics = {
                 "qsize": qsize[:Q],
                 "drops": drops,
@@ -706,37 +912,67 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
 
 def _check_flows(flows, n_hosts: int) -> None:
     for s_, d_, _ in flows:
-        assert 0 <= s_ < n_hosts and 0 <= d_ < n_hosts and s_ != d_, (s_, d_)
+        if not (0 <= s_ < n_hosts and 0 <= d_ < n_hosts and s_ != d_):
+            raise ValueError(f"bad flow endpoint (src={s_}, dst={d_}) for "
+                             f"{n_hosts} hosts")
 
 
 def _flow_arrays(flows, cfg: FabricConfig):
     src = jnp.asarray([f[0] for f in flows], jnp.int32)
     dst = jnp.asarray([f[1] for f in flows], jnp.int32)
     total_pkts = jnp.asarray(
-        [int(math.ceil(f[2] / cfg.net.mtu_bytes)) for f in flows], jnp.int32)
+        [max(1, int(math.ceil(f[2] / cfg.net.mtu_bytes))) for f in flows],
+        jnp.int32)
     if cfg.roce_entropy_seed is not None:
-        import random
         rng = random.Random(cfg.roce_entropy_seed)
         ent0 = jnp.asarray([rng.randrange(1 << 16) for _ in flows],
                            jnp.int32)
     else:
         # per-flow pinned entropy for non-spray protocols (one QP each, the
-        # analogue of the oracle's rng.randrange(1 << 16))
+        # analogue of the oracle's rng.randrange(1 << 16)); striped
+        # sub-flows of one message get distinct draws via the flow index
         iota_n = jnp.arange(len(flows), dtype=jnp.int32)
         ent0 = ecmp_mix(src, dst, iota_n + jnp.int32(40503)) % (1 << 16)
     return src, dst, total_pkts, ent0
 
 
-def _finish_metrics(metrics: dict, done_tick, cfg: FabricConfig,
-                    T: int, S: int, TS: int) -> dict:
+def _finish_metrics(metrics: dict, final_ix, cfg: FabricConfig,
+                    dims: dict, dep: DepSpec) -> dict:
+    """Attach host-side derived metrics for one run.
+
+    ``final_ix`` is a dict of numpy views (one batch entry) of the final
+    state's completion arrays.  ``fct_us`` is MESSAGE-level: release (deps
+    met) to last-sub-flow completion — identical to the old per-flow FCT
+    for deps-free single-sub-flow traces.
+    """
+    T, S, TS = dims["T"], dims["S"], dims["TS"]
     tick_us = cfg.net.mtu_serialize_us
     _, _, _, target_qdelay_us = _make_protocol(cfg)
     metrics["tick_us"] = tick_us
     metrics["target_qdelay_pkts"] = target_qdelay_us / tick_us
-    metrics["done_tick"] = done_tick
+    metrics["done_tick"] = final_ix["done_tick"]
     # +1: a message is complete when its last ACK lands, i.e. at tick end
+    metrics["subflow_fct_us"] = [
+        float((dt + 1) * tick_us) if dt >= 0 else None
+        for dt in final_ix["done_tick"]]
     metrics["fct_us"] = [
-        float((dt + 1) * tick_us) if dt >= 0 else None for dt in done_tick]
+        float((dt + 1 - max(int(rt), 0)) * tick_us) if dt >= 0 else None
+        for dt, rt in zip(final_ix["msg_done_tick"],
+                          final_ix["msg_release_tick"])]
+    metrics["msg_release_us"] = [
+        float(rt * tick_us) if rt >= 0 else None
+        for rt in final_ix["msg_release_tick"]]
+    metrics["msg_ids"] = dep.msg_ids
+    # Collective (group) metrics only for traces that actually carry
+    # trace structure (dependency edges or several groups) — the events
+    # backend likewise only reports group keys for TraceRunner-scheduled
+    # traces, and the summary-dict contract is that both backends return
+    # the same keys per scenario.
+    if int(dep.edge_parent.shape[0]) > 0 or dep.n_groups > 1:
+        metrics["group_ids"] = dep.group_ids
+        metrics["group_done_us"] = [
+            float((gt + 1) * tick_us) if gt >= 0 else None
+            for gt in final_ix["group_done_tick"]]
     metrics["queue_ids"] = {
         "tor_up": lambda t_, s_: t_ * S + s_,
         "spine_down": lambda s_, t_: TS + s_ * T + t_,
@@ -745,21 +981,90 @@ def _finish_metrics(metrics: dict, done_tick, cfg: FabricConfig,
     return metrics
 
 
+def _final_completions(finals, i: Optional[int] = None) -> dict:
+    get = jax.device_get
+    ix = (lambda a: a) if i is None else (lambda a: a[i])
+    return {k: ix(get(getattr(finals, k)))
+            for k in ("done_tick", "msg_done_tick", "msg_release_tick",
+                      "group_done_tick")}
+
+
+def run_fabric_trace(topo: FatTree, messages, n_ticks: int,
+                     cfg: FabricConfig = FabricConfig()):
+    """Simulate a dependency-edged message trace on the jitted fat-tree.
+
+    ``messages`` is a sequence of records with ``mid/src/dst/size/deps/
+    group`` attributes (``workloads.Message``); ``cfg.subflows`` stripes
+    each message over that many single-QP sub-flows.  Returns
+    (final_state, per-tick metrics + message/group completion metrics).
+    """
+    flows, dep = expand_messages(messages, cfg.subflows)
+    _check_flows(flows, topo.n_hosts)
+    src, dst, total_pkts, ent0 = _flow_arrays(flows, cfg)
+    program = _make_program(topo, len(flows), n_ticks, cfg, dep)
+    final, metrics = jax.jit(program)(src, dst, total_pkts, ent0)
+    metrics = _finish_metrics(metrics, _final_completions(final), cfg,
+                              program.dims, dep)
+    return final, metrics
+
+
 def run_fabric(topo: FatTree,
                flows: Sequence[Tuple[int, int, float]],
                n_ticks: int,
                cfg: FabricConfig = FabricConfig()):
     """Simulate ``flows`` = [(src_host, dst_host, msg_bytes), ...] on a
-    fat-tree for ``n_ticks``; returns (final_state, per-tick metrics)."""
-    _check_flows(flows, topo.n_hosts)
-    src, dst, total_pkts, ent0 = _flow_arrays(flows, cfg)
-    program = _make_program(topo, len(flows), n_ticks, cfg)
-    final, metrics = jax.jit(program)(src, dst, total_pkts, ent0)
-    d = program.dims
-    done_tick = jax.device_get(final.done_tick)
-    metrics = _finish_metrics(metrics, done_tick, cfg,
-                              d["T"], d["S"], d["TS"])
-    return final, metrics
+    fat-tree for ``n_ticks``; returns (final_state, per-tick metrics).
+
+    The deps-free special case of :func:`run_fabric_trace` (one message per
+    flow, striped if ``cfg.subflows > 1``)."""
+    msgs = [_FlowMsg(mid=i, src=s, dst=d, size=b)
+            for i, (s, d, b) in enumerate(flows)]
+    return run_fabric_trace(topo, msgs, n_ticks, cfg)
+
+
+def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
+                           cfg: FabricConfig = FabricConfig()):
+    """vmap a batch of same-structure message traces (e.g. seeds of one
+    collective placement) through ONE jitted fabric program.
+
+    All batch entries must share the dependency structure (message count,
+    deps, groups, sub-flow fan-out) and topology; src/dst/size patterns may
+    differ.  Returns (stacked_final_state, [metrics_dict_per_entry])."""
+    if not messages_batch:
+        raise ValueError("need at least one message trace")
+    expanded = [expand_messages(ms, cfg.subflows) for ms in messages_batch]
+    dep = expanded[0][1]
+    for i, (_, d) in enumerate(expanded[1:], start=1):
+        if int(d.msg_of_flow.shape[0]) != int(dep.msg_of_flow.shape[0]):
+            raise ValueError(
+                f"batch entry {i} has {int(d.msg_of_flow.shape[0])} "
+                f"sub-flows, entry 0 has {int(dep.msg_of_flow.shape[0])}")
+        same_deps = (
+            d.edge_parent.shape == dep.edge_parent.shape
+            and bool(jnp.all(d.edge_parent == dep.edge_parent))
+            and bool(jnp.all(d.edge_child == dep.edge_child))
+            and bool(jnp.all(d.group_of_msg == dep.group_of_msg)))
+        if not same_deps:
+            raise ValueError(
+                f"batch entry {i} has a different dependency/group "
+                f"structure than entry 0 — the whole batch runs under "
+                f"entry 0's static DepSpec, so structures must match")
+    arrs = []
+    for flows, _ in expanded:
+        _check_flows(flows, topo.n_hosts)
+        arrs.append(_flow_arrays(flows, cfg))
+    srcs = jnp.stack([a[0] for a in arrs])
+    dsts = jnp.stack([a[1] for a in arrs])
+    pkts = jnp.stack([a[2] for a in arrs])
+    ents = jnp.stack([a[3] for a in arrs])
+    program = _make_program(topo, int(srcs.shape[1]), n_ticks, cfg, dep)
+    finals, stacked = jax.jit(jax.vmap(program))(srcs, dsts, pkts, ents)
+    per_entry = []
+    for i in range(len(messages_batch)):
+        m = {k: v[i] for k, v in stacked.items()}
+        per_entry.append(_finish_metrics(m, _final_completions(finals, i),
+                                         cfg, program.dims, dep))
+    return finals, per_entry
 
 
 def run_fabric_batch(topo: FatTree,
@@ -767,30 +1072,13 @@ def run_fabric_batch(topo: FatTree,
                      n_ticks: int,
                      cfg: FabricConfig = FabricConfig()):
     """vmap a batch of same-shape flow lists (e.g. seeds of one workload)
-    through ONE jitted fabric program.
-
-    All batch entries must have the same flow count and run on the same
-    topology/config; returns (stacked_final_state, [metrics_dict_per_entry]).
-    """
-    n = {len(fl) for fl in flows_batch}
-    assert len(n) == 1, f"flow lists must be same-shape, got sizes {n}"
-    for fl in flows_batch:
-        _check_flows(fl, topo.n_hosts)
-    arrs = [_flow_arrays(fl, cfg) for fl in flows_batch]
-    srcs = jnp.stack([a[0] for a in arrs])
-    dsts = jnp.stack([a[1] for a in arrs])
-    pkts = jnp.stack([a[2] for a in arrs])
-    ents = jnp.stack([a[3] for a in arrs])
-    program = _make_program(topo, n.pop(), n_ticks, cfg)
-    finals, stacked = jax.jit(jax.vmap(program))(srcs, dsts, pkts, ents)
-    d = program.dims
-    done_ticks = jax.device_get(finals.done_tick)
-    per_seed = []
-    for i in range(len(flows_batch)):
-        m = {k: v[i] for k, v in stacked.items()}
-        per_seed.append(_finish_metrics(m, done_ticks[i], cfg,
-                                        d["T"], d["S"], d["TS"]))
-    return finals, per_seed
+    through ONE jitted fabric program (deps-free special case)."""
+    sizes = {len(fl) for fl in flows_batch}
+    if len(sizes) != 1:
+        raise ValueError(f"flow lists must be same-shape, got sizes {sizes}")
+    msgs_batch = [[_FlowMsg(mid=i, src=s, dst=d, size=b)
+                   for i, (s, d, b) in enumerate(fl)] for fl in flows_batch]
+    return run_fabric_trace_batch(topo, msgs_batch, n_ticks, cfg)
 
 
 def summarize(metrics: dict) -> dict:
@@ -798,14 +1086,26 @@ def summarize(metrics: dict) -> dict:
 
     Keys match ``workloads._summarize_sim`` so fabric and oracle results are
     directly comparable; ``pauses`` counts PFC xoff events (0 when PFC is
-    off or the protocol runs lossy).
+    off or the protocol runs lossy).  When the trace carries group
+    structure, the TraceRunner-style collective keys (``group_fct`` /
+    ``max_collective_time`` / ``finished_groups`` / ``total_groups``) ride
+    along, keyed by the caller's original group ids.
     """
-    import numpy as np
     fcts = [f for f in metrics["fct_us"] if f is not None]
-    return {
+    out = {
         "max_fct": max(fcts) if fcts else float("nan"),
         "avg_fct": sum(fcts) / len(fcts) if fcts else float("nan"),
         "unfinished": sum(1 for f in metrics["fct_us"] if f is None),
         "drops": int(np.asarray(metrics["drops"])[-1]),
         "pauses": int(np.asarray(metrics["pauses"])[-1]),
     }
+    gd = metrics.get("group_done_us")
+    if gd is not None:
+        gids = metrics.get("group_ids", tuple(range(len(gd))))
+        group_fct = {g: t for g, t in zip(gids, gd) if t is not None}
+        out["group_fct"] = group_fct
+        out["max_collective_time"] = (max(group_fct.values())
+                                      if group_fct else float("nan"))
+        out["finished_groups"] = len(group_fct)
+        out["total_groups"] = len(gd)
+    return out

@@ -1,37 +1,54 @@
-"""Workload generators driving the simulators (Section 4.2/4.3).
+"""The ONE experiment API (Section 4.2/4.3): Scenario + RunConfig + run().
 
-One scenario API, two backends.  A :class:`Scenario` is a plain config
-object — topology + network + an explicit flow list — that runs unchanged
-on either simulator:
+Every experiment in the paper's evaluation matrix is a :class:`Scenario` —
+topology + network + a list of :class:`Message` records carrying optional
+*dependency edges* (``mid/src/dst/size/deps/group``) — executed by a single
+entry point against a :class:`RunConfig`:
 
-* ``run_on_fabric``  — the jitted multi-queue fat-tree (``fabric.py``),
-  running BOTH protocols: STrack (adaptive / oblivious / fixed-path spray)
-  and RoCEv2 (DCQCN + go-back-N, with or without PFC), ~1000x faster;
-  ``run_seed_sweep_on_fabric`` vmaps a batch of same-shape scenarios
-  (e.g. N seeds of one workload) through a single jitted program;
-* ``run_on_events`` — the discrete-event oracle (``events.py``), used for
-  parity testing plus dependency-scheduled collective traces via
-  :class:`TraceRunner`.
+    >>> res = run(scenario, RunConfig(backend="fabric", protocol="strack"))
+    >>> rows = sweep(scenarios, RunConfig(protocol="rocev2", subflows=4))
 
-Builders cover the paper's evaluation matrix: ``permutation_scenario``
-(Figs 8-11), ``incast_scenario`` (Figs 16-20), ``oversub_scenario``
-(Figs 12-13) and ``linkdown_scenario`` (Figs 14-15).  Both runners return
-the same summary dict (max_fct / avg_fct / unfinished / drops / pauses) so
-results are directly comparable — the parity tests in
-``tests/test_fabric.py`` and ``tests/test_fabric_roce.py`` rely on that.
+``RunConfig`` names the backend ("fabric" = the jitted multi-queue
+fat-tree in ``fabric.py``, ~1000x faster; "events" = the discrete-event
+oracle in ``events.py``), the protocol ("strack" | "rocev2"), the STrack
+load-balance mode (adaptive / oblivious / fixed spray), PFC losslessness,
+message->sub-flow striping (``subflows=4`` is the paper's tuned 4-QP
+RoCEv2), queue tracing and seeds.  Both backends honour dependency
+scheduling — a message launches only once all its ``deps`` completed — so
+the collective traces of Figs 21-28 run on the fast path too; plain flow
+lists are simply the deps-free special case.
 
-Legacy entry points ``run_permutation(sim, ...)`` / ``run_incast(sim, ...)``
-keep working on a prebuilt :class:`NetSim`.
+Builders cover the evaluation matrix: ``permutation_scenario`` (Figs
+8-11), ``incast_scenario`` (Figs 16-20), ``oversub_scenario`` (Figs
+12-13), ``linkdown_scenario`` (Figs 14-15) and ``collective_scenario``
+(Figs 1-2, 21-28: ring / double-binary-tree / halving-doubling allreduce
+and windowed all-to-all via ``repro.collective.algorithms``, multi-job
+placement included).  Both backends return the same summary dict
+(max_fct / avg_fct / unfinished / drops / pauses, plus group_fct /
+max_collective_time / finished_groups / total_groups for grouped traces)
+so results are directly comparable — the parity gates in
+``tests/test_fabric*.py`` and ``tests/test_collective_fabric.py`` rely on
+that.
+
+Legacy entry points (``run_on_fabric`` / ``run_seed_sweep_on_fabric`` /
+``run_on_events`` / ``run_permutation`` / ``run_incast``) remain as thin
+deprecation shims over ``run()``/``sweep()``; see docs/experiments.md for
+the migration table.  :class:`TraceRunner` is the event-backend dependency
+scheduler (also the parity oracle for the fabric's).
 """
 from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
-from ..core.params import NetworkSpec
+import numpy as np
+
+from ..core.params import NetworkSpec, make_roce_params
 from .events import NetSim
+from .fabric import (FabricConfig, run_fabric_trace, run_fabric_trace_batch,
+                     summarize)
 from .topology import FatTree, full_bisection, oversubscribed, \
     with_link_failures
 
@@ -47,36 +64,127 @@ def permutation_pairs(n_hosts: int, seed: int = 0) -> list[tuple[int, int]]:
 
 
 # --------------------------------------------------------------------------- #
-# Scenario configs — one object, both backends
+# Messages + Scenario — one object, both backends
 # --------------------------------------------------------------------------- #
 
 @dataclass(frozen=True)
+class Message:
+    """One message of a workload trace, with dependency edges.
+
+    ``src``/``dst`` are host ids; ``deps`` lists the ``mid``s that must
+    complete before this message may launch (paper Section 4.3 trace
+    semantics); ``group`` tags which collective instance the message
+    belongs to.  A plain flow is a ``Message`` with no deps.
+    """
+
+    mid: int
+    src: int
+    dst: int
+    size: float
+    deps: Tuple[int, ...] = ()
+    group: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "deps", tuple(self.deps))
+
+
+#: Deprecated alias — collective trace generators historically emitted
+#: ``TraceMessage``; the unified API calls them :class:`Message`.
+TraceMessage = Message
+
+
+@dataclass(frozen=True)
 class Scenario:
-    """A backend-agnostic workload: who sends how much over which fabric."""
+    """A backend-agnostic workload: who sends what, after whom, where."""
 
     name: str
     topo: FatTree
     net: NetworkSpec
-    flows: Tuple[Tuple[int, int, float], ...]  # (src, dst, msg_bytes)
+    messages: Tuple[Message, ...]
+
+    @classmethod
+    def from_flows(cls, name: str, topo: FatTree, net: NetworkSpec,
+                   flows: Sequence[Tuple[int, int, float]]) -> "Scenario":
+        """Wrap a plain [(src, dst, bytes), ...] list (the deps-free case)."""
+        return cls(name=name, topo=topo, net=net,
+                   messages=tuple(Message(mid=i, src=s, dst=d, size=float(b))
+                                  for i, (s, d, b) in enumerate(flows)))
+
+    @property
+    def flows(self) -> Tuple[Tuple[int, int, float], ...]:
+        """The flow-list view (message sizes, dependency edges dropped)."""
+        return tuple((m.src, m.dst, m.size) for m in self.messages)
+
+    @property
+    def has_deps(self) -> bool:
+        return any(m.deps for m in self.messages)
+
+    @property
+    def n_groups(self) -> int:
+        return len({m.group for m in self.messages})
+
+    @property
+    def is_trace(self) -> bool:
+        """True when the scenario carries trace structure (dependency
+        edges or several groups) and so reports collective group metrics
+        on BOTH backends (TraceRunner scheduling on events)."""
+        return self.has_deps or self.n_groups > 1
 
     def default_ticks(self) -> int:
-        """Ticks for a fabric run: worst bottleneck serialisation x margin."""
+        """Tick budget for a fabric run: the larger of the worst
+        per-destination serialisation and the dependency critical path
+        (chained traces serialise whole messages end-to-end, each handoff
+        costing a delivery+ack round trip), with convergence margin."""
         mtu = self.net.mtu_bytes
-        per_dst: dict[int, float] = {}
-        for _, d, b in self.flows:
-            per_dst[d] = per_dst.get(d, 0.0) + math.ceil(b / mtu)
-        bottleneck = max(per_dst.values()) if per_dst else 1.0
         rtt_ticks = self.net.base_rtt_us / self.net.mtu_serialize_us
-        return int(4 * bottleneck + 30 * rtt_ticks + 1000)
+        pkts: dict[int, float] = {}
+        per_dst: dict[int, float] = {}
+        for m in self.messages:
+            pkts[m.mid] = math.ceil(m.size / mtu)
+            per_dst[m.dst] = per_dst.get(m.dst, 0.0) + pkts[m.mid]
+        bottleneck = max(per_dst.values()) if per_dst else 1.0
+        # critical path over the dependency DAG (iterative DFS — edges may
+        # point at any mid, not just smaller ones; deps on the current DFS
+        # path would be cycles and are skipped rather than looping)
+        by_mid = {m.mid: m for m in self.messages}
+        depth: dict[int, float] = {}
+        visiting: set[int] = set()
+        for root in by_mid:
+            stack = [root]
+            while stack:
+                mid = stack[-1]
+                if mid in depth:
+                    stack.pop()
+                    visiting.discard(mid)
+                    continue
+                visiting.add(mid)
+                todo = [d for d in by_mid[mid].deps
+                        if d in by_mid and d not in depth
+                        and d not in visiting]
+                if todo:
+                    stack.extend(todo)
+                    continue
+                stack.pop()
+                visiting.discard(mid)
+                base = max((depth[d] for d in by_mid[mid].deps
+                            if d in depth), default=0.0)
+                depth[mid] = base + pkts[mid] + rtt_ticks
+        crit = max(depth.values()) if depth else 1.0
+        return int(4 * max(bottleneck, crit) + 30 * rtt_ticks + 1000)
 
+
+# --------------------------------------------------------------------------- #
+# Scenario builders — the paper's evaluation matrix
+# --------------------------------------------------------------------------- #
 
 def permutation_scenario(topo: FatTree, msg_bytes: float,
                          net: Optional[NetworkSpec] = None,
                          seed: int = 0) -> Scenario:
     net = net or NetworkSpec()
     pairs = permutation_pairs(topo.n_hosts, seed)
-    return Scenario(name=f"permutation_{topo.n_hosts}", topo=topo, net=net,
-                    flows=tuple((s, d, float(msg_bytes)) for s, d in pairs))
+    return Scenario.from_flows(
+        f"permutation_{topo.n_hosts}", topo, net,
+        [(s, d, float(msg_bytes)) for s, d in pairs])
 
 
 def incast_scenario(topo: FatTree, fan_in: int, msg_bytes: float,
@@ -87,8 +195,9 @@ def incast_scenario(topo: FatTree, fan_in: int, msg_bytes: float,
     rng = random.Random(seed)
     candidates = [h for h in range(topo.n_hosts) if h != dst]
     srcs = rng.sample(candidates, min(fan_in, len(candidates)))
-    return Scenario(name=f"incast_{fan_in}to1", topo=topo, net=net,
-                    flows=tuple((s, dst, float(msg_bytes)) for s in srcs))
+    return Scenario.from_flows(
+        f"incast_{fan_in}to1", topo, net,
+        [(s, dst, float(msg_bytes)) for s in srcs])
 
 
 def oversub_scenario(n_tor: int, hosts_per_tor: int, ratio: int,
@@ -97,7 +206,7 @@ def oversub_scenario(n_tor: int, hosts_per_tor: int, ratio: int,
     topo = oversubscribed(n_tor, hosts_per_tor, ratio)
     sc = permutation_scenario(topo, msg_bytes, net, seed)
     return Scenario(name=f"oversub_{ratio}:1", topo=topo, net=sc.net,
-                    flows=sc.flows)
+                    messages=sc.messages)
 
 
 def linkdown_scenario(topo_kw: dict, frac_links_down: float,
@@ -112,22 +221,142 @@ def linkdown_scenario(topo_kw: dict, frac_links_down: float,
                               seed=seed)
     sc = permutation_scenario(topo, msg_bytes, net, seed)
     return Scenario(name=f"linkdown_{n_down}", topo=topo, net=sc.net,
-                    flows=sc.flows)
+                    messages=sc.messages)
+
+
+def collective_scenario(topo: FatTree, algo: str, n_jobs: int,
+                        ranks_per_job: int, collective_bytes: float,
+                        net: Optional[NetworkSpec] = None, seed: int = 0,
+                        **algo_kw) -> Scenario:
+    """Dependency-scheduled collective trace (Figs 1-2, 21-28) as a
+    Scenario: ``n_jobs`` instances of ``algo`` (ring / dbt / hd / a2a from
+    ``repro.collective.algorithms``), each group randomly placed on the
+    cluster; rank ids are resolved to hosts here so the trace runs
+    unchanged on either backend.  ``algo_kw`` reaches the generator
+    (``chunk=``, ``window=`` for a2a)."""
+    from ..collective.algorithms import multi_job  # cycle: algorithms ← us
+    net = net or NetworkSpec()
+    msgs, placement = multi_job(algo, n_jobs, ranks_per_job, topo.n_hosts,
+                                collective_bytes, seed=seed, **algo_kw)
+    return Scenario(
+        name=f"{algo}_x{n_jobs}r{ranks_per_job}",
+        topo=topo, net=net,
+        messages=tuple(Message(mid=m.mid, src=placement[m.src],
+                               dst=placement[m.dst], size=m.size,
+                               deps=tuple(m.deps), group=m.group)
+                       for m in msgs))
 
 
 # --------------------------------------------------------------------------- #
-# Backend runners
+# RunConfig + run()/sweep(): the single entry point, both backends
 # --------------------------------------------------------------------------- #
 
-def _fabric_cfg(sc: Scenario, lb_mode: str, max_paths: int, protocol: str,
-                pfc: Optional[bool], switch_buffer_bytes: Optional[float],
-                roce_entropy_seed: Optional[int]):
-    from .fabric import FabricConfig
-    kw = dict(net=sc.net, max_paths=max_paths, lb_mode=lb_mode,
-              protocol=protocol, pfc=pfc,
-              roce_entropy_seed=roce_entropy_seed)
-    if switch_buffer_bytes is not None:
-        kw["switch_buffer_bytes"] = switch_buffer_bytes
+BACKENDS = ("fabric", "events")
+PROTOCOLS = ("strack", "rocev2")
+LB_MODES = ("adaptive", "oblivious", "fixed")
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Everything about HOW a scenario runs (the scenario says WHAT)."""
+
+    backend: str = "fabric"          # fabric (jitted) | events (oracle)
+    protocol: str = "strack"         # strack | rocev2
+    lb_mode: str = "adaptive"        # STrack spray: adaptive|oblivious|fixed
+    pfc: Optional[bool] = None       # None -> lossless iff rocev2
+    max_paths: int = 64              # STrack entropy space
+    subflows: int = 1                # message striping (4 = tuned RoCEv2)
+    n_ticks: Optional[int] = None    # fabric horizon (None -> default_ticks)
+    switch_buffer_bytes: Optional[float] = None  # None -> backend default
+    roce_entropy_seed: Optional[int] = None      # align QP entropy w/ oracle
+    trace_queues: bool = False       # fabric: per-tick queue-depth settle
+    qdelay_threshold_us: float = 8.0
+    seed: int = 1234                 # events-backend rng seed
+    until: float = 1e9               # events-backend horizon (us)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+        if self.protocol not in PROTOCOLS:
+            raise ValueError(f"unknown protocol {self.protocol!r}; "
+                             f"expected one of {PROTOCOLS}")
+        if self.lb_mode not in LB_MODES:
+            raise ValueError(f"unknown lb_mode {self.lb_mode!r}; "
+                             f"expected one of {LB_MODES}")
+
+
+def run(sc: Scenario, cfg: RunConfig = RunConfig()) -> dict:
+    """Run one scenario under one config; oracle-comparable summary dict.
+
+    Dispatches on ``cfg.backend``: the jitted fabric honours dependency
+    gating and sub-flow striping inside its ``lax.scan``; the event oracle
+    uses :class:`TraceRunner` (deps) or plain flow addition (no deps).
+    """
+    if cfg.backend == "fabric":
+        return _run_fabric_backend(sc, cfg)
+    return _run_events_backend(sc, cfg)
+
+
+def sweep(scenarios: Sequence[Scenario],
+          cfg: RunConfig = RunConfig()) -> list:
+    """Run a batch of same-structure scenarios (e.g. N seeds of one
+    workload) under one config.
+
+    On the fabric backend the whole batch is vmapped through ONE jitted
+    program — amortising compile and pipelining the sweep — which requires
+    a shared topology, network and message/dependency structure (different
+    src/dst/size patterns are fine: that is the point).  On the events
+    backend it simply loops.  Returns one summary dict per scenario.
+    """
+    if not scenarios:
+        raise ValueError("sweep() needs at least one scenario")
+    if cfg.backend != "fabric":
+        return [run(sc, cfg) for sc in scenarios]
+    sc0 = scenarios[0]
+    for sc in scenarios[1:]:
+        if sc.topo != sc0.topo:
+            raise ValueError(
+                f"sweep() scenarios must share a topology: field 'topo' of "
+                f"{sc.name!r} is {sc.topo}, of {sc0.name!r} is {sc0.topo}")
+        if sc.net != sc0.net:
+            raise ValueError(
+                f"sweep() scenarios must share a network: field 'net' of "
+                f"{sc.name!r} is {sc.net}, of {sc0.name!r} is {sc0.net}")
+        if len(sc.messages) != len(sc0.messages):
+            raise ValueError(
+                f"sweep() scenarios must share the message structure: "
+                f"field 'messages' of {sc.name!r} has {len(sc.messages)} "
+                f"entries, of {sc0.name!r} has {len(sc0.messages)}")
+        structure = [(m.deps, m.group) for m in sc.messages]
+        structure0 = [(m.deps, m.group) for m in sc0.messages]
+        if structure != structure0:
+            bad = next(i for i, (a, b) in
+                       enumerate(zip(structure, structure0)) if a != b)
+            raise ValueError(
+                f"sweep() scenarios must share the dependency structure: "
+                f"field 'messages[{bad}].deps/group' of {sc.name!r} is "
+                f"{structure[bad]}, of {sc0.name!r} is {structure0[bad]}")
+    fcfg = _fabric_cfg(sc0, cfg)
+    ticks = cfg.n_ticks or max(sc.default_ticks() for sc in scenarios)
+    _, per_entry = run_fabric_trace_batch(
+        sc0.topo, [sc.messages for sc in scenarios], ticks, fcfg)
+    outs = []
+    for sc, metrics in zip(scenarios, per_entry):
+        outs.append(_fabric_summary(sc, cfg, metrics))
+    return outs
+
+
+# --------------------------------------------------------------------------- #
+# Backend plumbing
+# --------------------------------------------------------------------------- #
+
+def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
+    kw = dict(net=sc.net, max_paths=cfg.max_paths, lb_mode=cfg.lb_mode,
+              protocol=cfg.protocol, pfc=cfg.pfc, subflows=cfg.subflows,
+              roce_entropy_seed=cfg.roce_entropy_seed)
+    if cfg.switch_buffer_bytes is not None:
+        kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
     return FabricConfig(**kw)
 
 
@@ -135,95 +364,51 @@ def _queue_settle_us(metrics: dict, threshold_us: float) -> float:
     """Last simulated time any fabric queue's delay (depth x tick) exceeded
     ``threshold_us`` — the fabric analogue of the event backend's
     queue-delay logs (Fig 8 settling time)."""
-    import numpy as np
     q = np.asarray(metrics["qsize"], dtype=float)      # [ticks, Q]
     tick = metrics["tick_us"]
     over = np.nonzero((q * tick > threshold_us).any(axis=1))[0]
     return float((over[-1] + 1) * tick) if len(over) else 0.0
 
 
-def run_on_fabric(sc: Scenario, n_ticks: Optional[int] = None,
-                  lb_mode: str = "adaptive", max_paths: int = 64,
-                  protocol: str = "strack", pfc: Optional[bool] = None,
-                  switch_buffer_bytes: Optional[float] = None,
-                  roce_entropy_seed: Optional[int] = None,
-                  trace_queues: bool = False,
-                  qdelay_threshold_us: float = 8.0) -> dict:
-    """Run a scenario on the jitted fat-tree; event-oracle-style summary.
-
-    ``protocol`` selects the transport ("strack" | "rocev2"); ``pfc`` makes
-    the queues lossless (defaults to on for rocev2, off for strack).  With
-    ``trace_queues`` the summary gains ``queue_settle_us`` derived from the
-    per-tick queue-depth traces.
-    """
-    from .fabric import run_fabric, summarize
-    cfg = _fabric_cfg(sc, lb_mode, max_paths, protocol, pfc,
-                      switch_buffer_bytes, roce_entropy_seed)
-    _, metrics = run_fabric(sc.topo, sc.flows,
-                            n_ticks or sc.default_ticks(), cfg)
+def _fabric_summary(sc: Scenario, cfg: RunConfig, metrics: dict) -> dict:
     out = summarize(metrics)
     out["backend"] = "fabric"
-    if trace_queues:
+    out["name"] = sc.name
+    if cfg.trace_queues:
         out["queue_settle_us"] = _queue_settle_us(metrics,
-                                                  qdelay_threshold_us)
+                                                  cfg.qdelay_threshold_us)
     return out
 
 
-def run_seed_sweep_on_fabric(scenarios: Sequence[Scenario],
-                             n_ticks: Optional[int] = None,
-                             lb_mode: str = "adaptive", max_paths: int = 64,
-                             protocol: str = "strack",
-                             pfc: Optional[bool] = None,
-                             switch_buffer_bytes: Optional[float] = None,
-                             roce_entropy_seed: Optional[int] = None,
-                             trace_queues: bool = False,
-                             qdelay_threshold_us: float = 8.0) -> list:
-    """Batch same-shape scenarios (seeds of one workload) into ONE vmapped
-    jit of the fabric — amortizing compile and pipelining the sweep.
-
-    All scenarios must share topology, network and flow count (different
-    src/dst/size patterns are fine — that is the point).  Returns one
-    summary dict per scenario, in order.
-    """
-    from .fabric import run_fabric_batch, summarize
-    assert scenarios, "need at least one scenario"
-    sc0 = scenarios[0]
-    for sc in scenarios[1:]:
-        assert sc.topo == sc0.topo and sc.net == sc0.net, \
-            "seed sweep requires a shared topology and network"
-    cfg = _fabric_cfg(sc0, lb_mode, max_paths, protocol, pfc,
-                      switch_buffer_bytes, roce_entropy_seed)
-    ticks = n_ticks or max(sc.default_ticks() for sc in scenarios)
-    _, per_seed = run_fabric_batch(sc0.topo, [sc.flows for sc in scenarios],
-                                   ticks, cfg)
-    outs = []
-    for sc, metrics in zip(scenarios, per_seed):
-        out = summarize(metrics)
-        out["backend"] = "fabric"
-        out["name"] = sc.name
-        if trace_queues:
-            out["queue_settle_us"] = _queue_settle_us(metrics,
-                                                      qdelay_threshold_us)
-        outs.append(out)
-    return outs
+def _run_fabric_backend(sc: Scenario, cfg: RunConfig) -> dict:
+    fcfg = _fabric_cfg(sc, cfg)
+    _, metrics = run_fabric_trace(sc.topo, sc.messages,
+                                  cfg.n_ticks or sc.default_ticks(), fcfg)
+    return _fabric_summary(sc, cfg, metrics)
 
 
-def run_on_events(sc: Scenario, transport: str = "strack",
-                  until: float = 1e9, **netsim_kw) -> dict:
-    """Run the same scenario on the discrete-event oracle."""
-    sim = NetSim(sc.topo, sc.net, transport=transport, **netsim_kw)
-    return run_scenario_on_sim(sim, sc, until=until)
+def _events_sim(sc: Scenario, cfg: RunConfig, **netsim_kw) -> NetSim:
+    kw = dict(seed=cfg.seed)
+    if cfg.switch_buffer_bytes is not None:
+        kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
+    kw.update(netsim_kw)
+    if cfg.protocol == "strack":
+        if cfg.lb_mode == "fixed":
+            raise ValueError("lb_mode='fixed' (single-path pinning) only "
+                             "exists on the fabric backend")
+        # a caller-provided kwarg (legacy shim path) wins over lb_mode
+        obl = kw.pop("oblivious_spray", cfg.lb_mode == "oblivious")
+        return NetSim(sc.topo, sc.net, transport="strack",
+                      oblivious_spray=obl, **kw)
+    rp = kw.pop("roce_params",
+                make_roce_params(sc.net, qps_per_conn=cfg.subflows))
+    return NetSim(sc.topo, sc.net, transport="roce", roce_params=rp, **kw)
 
 
-def run_scenario_on_sim(sim: NetSim, sc: Scenario,
-                        until: float = 1e9) -> dict:
-    """Run a scenario on a prebuilt NetSim (custom params / queue logging)."""
-    for s, d, b in sc.flows:
-        sim.add_flow(s, d, b)
-    sim.run(until=until)
-    out = _summarize_sim(sim)
-    out["backend"] = "events"
-    return out
+def _run_events_backend(sc: Scenario, cfg: RunConfig,
+                        **netsim_kw) -> dict:
+    sim = _events_sim(sc, cfg, **netsim_kw)
+    return run_scenario_on_sim(sim, sc, until=cfg.until)
 
 
 def _summarize_sim(sim: NetSim) -> dict:
@@ -238,52 +423,17 @@ def _summarize_sim(sim: NetSim) -> dict:
 
 
 # --------------------------------------------------------------------------- #
-# Legacy NetSim entry points (benchmarks/incast.py, collectives, examples)
+# TraceRunner: the event-backend dependency scheduler (fabric parity oracle)
 # --------------------------------------------------------------------------- #
-
-def run_permutation(sim: NetSim, msg_bytes: float, seed: int = 0,
-                    until: float = 1e9) -> dict:
-    pairs = permutation_pairs(sim.topo.n_hosts, seed)
-    for s, d in pairs:
-        sim.add_flow(s, d, msg_bytes)
-    sim.run(until=until)
-    return _summarize_sim(sim)
-
-
-def run_incast(sim: NetSim, fan_in: int, msg_bytes: float, dst: int = 0,
-               until: float = 1e9, seed: int = 0) -> dict:
-    """fan_in sources (on other ToRs where possible) -> one destination."""
-    sc = incast_scenario(sim.topo, fan_in, msg_bytes, dst=dst, seed=seed,
-                         net=sim.net)
-    for s, d, b in sc.flows:
-        sim.add_flow(s, d, b)
-    sim.run(until=until)
-    return _summarize_sim(sim)
-
-
-# --------------------------------------------------------------------------- #
-# Dependency-scheduled message traces (collectives) — events backend only
-# --------------------------------------------------------------------------- #
-
-@dataclass
-class TraceMessage:
-    """One message of a collective trace with dependency edges."""
-
-    mid: int
-    src: int                       # rank (mapped to host via placement)
-    dst: int
-    size: float
-    deps: list[int] = field(default_factory=list)  # message ids
-    group: int = 0                 # which collective instance
-    started: bool = False
-    done: bool = False
-
 
 class TraceRunner:
     """Replays dependency traces on a NetSim: a message launches when all
-    its dependencies have completed (paper Section 4.3 trace semantics)."""
+    its dependencies have completed (paper Section 4.3 trace semantics).
 
-    def __init__(self, sim: NetSim, messages: list[TraceMessage],
+    ``placement`` maps message src/dst ids to hosts (identity when the
+    messages already carry host ids, as ``Scenario.messages`` do)."""
+
+    def __init__(self, sim: NetSim, messages: list,
                  placement: dict[int, int]):
         self.sim = sim
         self.msgs = {m.mid: m for m in messages}
@@ -294,14 +444,14 @@ class TraceRunner:
             for d in m.deps:
                 self.children[d].append(m.mid)
         self.flow_to_msg: dict[int, int] = {}
+        self.done: set[int] = set()
         self.group_done_ts: dict[int, float] = {}
         self.group_msgs: dict[int, int] = {}
         for m in messages:
             self.group_msgs[m.group] = self.group_msgs.get(m.group, 0) + 1
         sim.on_flow_done = self._on_flow_done
 
-    def _launch(self, m: TraceMessage, now: float):
-        m.started = True
+    def _launch(self, m: Message, now: float):
         fl = self.sim.add_flow(self.placement[m.src], self.placement[m.dst],
                                m.size, start_ts=now, meta=m.mid)
         self.flow_to_msg[fl.id] = m.mid
@@ -311,7 +461,7 @@ class TraceRunner:
         if mid is None:
             return
         m = self.msgs[mid]
-        m.done = True
+        self.done.add(mid)
         self.group_msgs[m.group] -= 1
         if self.group_msgs[m.group] == 0:
             self.group_done_ts[m.group] = now
@@ -335,3 +485,91 @@ class TraceRunner:
             "drops": self.sim.total_drops,
             "pauses": len(self.sim.pause_log),
         }
+
+
+# --------------------------------------------------------------------------- #
+# Deprecated shims — thin wrappers over run()/sweep() (docs/experiments.md)
+# --------------------------------------------------------------------------- #
+
+def run_on_fabric(sc: Scenario, n_ticks: Optional[int] = None,
+                  lb_mode: str = "adaptive", max_paths: int = 64,
+                  protocol: str = "strack", pfc: Optional[bool] = None,
+                  switch_buffer_bytes: Optional[float] = None,
+                  roce_entropy_seed: Optional[int] = None,
+                  trace_queues: bool = False,
+                  qdelay_threshold_us: float = 8.0) -> dict:
+    """Deprecated: use ``run(sc, RunConfig(backend="fabric", ...))``."""
+    return run(sc, RunConfig(
+        backend="fabric", protocol=protocol, lb_mode=lb_mode,
+        max_paths=max_paths, pfc=pfc, n_ticks=n_ticks,
+        switch_buffer_bytes=switch_buffer_bytes,
+        roce_entropy_seed=roce_entropy_seed, trace_queues=trace_queues,
+        qdelay_threshold_us=qdelay_threshold_us))
+
+
+def run_seed_sweep_on_fabric(scenarios: Sequence[Scenario],
+                             n_ticks: Optional[int] = None,
+                             lb_mode: str = "adaptive", max_paths: int = 64,
+                             protocol: str = "strack",
+                             pfc: Optional[bool] = None,
+                             switch_buffer_bytes: Optional[float] = None,
+                             roce_entropy_seed: Optional[int] = None,
+                             trace_queues: bool = False,
+                             qdelay_threshold_us: float = 8.0) -> list:
+    """Deprecated: use ``sweep(scenarios, RunConfig(...))``."""
+    return sweep(scenarios, RunConfig(
+        backend="fabric", protocol=protocol, lb_mode=lb_mode,
+        max_paths=max_paths, pfc=pfc, n_ticks=n_ticks,
+        switch_buffer_bytes=switch_buffer_bytes,
+        roce_entropy_seed=roce_entropy_seed, trace_queues=trace_queues,
+        qdelay_threshold_us=qdelay_threshold_us))
+
+
+def run_on_events(sc: Scenario, transport: str = "strack",
+                  until: float = 1e9, **netsim_kw) -> dict:
+    """Deprecated: use ``run(sc, RunConfig(backend="events", ...))``."""
+    seed = netsim_kw.pop("seed", 1234)
+    cfg = RunConfig(backend="events",
+                    protocol="rocev2" if transport == "roce" else transport,
+                    until=until, seed=seed)
+    return _run_events_backend(sc, cfg, **netsim_kw)
+
+
+def run_scenario_on_sim(sim: NetSim, sc: Scenario,
+                        until: float = 1e9) -> dict:
+    """Run a scenario on a prebuilt NetSim (custom params / queue logging).
+
+    Honours dependency edges via :class:`TraceRunner`."""
+    if sc.is_trace:
+        placement = {h: h for m in sc.messages for h in (m.src, m.dst)}
+        res = TraceRunner(sim, list(sc.messages), placement).run(until=until)
+        out = {**_summarize_sim(sim), **res}
+    else:
+        for s, d, b in sc.flows:
+            sim.add_flow(s, d, b)
+        sim.run(until=until)
+        out = _summarize_sim(sim)
+    out["backend"] = "events"
+    out["name"] = sc.name
+    return out
+
+
+def run_permutation(sim: NetSim, msg_bytes: float, seed: int = 0,
+                    until: float = 1e9) -> dict:
+    """Deprecated legacy NetSim entry point (prebuilt sim)."""
+    pairs = permutation_pairs(sim.topo.n_hosts, seed)
+    for s, d in pairs:
+        sim.add_flow(s, d, msg_bytes)
+    sim.run(until=until)
+    return _summarize_sim(sim)
+
+
+def run_incast(sim: NetSim, fan_in: int, msg_bytes: float, dst: int = 0,
+               until: float = 1e9, seed: int = 0) -> dict:
+    """Deprecated legacy NetSim entry point (prebuilt sim)."""
+    sc = incast_scenario(sim.topo, fan_in, msg_bytes, dst=dst, seed=seed,
+                         net=sim.net)
+    for s, d, b in sc.flows:
+        sim.add_flow(s, d, b)
+    sim.run(until=until)
+    return _summarize_sim(sim)

@@ -1,0 +1,196 @@
+"""Dependency-scheduled collectives on the jitted fabric vs the
+TraceRunner oracle (the acceptance gate for the unified experiment API),
+plus unit tests of the new machinery: message->sub-flow striping entropy,
+dependency-aware tick budgeting, the run()/sweep() contract and the
+sweep() structure validation.
+
+Parity band: the fabric is a tick-quantised approximation that folds the
+full configured base RTT into each data->ack round trip, while the
+oracle's per-hop propagation sums to somewhat less at high link speed;
+dependency chains repeat that per-handoff constant once per step, so
+collective times agree within a wider band than single-shot FCTs.  Tests
+run at 100 Gbps with serialisation-dominated chunks to keep the band
+meaningful.
+"""
+import numpy as np
+import pytest
+
+from repro.core.params import NetworkSpec
+from repro.sim.fabric import FabricConfig, _flow_arrays, expand_messages
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import (Message, RunConfig, Scenario,
+                                 collective_scenario, permutation_scenario,
+                                 run, sweep)
+
+NET = NetworkSpec(link_gbps=100.0)
+TOPO = full_bisection(2, 4)          # 8 hosts, 2 ToRs, 4 spines
+
+# collective completion times must agree within this factor (see module
+# docstring for why the band is wider than the single-flow FCT band)
+COLL_TOL = (0.5, 1.6)
+
+
+def _both(sc, **cfg_kw):
+    fb = run(sc, RunConfig(backend="fabric", **cfg_kw))
+    ev = run(sc, RunConfig(backend="events", until=1e7, **cfg_kw))
+    return fb, ev
+
+
+def _assert_parity(fb, ev):
+    assert fb["finished_groups"] == fb["total_groups"], fb
+    assert ev["finished_groups"] == ev["total_groups"], ev
+    r = fb["max_collective_time"] / ev["max_collective_time"]
+    assert COLL_TOL[0] < r < COLL_TOL[1], (fb["max_collective_time"],
+                                           ev["max_collective_time"])
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: ring allreduce >=8 ranks, chunked, BOTH protocols, via run()
+# --------------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def ring_sc():
+    """Ring allreduce, 8 ranks, 512KB, 2 chunks per 64KB segment."""
+    return collective_scenario(TOPO, "ring", 1, 8, 512 * 2 ** 10, net=NET,
+                               seed=0, chunk=32 * 2 ** 10)
+
+
+def test_ring_allreduce_strack_fabric_matches_oracle(ring_sc):
+    """STrack adaptive spray: the chunked ring trace completes on the
+    jitted fabric with the oracle-parity collective time."""
+    assert ring_sc.has_deps and len(ring_sc.messages) == 224
+    fb, ev = _both(ring_sc, protocol="strack")
+    assert fb["backend"] == "fabric" and ev["backend"] == "events"
+    _assert_parity(fb, ev)
+
+
+def test_ring_allreduce_roce4_fabric_matches_oracle(ring_sc):
+    """4-QP striped RoCEv2 (the paper's tuned baseline, previously
+    event-backend-only) runs the same trace on the fast path."""
+    fb, ev = _both(ring_sc, protocol="rocev2", subflows=4)
+    _assert_parity(fb, ev)
+    assert fb["drops"] == 0 and ev["drops"] == 0  # PFC lossless
+
+
+# --------------------------------------------------------------------------- #
+# parity bands across the algorithm matrix (small n, multi-job)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("algo,kw", [
+    ("dbt", {}),
+    ("hd", {}),
+    ("a2a", dict(window=2)),
+])
+def test_collective_parity_vs_oracle(algo, kw):
+    sc = collective_scenario(TOPO, algo, 2, 4, 256 * 2 ** 10, net=NET,
+                             seed=0, chunk=128 * 2 ** 10, **kw)
+    fb, ev = _both(sc, protocol="strack")
+    _assert_parity(fb, ev)
+    assert set(fb["group_fct"]) == set(ev["group_fct"]) == {0, 1}
+
+
+def test_group_completion_ordering_matches_oracle():
+    """Two ring jobs with 4x different payloads: both backends must finish
+    the small group first — identical group completion ordering."""
+    from repro.collective.algorithms import ring_allreduce
+    msgs = []
+    for g, (bytes_, hosts) in enumerate([(128 * 2 ** 10, (0, 1, 2, 3)),
+                                         (512 * 2 ** 10, (4, 5, 6, 7))]):
+        sub = ring_allreduce(4, bytes_, group=g, chunk=64 * 2 ** 10)
+        base = len(msgs)
+        for m in sub:
+            msgs.append(Message(mid=m.mid + base, src=hosts[m.src],
+                                dst=hosts[m.dst], size=m.size,
+                                deps=tuple(d + base for d in m.deps),
+                                group=g))
+    sc = Scenario(name="ring_asym", topo=TOPO, net=NET,
+                  messages=tuple(msgs))
+    fb, ev = _both(sc, protocol="strack")
+    _assert_parity(fb, ev)
+    order_fb = sorted(fb["group_fct"], key=fb["group_fct"].get)
+    order_ev = sorted(ev["group_fct"], key=ev["group_fct"].get)
+    assert order_fb == order_ev == [0, 1]
+
+
+# --------------------------------------------------------------------------- #
+# unit: striping entropy, dependency-aware tick budget, sweep validation
+# --------------------------------------------------------------------------- #
+
+def test_striping_covers_multiple_entropies_per_message():
+    """4-QP striping must give each message >=2 distinct path entropies
+    (one QP each) — otherwise the stripes collapse onto one ECMP path."""
+    sc = permutation_scenario(TOPO, 256 * 2 ** 10, net=NET, seed=0)
+    cfg = FabricConfig(net=NET, protocol="rocev2", subflows=4)
+    flows, dep = expand_messages(sc.messages, cfg.subflows)
+    assert len(flows) == 4 * len(sc.messages)
+    _, _, _, ent0 = _flow_arrays(flows, cfg)
+    ent0, mof = np.asarray(ent0), np.asarray(dep.msg_of_flow)
+    for i in range(dep.n_msgs):
+        assert len(set(ent0[mof == i].tolist())) >= 2, i
+    # seed-replayed entropies (oracle alignment) stay distinct too
+    _, _, _, ent1 = _flow_arrays(
+        flows, FabricConfig(net=NET, protocol="rocev2", subflows=4,
+                            roce_entropy_seed=1234))
+    ent1 = np.asarray(ent1)
+    for i in range(dep.n_msgs):
+        assert len(set(ent1[mof == i].tolist())) >= 2, i
+
+
+def test_default_ticks_accounts_for_dependency_depth():
+    """A chained trace must get a larger tick budget than the same flows
+    without deps: the critical path serialises end-to-end."""
+    hosts = [0, 4, 1, 5, 2, 6, 3, 7]  # cross-ToR chain, cycled
+    size = 64 * 2 ** 10
+    depth = 40
+    chain = tuple(Message(mid=i, src=hosts[i % 8], dst=hosts[(i + 1) % 8],
+                          size=size, deps=(i - 1,) if i else ())
+                  for i in range(depth))
+    flat = tuple(Message(mid=i, src=m.src, dst=m.dst, size=m.size)
+                 for i, m in enumerate(chain))
+    chained = Scenario("chain", TOPO, NET, chain)
+    independent = Scenario("flat", TOPO, NET, flat)
+    assert chained.default_ticks() > 2 * independent.default_ticks()
+    # and the budget actually suffices: the chain completes end-to-end
+    res = run(chained, RunConfig(backend="fabric"))
+    assert res["unfinished"] == 0
+
+
+def test_sweep_rejects_mismatching_scenarios():
+    sc0 = permutation_scenario(TOPO, 64 * 2 ** 10, net=NET, seed=0)
+    other_topo = permutation_scenario(full_bisection(4, 4), 64 * 2 ** 10,
+                                      net=NET, seed=1)
+    with pytest.raises(ValueError, match="topo"):
+        sweep([sc0, other_topo], RunConfig())
+    other_net = permutation_scenario(TOPO, 64 * 2 ** 10,
+                                     net=NetworkSpec(link_gbps=400.0),
+                                     seed=1)
+    with pytest.raises(ValueError, match="net"):
+        sweep([sc0, other_net], RunConfig())
+    fewer = Scenario("fewer", TOPO, NET, sc0.messages[:-1])
+    with pytest.raises(ValueError, match="messages"):
+        sweep([sc0, fewer], RunConfig())
+    with pytest.raises(ValueError, match="at least one"):
+        sweep([], RunConfig())
+
+
+def test_sweep_collectives_on_fabric():
+    """Seed sweep of one collective placement structure: one vmapped jit,
+    per-seed group completions."""
+    scs = [collective_scenario(TOPO, "hd", 1, 4, 128 * 2 ** 10, net=NET,
+                               seed=s, chunk=128 * 2 ** 10)
+           for s in range(2)]
+    rows = sweep(scs, RunConfig(backend="fabric", protocol="strack"))
+    assert len(rows) == 2
+    for r in rows:
+        assert r["backend"] == "fabric"
+        assert r["finished_groups"] == r["total_groups"] == 1
+
+
+def test_run_config_validation():
+    sc = permutation_scenario(TOPO, 64 * 2 ** 10, net=NET)
+    with pytest.raises(ValueError, match="backend"):
+        RunConfig(backend="quantum")
+    with pytest.raises(ValueError, match="protocol"):
+        RunConfig(protocol="tcp")
+    with pytest.raises(ValueError, match="fixed"):
+        run(sc, RunConfig(backend="events", lb_mode="fixed"))
