@@ -2,7 +2,8 @@
 PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fabric-smoke collective-smoke smoke benchmarks
+.PHONY: tier1 fabric-smoke collective-smoke bench-smoke smoke bench \
+	benchmarks
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
@@ -19,8 +20,19 @@ fabric-smoke:
 collective-smoke:
 	$(PP) $(PY) -m benchmarks.collectives --backend fabric --smoke
 
+# 2k-tick perf canary: warm time-warped fabric must beat a ticks/sec
+# floor and agree exactly with dense ticking (see docs/performance.md).
+bench-smoke:
+	$(PP) $(PY) -m benchmarks.perf --smoke
+
 # What CI should run on every change.
-smoke: tier1 fabric-smoke collective-smoke
+smoke: tier1 fabric-smoke collective-smoke bench-smoke
+
+# Perf trajectory: dense vs event-horizon wall-clock + ticks/sec on the
+# canonical scenarios (1024-host permutation, chunked ring, incast-256);
+# writes BENCH_fabric.json.
+bench:
+	$(PP) $(PY) -m benchmarks.perf --out BENCH_fabric.json
 
 # Full paper-figure benchmark sweep (slow).
 benchmarks:

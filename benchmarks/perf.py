@@ -1,0 +1,182 @@
+"""Fabric perf harness — the trajectory toward the paper's 8K hosts.
+
+Times the jitted fabric on three canonical scenarios, dense ticking vs
+the event-horizon (time-warp) scan, separating compile from run
+wall-clock, and writes the machine-readable ``BENCH_fabric.json``:
+
+  * ``perm1024``  — 1024-host permutation (scale: per-tick cost at 32x32)
+  * ``ring8``     — 8-rank chunked ring allreduce (dependency-chained
+                    trace: SACK-pipe round trips + dep stalls dominate)
+  * ``incast256`` — 256-to-1 incast (drop/RTO recovery gaps + long
+                    post-completion tail)
+
+Each scenario runs both modes through the same compiled-program cache and
+asserts dense/warp parity (identical FCTs, drops, pauses) before
+reporting, so a speedup number can never come from a semantics drift.
+
+    PYTHONPATH=src python -m benchmarks.perf [--out BENCH_fabric.json]
+    PYTHONPATH=src python -m benchmarks.perf --smoke   # CI floor check
+
+``--smoke`` runs only the 2k-tick 16-host canary and fails if the warm
+time-warped fabric drops below a ticks/sec floor — the fast CI guard
+``make smoke`` chains (full runs: ``make bench``).  Schema and scaling
+notes: docs/performance.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from repro.core.params import NetworkSpec
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import (RunConfig, Scenario, collective_scenario,
+                                 incast_scenario, permutation_scenario, run)
+
+#: Conservative CI floor for the warm time-warped 2k-tick canary.  The
+#: reference container does ~50k warp ticks/s on this shape; flag only
+#: order-of-magnitude regressions, not machine noise.
+SMOKE_FLOOR_TICKS_PER_S = 5_000.0
+
+
+def canonical_scenarios() -> dict:
+    """name -> (Scenario, RunConfig overrides dict).  Kept in one place so
+    docs, bench and tests agree on what the canaries are."""
+    return {
+        "perm1024": (
+            permutation_scenario(full_bisection(32, 32), 64 * 2 ** 10,
+                                 net=NetworkSpec(link_gbps=400.0), seed=0),
+            {}),
+        "ring8": (
+            collective_scenario(full_bisection(2, 4), "ring", 1, 8,
+                                512 * 2 ** 10,
+                                net=NetworkSpec(link_gbps=100.0), seed=0,
+                                chunk=32 * 2 ** 10),
+            {}),
+        # RoCEv2 (lossless, DCQCN): the motivation's incast case — rate
+        # recovery backoff and pause phases leave long pacing gaps the
+        # event-horizon scan collapses.  (An STrack incast is the warp
+        # worst case instead: Algo 3/4 *targets* a standing queue, so the
+        # fabric is busy wall-to-wall until completion.)
+        "incast256": (
+            incast_scenario(full_bisection(16, 17), 256, 64 * 2 ** 10,
+                            net=NetworkSpec(link_gbps=100.0), seed=0),
+            {"protocol": "rocev2"}),
+    }
+
+
+def _time_mode(sc: Scenario, n_ticks: int, warp: bool, repeats: int,
+               **cfg_kw) -> tuple[dict, dict]:
+    cfg = RunConfig(backend="fabric", time_warp=warp, trace_every=0,
+                    n_ticks=n_ticks, **cfg_kw)
+    t0 = time.perf_counter()
+    res = run(sc, cfg)
+    cold_s = time.perf_counter() - t0
+    run_s = cold_s
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = run(sc, cfg)
+        run_s = min(run_s, time.perf_counter() - t0)
+    row = {
+        "cold_s": round(cold_s, 4),
+        "run_s": round(run_s, 4),
+        "compile_s": round(max(0.0, cold_s - run_s), 4),
+        "ticks_per_s": round(n_ticks / run_s, 1),
+    }
+    if warp:
+        row["warp_trips"] = res.get("warp_trips")
+    return row, res
+
+
+def _parity(dense: dict, warp: dict) -> bool:
+    keys = ["max_fct", "avg_fct", "unfinished", "drops", "pauses"]
+    keys += [k for k in ("max_collective_time", "finished_groups")
+             if k in dense]
+    return all(dense[k] == warp[k] or
+               (dense[k] != dense[k] and warp[k] != warp[k])  # both NaN
+               for k in keys)
+
+
+def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
+                   repeats: int = 2) -> dict:
+    n_ticks = sc.default_ticks()
+    dense_row, dense_res = _time_mode(sc, n_ticks, False, repeats, **cfg_kw)
+    warp_row, warp_res = _time_mode(sc, n_ticks, True, repeats, **cfg_kw)
+    row = {
+        "n_ticks": n_ticks,
+        "n_hosts": sc.topo.n_hosts,
+        "n_msgs": len(sc.messages),
+        "dense": dense_row,
+        "warp": warp_row,
+        "speedup": round(dense_row["run_s"] / warp_row["run_s"], 2),
+        "parity_ok": _parity(dense_res, warp_res),
+        "unfinished": dense_res["unfinished"],
+        "max_fct_us": dense_res["max_fct"],
+    }
+    print(f"bench[{name}]: {n_ticks} ticks x {row['n_msgs']} msgs on "
+          f"{row['n_hosts']} hosts | dense {dense_row['run_s']:.3f}s "
+          f"({dense_row['ticks_per_s']:,.0f} t/s) | warp "
+          f"{warp_row['run_s']:.3f}s ({warp_row['warp_trips']} trips) | "
+          f"{row['speedup']}x, parity={'ok' if row['parity_ok'] else 'FAIL'}")
+    return row
+
+
+def bench_all(out_path: str = "BENCH_fabric.json",
+              repeats: int = 2) -> dict:
+    report = {
+        "meta": {
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+        },
+        "scenarios": {},
+    }
+    for name, (sc, cfg_kw) in canonical_scenarios().items():
+        report["scenarios"][name] = bench_scenario(name, sc, cfg_kw,
+                                                   repeats=repeats)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out_path}")
+    bad = [n for n, r in report["scenarios"].items() if not r["parity_ok"]]
+    assert not bad, f"dense/warp parity failed for {bad}"
+    return report
+
+
+def smoke(n_ticks: int = 2000,
+          floor: float = SMOKE_FLOOR_TICKS_PER_S) -> None:
+    """2k-tick perf canary: the warm time-warped fabric must beat
+    ``floor`` ticks/sec and agree exactly with dense ticking."""
+    sc = permutation_scenario(full_bisection(4, 4), 64 * 2 ** 10,
+                              net=NetworkSpec(), seed=0)
+    dense_row, dense_res = _time_mode(sc, n_ticks, False, repeats=1)
+    warp_row, warp_res = _time_mode(sc, n_ticks, True, repeats=1)
+    tps = warp_row["ticks_per_s"]
+    assert _parity(dense_res, warp_res), (dense_res, warp_res)
+    assert tps >= floor, (
+        f"perf-smoke FAILED: warm time-warp fabric ran {tps:,.0f} ticks/s "
+        f"< floor {floor:,.0f} on the {n_ticks}-tick canary")
+    print(f"perf-smoke ok: warp {tps:,.0f} ticks/s (floor {floor:,.0f}), "
+          f"dense {dense_row['ticks_per_s']:,.0f} t/s, "
+          f"{warp_row['warp_trips']} trips, parity exact")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="2k-tick ticks/sec floor canary (CI)")
+    ap.add_argument("--floor", type=float, default=SMOKE_FLOOR_TICKS_PER_S)
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(floor=args.floor)
+        return
+    bench_all(args.out, repeats=args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -98,3 +98,21 @@ def flow_on_timer(fs: FlowState, p: STrackParams, now: jax.Array,
 
 def flow_done(fs: FlowState) -> jax.Array:
     return rel_mod.rel_done(fs.rel)
+
+
+def flow_next_event(fs: FlowState, p: STrackParams,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(next timer event time, next pacing release time) for the
+    event-horizon scan in ``sim/fabric.py``.
+
+    Before the earlier of the probe and RTO deadlines, ``flow_on_timer``
+    is provably a no-op, and STrack's window CC has no pacing gate —
+    ``flow_next_packet`` validity is time-independent — so the send slot
+    never wakes the fabric on its own (+inf).
+    """
+    del p
+    active = ~rel_mod.rel_done(fs.rel)
+    timer_ev = jnp.where(
+        active, jnp.minimum(fs.rel.probe_deadline, fs.rel.rto_deadline),
+        jnp.inf)
+    return timer_ev, jnp.full_like(timer_ev, jnp.inf)

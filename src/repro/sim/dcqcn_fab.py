@@ -259,6 +259,29 @@ def roce_on_timer(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
         psn_next=psn_next, rto_deadline=rto_deadline), jnp.zeros((), bool)
 
 
+def roce_next_event(fs: RoceFlow, p: RoceFabParams,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(next timer event time, next pacing release time) for the
+    event-horizon scan in ``sim/fabric.py``.
+
+    ``roce_on_timer`` is a no-op before the earliest of the RTO deadline
+    and the alpha/rate DCQCN timers; ``roce_next_packet`` cannot fire
+    before the pacing gate ``next_send_ts`` opens (and never, if the
+    go-back-N window is closed — then only a timer can wake the flow).
+    """
+    dc = p.dcqcn
+    inf = jnp.float32(jnp.inf)
+    active = ~roce_done(fs)
+    timer_ev = jnp.minimum(
+        fs.rto_deadline,
+        jnp.minimum(fs.last_alpha_ts + dc.alpha_timer_us,
+                    fs.last_rate_ts + dc.rate_timer_us))
+    window_open = (fs.psn_next < fs.total_pkts) \
+        & ((fs.psn_next - fs.snd_una).astype(jnp.float32) < p.window_pkts)
+    return (jnp.where(active, timer_ev, inf),
+            jnp.where(active & window_open, fs.next_send_ts, inf))
+
+
 def roce_on_data(rs: RoceRcv, p: RoceFabParams, psn: jax.Array,
                  size: jax.Array, ecn: jax.Array, now: jax.Array,
                  ) -> tuple[RoceRcv, RoceMsg]:

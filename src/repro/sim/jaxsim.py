@@ -54,4 +54,8 @@ def run_incast(cfg: IncastConfig, n_ticks: int):
     final, metrics = run_fabric(topo, flows, n_ticks, fcfg)
     bottleneck = metrics["queue_ids"]["host_down"](0)
     metrics["queue_pkts"] = metrics["qsize"][:, bottleneck]
+    # legacy single-queue contract: "drops" is the per-tick cumulative
+    # trace here (the fabric now reports the exact final scalar under
+    # that key and the trace as "drops_trace")
+    metrics["drops"] = metrics["drops_trace"]
     return final, metrics

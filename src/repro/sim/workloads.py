@@ -13,7 +13,12 @@ fat-tree in ``fabric.py``, ~1000x faster; "events" = the discrete-event
 oracle in ``events.py``), the protocol ("strack" | "rocev2"), the STrack
 load-balance mode (adaptive / oblivious / fixed spray), PFC losslessness,
 message->sub-flow striping (``subflows=4`` is the paper's tuned 4-QP
-RoCEv2), queue tracing and seeds.  Both backends honour dependency
+RoCEv2), the event-horizon scan (``time_warp``, default on: dead tick
+intervals collapse with bit-exact results), trace decimation
+(``trace_every``), queue tracing and seeds.  ``sweep()`` takes one config
+or a list: data axes (msg sizes, lb_mode, entropy seed) vmap through ONE
+cached program; static axes (protocol, subflows, pfc) partition into one
+vmapped batch per program shape (docs/performance.md).  Both backends honour dependency
 scheduling — a message launches only once all its ``deps`` completed — so
 the collective traces of Figs 21-28 run on the fast path too; plain flow
 lists are simply the deps-free special case.
@@ -40,7 +45,7 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -269,6 +274,15 @@ class RunConfig:
     n_ticks: Optional[int] = None    # fabric horizon (None -> default_ticks)
     switch_buffer_bytes: Optional[float] = None  # None -> backend default
     roce_entropy_seed: Optional[int] = None      # align QP entropy w/ oracle
+    # Event-horizon scan (fabric): skip provably-dead tick intervals in one
+    # scan trip.  Bit-identical completion ticks / drops / pauses vs dense
+    # ticking (tests/test_timewarp.py); set False to force dense ticking.
+    time_warp: bool = True
+    # Per-tick trace decimation (fabric): 0 = no trace (summaries come
+    # from the exact final carry — the default, so scan-carry memory no
+    # longer scales with n_ticks), k>=1 = snapshot every k ticks (forces
+    # dense ticking).
+    trace_every: int = 0
     trace_queues: bool = False       # fabric: per-tick queue-depth settle
     qdelay_threshold_us: float = 8.0
     seed: int = 1234                 # events-backend rng seed
@@ -284,6 +298,9 @@ class RunConfig:
         if self.lb_mode not in LB_MODES:
             raise ValueError(f"unknown lb_mode {self.lb_mode!r}; "
                              f"expected one of {LB_MODES}")
+        if self.trace_every < 0:
+            raise ValueError(
+                f"trace_every must be >= 0, got {self.trace_every}")
 
 
 def run(sc: Scenario, cfg: RunConfig = RunConfig()) -> dict:
@@ -299,22 +316,49 @@ def run(sc: Scenario, cfg: RunConfig = RunConfig()) -> dict:
 
 
 def sweep(scenarios: Sequence[Scenario],
-          cfg: RunConfig = RunConfig()) -> list:
-    """Run a batch of same-structure scenarios (e.g. N seeds of one
-    workload) under one config.
+          cfg=RunConfig()) -> list:
+    """Run a batch of same-structure scenarios under one config — or under
+    a matching list of configs (a multi-axis sweep).
 
-    On the fabric backend the whole batch is vmapped through ONE jitted
-    program — amortising compile and pipelining the sweep — which requires
-    a shared topology, network and message/dependency structure (different
-    src/dst/size patterns are fine: that is the point).  On the events
-    backend it simply loops.  Returns one summary dict per scenario.
+    ``cfg`` is a single :class:`RunConfig` (applied to every scenario) or
+    a sequence of them.  Lengths must match, or either side may be length
+    1 and is broadcast — so ``sweep([sc], [cfg_a, cfg_b, cfg_c])`` sweeps
+    config axes over one scenario and ``sweep(seeds, cfg)`` sweeps seeds
+    under one config.
+
+    On the fabric backend, everything that is *data* to the compiled
+    program is vmapped through ONE jitted XLA call per program shape:
+    message src/dst/sizes (e.g. msg-size or placement-seed axes),
+    ``lb_mode`` (a traced scalar) and ``roce_entropy_seed``.  Axes that
+    change the program itself (protocol, pfc, ``subflows``, n_ticks,
+    buffer sizes, time_warp) partition the sweep into one vmapped batch
+    per group — each served by the program cache, so repeated sweeps
+    compile nothing.  All scenarios must share a topology, network and
+    message/dependency structure (different src/dst/size patterns are
+    fine: that is the point).  On the events backend it simply loops.
+    Returns one summary dict per (scenario, config) pair, input order.
     """
     if not scenarios:
         raise ValueError("sweep() needs at least one scenario")
-    if cfg.backend != "fabric":
-        return [run(sc, cfg) for sc in scenarios]
-    sc0 = scenarios[0]
-    for sc in scenarios[1:]:
+    scenarios = list(scenarios)
+    cfgs = list(cfg) if isinstance(cfg, (list, tuple)) else [cfg]
+    if not cfgs:
+        raise ValueError("sweep() needs at least one config")
+    if len(scenarios) == 1 and len(cfgs) > 1:
+        scenarios = scenarios * len(cfgs)
+    if len(cfgs) == 1 and len(scenarios) > 1:
+        cfgs = cfgs * len(scenarios)
+    if len(cfgs) != len(scenarios):
+        raise ValueError(
+            f"sweep() got {len(scenarios)} scenarios and {len(cfgs)} "
+            f"configs; lengths must match, or either side must be 1")
+    # the shared-structure requirement exists so one vmapped program can
+    # serve the batch — it only binds the fabric-backend entries (the
+    # events oracle simply loops and takes any mix of scenarios)
+    fabric_ix = [i for i, rc in enumerate(cfgs) if rc.backend == "fabric"]
+    sc0 = scenarios[fabric_ix[0]] if fabric_ix else None
+    for i in fabric_ix[1:]:
+        sc = scenarios[i]
         if sc.topo != sc0.topo:
             raise ValueError(
                 f"sweep() scenarios must share a topology: field 'topo' of "
@@ -337,14 +381,31 @@ def sweep(scenarios: Sequence[Scenario],
                 f"sweep() scenarios must share the dependency structure: "
                 f"field 'messages[{bad}].deps/group' of {sc.name!r} is "
                 f"{structure[bad]}, of {sc0.name!r} is {structure0[bad]}")
-    fcfg = _fabric_cfg(sc0, cfg)
-    ticks = cfg.n_ticks or max(sc.default_ticks() for sc in scenarios)
-    _, per_entry = run_fabric_trace_batch(
-        sc0.topo, [sc.messages for sc in scenarios], ticks, fcfg)
-    outs = []
-    for sc, metrics in zip(scenarios, per_entry):
-        outs.append(_fabric_summary(sc, cfg, metrics))
-    return outs
+    out: list = [None] * len(cfgs)
+    # group fabric pairs by everything static to the program; lb_mode and
+    # entropy seed are data axes within a group
+    groups: dict = {}
+    for i, (sc, rc) in enumerate(zip(scenarios, cfgs)):
+        if rc.backend != "fabric":
+            out[i] = run(sc, rc)
+            continue
+        fcfg = _fabric_cfg(sc, rc)
+        key = (replace(fcfg, lb_mode="adaptive", roce_entropy_seed=None),
+               rc.n_ticks, rc.trace_queues)
+        groups.setdefault(key, []).append(i)
+    for idxs in groups.values():
+        rc0 = cfgs[idxs[0]]
+        fcfg0 = _fabric_cfg(scenarios[idxs[0]], rc0)
+        ticks = rc0.n_ticks or max(scenarios[i].default_ticks()
+                                   for i in idxs)
+        _, per_entry = run_fabric_trace_batch(
+            scenarios[idxs[0]].topo,
+            [scenarios[i].messages for i in idxs], ticks, fcfg0,
+            lb_modes=[cfgs[i].lb_mode for i in idxs],
+            entropy_seeds=[cfgs[i].roce_entropy_seed for i in idxs])
+        for i, metrics in zip(idxs, per_entry):
+            out[i] = _fabric_summary(scenarios[i], cfgs[i], metrics)
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -352,9 +413,17 @@ def sweep(scenarios: Sequence[Scenario],
 # --------------------------------------------------------------------------- #
 
 def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
+    time_warp, trace_every = cfg.time_warp, cfg.trace_every
+    if cfg.trace_queues:
+        trace_every = trace_every or 1
+    if trace_every:
+        # any per-tick trace (queue settle or an explicit trace_every=k)
+        # needs dense ticking: a data-dependent trip count can't stack one
+        time_warp = False
     kw = dict(net=sc.net, max_paths=cfg.max_paths, lb_mode=cfg.lb_mode,
               protocol=cfg.protocol, pfc=cfg.pfc, subflows=cfg.subflows,
-              roce_entropy_seed=cfg.roce_entropy_seed)
+              roce_entropy_seed=cfg.roce_entropy_seed,
+              time_warp=time_warp, trace_every=trace_every)
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
     return FabricConfig(**kw)
@@ -363,17 +432,26 @@ def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
 def _queue_settle_us(metrics: dict, threshold_us: float) -> float:
     """Last simulated time any fabric queue's delay (depth x tick) exceeded
     ``threshold_us`` — the fabric analogue of the event backend's
-    queue-delay logs (Fig 8 settling time)."""
-    q = np.asarray(metrics["qsize"], dtype=float)      # [ticks, Q]
-    tick = metrics["tick_us"]
+    queue-delay logs (Fig 8 settling time).  With a decimated trace
+    (``trace_every=k``) rows sample block ends, so the settle time is
+    quantised to k ticks."""
+    q = np.asarray(metrics["qsize"], dtype=float)      # [rows, Q]
+    tick = metrics["tick_us"]                          # per-pkt delay unit
+    k = max(1, metrics.get("trace_every", 1))          # row -> tick stride
     over = np.nonzero((q * tick > threshold_us).any(axis=1))[0]
-    return float((over[-1] + 1) * tick) if len(over) else 0.0
+    return float((over[-1] + 1) * k * tick) if len(over) else 0.0
 
 
 def _fabric_summary(sc: Scenario, cfg: RunConfig, metrics: dict) -> dict:
     out = summarize(metrics)
     out["backend"] = "fabric"
     out["name"] = sc.name
+    out["protocol"] = cfg.protocol
+    out["lb_mode"] = cfg.lb_mode
+    out["subflows"] = cfg.subflows
+    if "warp_trips" in metrics:  # event-horizon diagnostics
+        out["warp_trips"] = int(np.asarray(metrics["warp_trips"]))
+        out["end_tick"] = int(np.asarray(metrics["end_tick"]))
     if cfg.trace_queues:
         out["queue_settle_us"] = _queue_settle_us(metrics,
                                                   cfg.qdelay_threshold_us)

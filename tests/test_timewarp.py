@@ -1,0 +1,230 @@
+"""Event-horizon (time-warp) scan vs dense ticking, the jitted-program
+cache, decimated tracing, and multi-axis sweep() — the gates for the perf
+refactor.
+
+The time-warp contract is *exact* parity, not a tolerance band: a skipped
+tick must be a provable no-op, so completion ticks, FCTs, drop and pause
+counts are bit-identical to dense ticking on every scenario class the
+fabric supports (STrack spray permutation, lossless RoCEv2 incast with
+real PFC pauses, and a dependency-chained collective ring reusing the
+test_collective_fabric fixture shape).
+"""
+import numpy as np
+import pytest
+
+from repro.core.params import NetworkSpec
+from repro.sim import fabric
+from repro.sim.fabric import FabricConfig, run_fabric_trace, summarize
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import (RunConfig, collective_scenario,
+                                 incast_scenario, permutation_scenario,
+                                 run, sweep)
+
+NET = NetworkSpec(link_gbps=400.0)
+NET100 = NetworkSpec(link_gbps=100.0)
+TOPO44 = full_bisection(4, 4)        # 16 hosts
+TOPO24 = full_bisection(2, 4)        # 8 hosts (collective band fixture)
+
+
+def _both(sc, n_ticks=None, **cfg_kw):
+    """(dense_metrics, warp_metrics) for one scenario, same program cfg."""
+    ticks = n_ticks or sc.default_ticks()
+    out = []
+    for warp in (False, True):
+        cfg = FabricConfig(net=sc.net, time_warp=warp, trace_every=0,
+                           **cfg_kw)
+        _, m = run_fabric_trace(sc.topo, sc.messages, ticks, cfg)
+        out.append(m)
+    return out
+
+
+def _assert_exact(md, mw):
+    np.testing.assert_array_equal(md["done_tick"], mw["done_tick"])
+    assert md["fct_us"] == mw["fct_us"]
+    assert md["subflow_fct_us"] == mw["subflow_fct_us"]
+    assert md["msg_release_us"] == mw["msg_release_us"]
+    assert md["drops"] == mw["drops"]
+    assert md["pauses"] == mw["pauses"]
+    if "group_done_us" in md:
+        assert md["group_done_us"] == mw["group_done_us"]
+
+
+# --------------------------------------------------------------------------- #
+# exact dense-vs-warp parity across the scenario matrix
+# --------------------------------------------------------------------------- #
+
+def test_timewarp_parity_strack_permutation():
+    """STrack adaptive spray, 16-host permutation: completion ticks,
+    FCTs and drops are preserved exactly by the event-horizon scan."""
+    sc = permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET, seed=0)
+    md, mw = _both(sc)
+    _assert_exact(md, mw)
+    assert all(f is not None for f in mw["fct_us"])
+
+
+def test_timewarp_parity_roce_incast_pfc():
+    """Lossless RoCEv2 8->1 incast: PFC pause counts (and the pacing /
+    DCQCN-timer wakeups warp must honour) are preserved exactly."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    md, mw = _both(sc, protocol="rocev2", switch_buffer_bytes=1e6,
+                   roce_entropy_seed=1234)
+    _assert_exact(md, mw)
+    assert mw["pauses"] > 0 and mw["drops"] == 0
+
+
+def test_timewarp_parity_chained_ring():
+    """Dependency-chained ring allreduce (the test_collective_fabric band
+    fixture shape): release ticks and group completions are preserved —
+    and the scan actually skips (trips << n_ticks), since dep stalls and
+    SACK-pipe round trips dominate a chained trace."""
+    sc = collective_scenario(TOPO24, "ring", 1, 8, 512 * 2 ** 10,
+                             net=NET100, seed=0, chunk=32 * 2 ** 10)
+    assert sc.has_deps
+    ticks = sc.default_ticks()
+    md, mw = _both(sc, n_ticks=ticks)
+    _assert_exact(md, mw)
+    trips = int(np.asarray(mw["warp_trips"]))
+    assert trips < ticks // 3, (trips, ticks)
+
+
+def test_timewarp_parity_lossy_roce_rto_gaps():
+    """Lossy RoCEv2 incast: go-back-N RTO recovery leaves long dead
+    intervals; warp must wake exactly at the timer sweeps dense fires."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    md, mw = _both(sc, n_ticks=30000, protocol="rocev2", pfc=False)
+    _assert_exact(md, mw)
+    assert md["drops"] > 0
+
+
+# --------------------------------------------------------------------------- #
+# program cache: same-shape runs compile exactly once
+# --------------------------------------------------------------------------- #
+
+def test_program_cache_single_build_across_runs():
+    """Two same-shape scenarios (different seeds AND different lb_mode /
+    entropy seed) must build the fabric program exactly once — the
+    trace-count hook on _make_program is the regression gate."""
+    sc0 = permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=11)
+    sc1 = permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=12)
+    cfg = RunConfig(n_ticks=4000)
+    run(sc0, cfg)  # may or may not hit a previous test's program
+    before = fabric.program_builds
+    run(sc1, cfg)
+    run(sc0, RunConfig(n_ticks=4000, lb_mode="oblivious"))
+    run(sc1, RunConfig(n_ticks=4000, lb_mode="fixed"))
+    assert fabric.program_builds == before, \
+        "same-shape run() re-traced the fabric program"
+    # a different static shape DOES build (the cache keys on dims)
+    run(sc0, RunConfig(n_ticks=4001))
+    assert fabric.program_builds == before + 1
+
+
+def test_program_cache_spans_run_and_sweep():
+    """sweep() over seeds and config axes reuses one cached program, and
+    the batch of (lb_mode x entropy-seed) axes returns per-axis rows."""
+    scs = [permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=s)
+           for s in range(3)]
+    cfg = RunConfig(n_ticks=4000)
+    sweep(scs, cfg)
+    before = fabric.program_builds
+    rows = sweep([scs[0]],
+                 [RunConfig(n_ticks=4000, lb_mode=m)
+                  for m in ("adaptive", "oblivious", "fixed")])
+    assert fabric.program_builds == before
+    assert [r["lb_mode"] for r in rows] == ["adaptive", "oblivious",
+                                            "fixed"]
+    # fixed single-path pinning must differ from adaptive spray on a
+    # loaded permutation — proof the traced lb_code axis actually steers
+    assert rows[2]["max_fct"] != rows[0]["max_fct"]
+
+
+def test_sweep_mixed_static_axes_partition():
+    """Axes that change the program (subflows) partition into groups but
+    still come back in input order with their config identity."""
+    sc = permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=3)
+    rows = sweep([sc], [RunConfig(protocol="rocev2", subflows=k,
+                                  n_ticks=6000) for k in (1, 4)])
+    assert [r["subflows"] for r in rows] == [1, 4]
+    assert all(r["unfinished"] == 0 for r in rows)
+
+
+def test_sweep_length_mismatch_rejected():
+    sc = permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=0)
+    with pytest.raises(ValueError, match="lengths must match"):
+        sweep([sc, sc, sc], [RunConfig(), RunConfig()])
+
+
+# --------------------------------------------------------------------------- #
+# trace decimation + events-only summaries stay exact
+# --------------------------------------------------------------------------- #
+
+def test_trace_decimation_keeps_summary_exact():
+    """trace_every=k decimates the stacked trace k-fold but summaries come
+    from the final scan carry, so they are bit-equal to dense tracing —
+    including a tick horizon that is not a multiple of k."""
+    sc = permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET, seed=1)
+    ticks = 5001
+    _, m1 = run_fabric_trace(sc.topo, sc.messages, ticks,
+                             FabricConfig(net=NET, trace_every=1))
+    _, m5 = run_fabric_trace(sc.topo, sc.messages, ticks,
+                             FabricConfig(net=NET, trace_every=5))
+    assert np.asarray(m1["qsize"]).shape[0] == ticks
+    assert np.asarray(m5["qsize"]).shape[0] == ticks // 5
+    assert summarize(m1) == summarize(m5)
+    assert m1["fct_us"] == m5["fct_us"]
+
+
+def test_no_trace_mode_omits_arrays_but_summarizes():
+    sc = permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=2)
+    _, m = run_fabric_trace(sc.topo, sc.messages, 4000,
+                            FabricConfig(net=NET, trace_every=0))
+    assert "qsize" not in m
+    s = summarize(m)
+    assert s["unfinished"] == 0 and s["drops"] == 0
+    # exact finals ride along for downstream consumers
+    assert m["delivered_final"].shape == (len(sc.messages),)
+
+
+def test_run_config_trace_knob_validation():
+    with pytest.raises(ValueError, match="trace_every"):
+        RunConfig(trace_every=-1)
+
+
+def test_run_default_is_warp_and_reports_diagnostics():
+    """run() defaults to the event-horizon scan and surfaces its trip
+    diagnostics; trace_queues AND an explicit trace_every both force
+    dense ticking (a data-dependent trip count cannot stack a trace)."""
+    sc = permutation_scenario(TOPO44, 64 * 2 ** 10, net=NET, seed=4)
+    res = run(sc, RunConfig(n_ticks=4000))
+    assert res["warp_trips"] < 4000
+    dense = run(sc, RunConfig(n_ticks=4000, trace_queues=True))
+    assert "warp_trips" not in dense
+    assert dense["queue_settle_us"] >= 0.0
+    assert dense["max_fct"] == res["max_fct"]
+    decimated = run(sc, RunConfig(n_ticks=4000, trace_every=8))
+    assert "warp_trips" not in decimated  # trace_every=8 implies dense
+    assert decimated["max_fct"] == res["max_fct"]
+
+
+def test_queue_settle_decimation_scales_rows_not_threshold():
+    """Decimating the trace must not inflate the queue-delay threshold
+    comparison: settle times agree between k=1 and k=4 up to the k-tick
+    row quantisation."""
+    sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
+    dense = run(sc, RunConfig(n_ticks=12000, trace_queues=True))
+    deci = run(sc, RunConfig(n_ticks=12000, trace_queues=True,
+                             trace_every=4))
+    tick = NET.mtu_serialize_us
+    assert dense["queue_settle_us"] > 0
+    assert abs(deci["queue_settle_us"] - dense["queue_settle_us"]) \
+        <= 4 * tick
+
+
+def test_sweep_events_backend_allows_heterogeneous_scenarios():
+    """The shared-structure rule exists for the vmapped fabric batch; an
+    events-backend sweep simply loops the oracle and accepts any mix."""
+    small = permutation_scenario(TOPO24, 32 * 2 ** 10, net=NET, seed=0)
+    other = permutation_scenario(TOPO44, 32 * 2 ** 10, net=NET, seed=0)
+    rows = sweep([small, other], RunConfig(backend="events", until=1e6))
+    assert [r["backend"] for r in rows] == ["events", "events"]
+    assert all(r["unfinished"] == 0 for r in rows)
