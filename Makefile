@@ -2,12 +2,27 @@
 PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fabric-smoke collective-smoke bench-smoke smoke bench \
-	benchmarks
+.PHONY: tier1 test test-fast fabric-smoke collective-smoke bench-smoke \
+	smoke bench benchmarks update-golden
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
 	$(PP) $(PY) -m pytest -x -q
+
+# Full suite: everything, fuzz at its full example count (pytest.ini
+# registers the tier1 / slow / fuzz markers).
+test:
+	$(PP) $(PY) -m pytest -q
+
+# Smoke-speed suite: slow-marked tests excluded and the differential fuzz
+# suite reduced to 3 examples (full count under `make test` / tier1).
+test-fast:
+	$(PP) REPRO_FUZZ_EXAMPLES=3 $(PY) -m pytest -q -m "not slow"
+
+# Regenerate tests/golden/*.json after an INTENTIONAL fidelity change;
+# review the diff like code.
+update-golden:
+	$(PP) $(PY) -m pytest tests/test_golden.py --update-golden -q
 
 # 2k-tick jitted fabric runs (STrack + RoCEv2-on-fabric canary): perf and
 # baseline-port regressions on the lax.scan hot path fail fast here.
@@ -30,7 +45,9 @@ smoke: tier1 fabric-smoke collective-smoke bench-smoke
 
 # Perf trajectory: dense vs event-horizon wall-clock + ticks/sec on the
 # canonical scenarios (1024-host permutation, chunked ring, incast-256);
-# writes BENCH_fabric.json.
+# writes BENCH_fabric.json.  Exits non-zero when any scenario's
+# dense/warp parity gate fails or the JSON violates the schema
+# (benchmarks/perf.py validate_report; re-check with --check).
 bench:
 	$(PP) $(PY) -m benchmarks.perf --out BENCH_fabric.json
 

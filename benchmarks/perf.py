@@ -16,6 +16,11 @@ reporting, so a speedup number can never come from a semantics drift.
 
     PYTHONPATH=src python -m benchmarks.perf [--out BENCH_fabric.json]
     PYTHONPATH=src python -m benchmarks.perf --smoke   # CI floor check
+    PYTHONPATH=src python -m benchmarks.perf --check BENCH_fabric.json
+
+``make bench`` fails loudly (non-zero exit) when any scenario's
+``parity_ok`` is false or the written JSON does not match the schema
+(``validate_report``); ``--check`` re-validates an existing report.
 
 ``--smoke`` runs only the 2k-tick 16-host canary and fails if the warm
 time-warped fabric drops below a ticks/sec floor — the fast CI guard
@@ -27,6 +32,7 @@ from __future__ import annotations
 import argparse
 import json
 import platform
+import sys
 import time
 
 import jax
@@ -124,6 +130,83 @@ def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
     return row
 
 
+#: BENCH_fabric.json schema: required keys and their types, per level.
+#: ``validate_report`` walks this so a malformed report (hand-edited,
+#: truncated write, schema drift) fails the gate as loudly as a parity
+#: failure does.
+_SCHEMA_META = {"utc": str, "jax": str, "backend": str, "platform": str}
+_SCHEMA_SCENARIO = {"n_ticks": int, "n_hosts": int, "n_msgs": int,
+                    "dense": dict, "warp": dict, "speedup": (int, float),
+                    "parity_ok": bool, "unfinished": int,
+                    "max_fct_us": (int, float)}
+_SCHEMA_MODE = {"cold_s": (int, float), "run_s": (int, float),
+                "compile_s": (int, float), "ticks_per_s": (int, float)}
+
+
+def validate_report(report: dict) -> list:
+    """Schema-check one BENCH_fabric.json report dict.
+
+    Returns a list of human-readable problems (empty = valid): missing or
+    mis-typed keys at the meta / scenario / mode levels, and any scenario
+    whose ``parity_ok`` gate is false — the caller turns a non-empty list
+    into a non-zero exit.
+    """
+    problems = []
+
+    def chk(d, schema, where):
+        if not isinstance(d, dict):
+            problems.append(f"{where}: expected an object, got "
+                            f"{type(d).__name__}")
+            return False
+        for k, t in schema.items():
+            if k not in d:
+                problems.append(f"{where}: missing key {k!r}")
+            elif not isinstance(d[k], t):
+                problems.append(f"{where}.{k}: expected "
+                                f"{getattr(t, '__name__', t)}, got "
+                                f"{type(d[k]).__name__}")
+        return True
+
+    if not isinstance(report, dict):
+        return [f"report: expected an object, got {type(report).__name__}"]
+    chk(report.get("meta"), _SCHEMA_META, "meta")
+    scenarios = report.get("scenarios")
+    if not isinstance(scenarios, dict) or not scenarios:
+        problems.append("scenarios: missing or empty")
+        return problems
+    for name, row in scenarios.items():
+        if not chk(row, _SCHEMA_SCENARIO, f"scenarios.{name}"):
+            continue
+        for mode in ("dense", "warp"):
+            if isinstance(row.get(mode), dict):
+                chk(row[mode], _SCHEMA_MODE, f"scenarios.{name}.{mode}")
+        if row.get("parity_ok") is False:
+            problems.append(
+                f"scenarios.{name}: parity_ok is FALSE — the time-warped "
+                f"scan diverged from dense ticking; a speedup number from "
+                f"this report cannot be trusted")
+    return problems
+
+
+def check_report_file(path: str) -> int:
+    """Validate an existing BENCH_fabric.json; returns a process exit
+    code (0 ok, 1 schema/parity problems, 2 unreadable)."""
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench gate: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+    problems = validate_report(report)
+    for p in problems:
+        print(f"bench gate: {path}: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print(f"bench gate ok: {path} "
+          f"({len(report['scenarios'])} scenarios, parity ok)")
+    return 0
+
+
 def bench_all(out_path: str = "BENCH_fabric.json",
               repeats: int = 2) -> dict:
     report = {
@@ -141,8 +224,14 @@ def bench_all(out_path: str = "BENCH_fabric.json",
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}")
-    bad = [n for n, r in report["scenarios"].items() if not r["parity_ok"]]
-    assert not bad, f"dense/warp parity failed for {bad}"
+    # Loud gate: schema-check the report we just wrote and fail the
+    # process (non-zero exit) if any scenario's dense/warp parity broke —
+    # a silent parity drift would invalidate every speedup number.
+    problems = validate_report(report)
+    if problems:
+        for p in problems:
+            print(f"bench gate: {p}", file=sys.stderr)
+        sys.exit(1)
     return report
 
 
@@ -171,7 +260,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="2k-tick ticks/sec floor canary (CI)")
     ap.add_argument("--floor", type=float, default=SMOKE_FLOOR_TICKS_PER_S)
+    ap.add_argument("--check", metavar="PATH",
+                    help="validate an existing BENCH_fabric.json (schema "
+                         "+ parity gate) without running anything")
     args = ap.parse_args()
+    if args.check:
+        sys.exit(check_report_file(args.check))
     if args.smoke:
         smoke(floor=args.floor)
         return

@@ -12,8 +12,19 @@ Reference network of Table 1: 100 Gbps links, 12 us network base RTT.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 GBPS = 1e9 / 8 / 1e6  # bytes per microsecond for 1 Gbps
+
+#: Wire size of SACK / NACK / CNP / probe packets (bytes).  Shared by the
+#: event oracle (``core.ref.ACK_SIZE``) and the fabric's reverse-path and
+#: PFC byte accounting.
+ACK_WIRE_BYTES = 64
+
+#: Store-and-forward hops of one direction of a cross-ToR path on the
+#: 2-tier Clos: host NIC -> ToR uplink -> spine downlink -> host downlink.
+#: The ACK path traverses the same count in reverse.
+CLOS_HOPS = 4
 
 
 def bytes_per_us(gbps: float) -> float:
@@ -32,6 +43,12 @@ class NetworkSpec:
     ecn_kmin_frac: float = 0.25   # K_min = 25% BDP
     ecn_kmax_frac: float = 0.75   # K_max = 75% BDP
     drop_frac: float = 5.0        # drop when queue exceeds 5 BDP
+    # Per-link propagation delay (us).  None derives it from base_rtt_us so
+    # that an uncongested cross-ToR data+ACK round trip (CLOS_HOPS
+    # store-and-forward hops each way, MTU data out / ACK_WIRE_BYTES back)
+    # realizes exactly base_rtt_us — the shared per-hop delay model of the
+    # jitted fabric AND the event oracle (apples-to-apples parity).
+    hop_prop_us: Optional[float] = None
 
     @property
     def rate_Bpus(self) -> float:
@@ -61,6 +78,22 @@ class NetworkSpec:
     @property
     def mtu_serialize_us(self) -> float:
         return self.mtu_bytes / self.rate_Bpus
+
+    @property
+    def ack_serialize_us(self) -> float:
+        return ACK_WIRE_BYTES / self.rate_Bpus
+
+    @property
+    def hop_prop_effective_us(self) -> float:
+        """Per-link propagation delay: ``hop_prop_us`` when set, else
+        derived so base RTT = CLOS_HOPS * (mtu_ser + prop) forward plus
+        CLOS_HOPS * (ack_ser + prop) back.  Clipped at 0 when base_rtt_us
+        is below the serialization floor (the realized RTT is then the
+        floor itself)."""
+        if self.hop_prop_us is not None:
+            return self.hop_prop_us
+        ser = CLOS_HOPS * (self.mtu_serialize_us + self.ack_serialize_us)
+        return max(0.0, (self.base_rtt_us - ser) / (2 * CLOS_HOPS))
 
 
 # Table 1 reference point: constants are specified for 100 Gbps / 12 us.

@@ -23,14 +23,14 @@ from __future__ import annotations
 import math
 from typing import Optional
 
-from .params import DCQCNParams, STrackParams
+from .params import ACK_WIRE_BYTES, DCQCNParams, STrackParams
 
 # ---------------------------------------------------------------------------
 # Packets
 # ---------------------------------------------------------------------------
 
 DATA, SACK, PROBE, NACK, CNP = "data", "sack", "probe", "nack", "cnp"
-ACK_SIZE = 64  # bytes on the wire for SACK/NACK/CNP/probe
+ACK_SIZE = ACK_WIRE_BYTES  # bytes on the wire for SACK/NACK/CNP/probe
 
 
 class Packet:

@@ -6,10 +6,11 @@ bitmap anchored at EPSN, the sender keeps ``W``-bit sacked/claimed bitmaps.
 All control flow is jnp.where / fixed-length vector ops so the whole thing
 vmaps across flows.
 
-Simplification vs core/ref.py (documented): packets are uniform ``mtu_bytes``
-(the odd-sized tail packet of a message is accounted as a full MTU in the
-claimed-bytes ledger).  Property tests compare against ref.py on uniform
-packet sizes.
+Packet sizes: every PSN is a full MTU except the message's final PSN,
+whose wire size is the message's odd tail (``RelState.tail_bytes``,
+mirroring ``ref.STrackSender.pkt_size``).  The sent/claimed byte ledgers
+account that tail exactly, so sub-MTU messages and odd tails keep
+``inflight_bytes`` consistent with the receiver's ``bytes_recvd``.
 """
 from __future__ import annotations
 
@@ -136,6 +137,7 @@ class RelState(NamedTuple):
     claimed: jax.Array       # bool[W]: declared lost, not yet re-sent
     psn_next: jax.Array      # i32
     total_pkts: jax.Array    # i32
+    tail_bytes: jax.Array    # f32: wire size of the final PSN (odd tail)
     bytes_sent: jax.Array    # f32
     bytes_recvd_seen: jax.Array  # f32
     bytes_claimed: jax.Array     # f32
@@ -146,14 +148,18 @@ class RelState(NamedTuple):
     done_ts: jax.Array         # f32, -1 until done
 
 
-def init_rel(p: STrackParams, total_pkts, now: float = 0.0) -> RelState:
+def init_rel(p: STrackParams, total_pkts, now: float = 0.0,
+             tail_bytes=None) -> RelState:
     W = REORDER_WINDOW
+    if tail_bytes is None:
+        tail_bytes = float(p.mtu_bytes)
     return RelState(
         epsn=jnp.zeros((), jnp.int32),
         sacked=jnp.zeros((W,), bool),
         claimed=jnp.zeros((W,), bool),
         psn_next=jnp.zeros((), jnp.int32),
         total_pkts=jnp.asarray(total_pkts, jnp.int32),
+        tail_bytes=jnp.asarray(tail_bytes, jnp.float32),
         bytes_sent=jnp.zeros((), jnp.float32),
         bytes_recvd_seen=jnp.zeros((), jnp.float32),
         bytes_claimed=jnp.zeros((), jnp.float32),
@@ -174,6 +180,26 @@ def rel_done(rel: RelState) -> jax.Array:
     return rel.epsn >= rel.total_pkts
 
 
+def pkt_wire_bytes(rel: RelState, p: STrackParams,
+                   psn: jax.Array) -> jax.Array:
+    """Wire size of one data PSN: full MTU, except the odd tail packet."""
+    return jnp.where(psn >= rel.total_pkts - 1, rel.tail_bytes,
+                     jnp.float32(p.mtu_bytes))
+
+
+def _mask_wire_bytes(mask: jax.Array, epsn: jax.Array, rel: RelState,
+                     p: STrackParams) -> jax.Array:
+    """Total wire bytes of the PSNs flagged in ``mask`` (a W-bitmap
+    anchored at ``epsn``): full MTUs except the message's final PSN."""
+    W = mask.shape[0]
+    n = jnp.sum(mask).astype(jnp.float32)
+    tail_rel = rel.total_pkts - 1 - epsn
+    tail_in = (tail_rel >= 0) & (tail_rel < W)
+    tail_flag = mask[jnp.clip(tail_rel, 0, W - 1)] & tail_in
+    return n * p.mtu_bytes - jnp.where(
+        tail_flag, p.mtu_bytes - rel.tail_bytes, 0.0)
+
+
 def _enter_recovery(rel: RelState, p: STrackParams, high: jax.Array,
                     enter: jax.Array) -> RelState:
     """Declare unsacked/unclaimed packets in [epsn, high) lost."""
@@ -183,10 +209,10 @@ def _enter_recovery(rel: RelState, p: STrackParams, high: jax.Array,
     lost = span & (~rel.sacked) & (~rel.claimed) \
         & (jnp.arange(W) + rel.epsn < rel.psn_next)
     lost = lost & enter
-    n_lost = jnp.sum(lost).astype(jnp.float32)
     return rel._replace(
         claimed=rel.claimed | lost,
-        bytes_claimed=rel.bytes_claimed + n_lost * p.mtu_bytes,
+        bytes_claimed=rel.bytes_claimed + _mask_wire_bytes(lost, rel.epsn,
+                                                           rel, p),
         in_recovery=rel.in_recovery | enter,
         recover_high=jnp.where(enter, high, rel.recover_high),
     )
@@ -209,11 +235,12 @@ def rel_on_sack(rel: RelState, p: STrackParams, sack: SackMsg,
     advanced = shift > 0
     idx = jnp.arange(W)
     # claimed-but-now-acked packets shifting out: un-claim their bytes
-    unclaim_out = jnp.sum(rel.claimed & (idx < shift)).astype(jnp.float32)
+    unclaim_out = rel.claimed & (idx < shift)
     sacked = _shift_left(rel.sacked, shift)
     claimed = _shift_left(rel.claimed, shift)
     epsn = rel.epsn + shift
-    bytes_claimed = rel.bytes_claimed - unclaim_out * p.mtu_bytes
+    bytes_claimed = rel.bytes_claimed - _mask_wire_bytes(unclaim_out,
+                                                         rel.epsn, rel, p)
 
     # --- selective bits ---
     off = sack.sack_base - epsn  # may be negative (stale segment)
@@ -225,8 +252,8 @@ def rel_on_sack(rel: RelState, p: STrackParams, sack: SackMsg,
     placed = placed & (off >= 0)  # drop stale segments entirely for safety
     newly = placed & (~sacked)
     unclaim_sel = newly & claimed
-    bytes_claimed = bytes_claimed - jnp.sum(unclaim_sel).astype(
-        jnp.float32) * p.mtu_bytes
+    bytes_claimed = bytes_claimed - _mask_wire_bytes(unclaim_sel, epsn,
+                                                     rel, p)
     sacked = sacked | placed
     claimed = claimed & (~unclaim_sel)
 
@@ -278,7 +305,8 @@ def rel_next_psn(rel: RelState, p: STrackParams, cwnd_pkts: jax.Array,
     claimed = jnp.where(use_rtx, rel.claimed.at[rtx_rel].set(False),
                         rel.claimed)
     psn_next = jnp.where(valid & (~has_rtx), rel.psn_next + 1, rel.psn_next)
-    bytes_sent = rel.bytes_sent + jnp.where(valid, p.mtu_bytes, 0.0)
+    bytes_sent = rel.bytes_sent + jnp.where(
+        valid, pkt_wire_bytes(rel, p, psn), 0.0)
     return (rel._replace(claimed=claimed, psn_next=psn_next,
                          bytes_sent=bytes_sent),
             psn, use_rtx, valid)

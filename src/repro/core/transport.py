@@ -30,11 +30,14 @@ class FlowState(NamedTuple):
     rel: RelState
 
 
-def init_flow(p: STrackParams, total_pkts, now: float = 0.0) -> FlowState:
+def init_flow(p: STrackParams, total_pkts, now: float = 0.0,
+              tail_bytes=None) -> FlowState:
+    """``tail_bytes`` is the wire size of the final PSN (the message's odd
+    tail); None means a full MTU (uniform-size messages)."""
     return FlowState(
         cc=cc_mod.init_cc(p, now),
         spray=lb_mod.init_spray(p, now),
-        rel=rel_mod.init_rel(p, total_pkts, now),
+        rel=rel_mod.init_rel(p, total_pkts, now, tail_bytes),
     )
 
 

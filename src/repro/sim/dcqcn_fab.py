@@ -79,6 +79,7 @@ class RoceFlow(NamedTuple):
     rto_deadline: jax.Array   # f32
     entropy: jax.Array        # i32: fixed path (one QP)
     retransmits: jax.Array    # i32
+    tail_bytes: jax.Array     # f32: wire size of the final PSN (odd tail)
 
 
 class RoceRcv(NamedTuple):
@@ -108,16 +109,18 @@ class RoceMsg(NamedTuple):
 
 
 def init_roce_flow(p: RoceFabParams, total_pkts, entropy,
-                   now: float = 0.0) -> RoceFlow:
+                   now: float = 0.0, tail_bytes=None) -> RoceFlow:
     f = lambda v: jnp.full((), v, jnp.float32)
     i = lambda v: jnp.asarray(v, jnp.int32)
+    if tail_bytes is None:
+        tail_bytes = float(p.mtu_bytes)
     return RoceFlow(
         snd_una=i(0), psn_next=i(0), total_pkts=i(total_pkts),
         rate=f(p.line_rate_Bpus), target=f(p.line_rate_Bpus),
         alpha=f(1.0), t_stage=i(0), b_stage=i(0), bytes_ctr=f(0.0),
         last_rate_ts=f(now), last_alpha_ts=f(now), next_send_ts=f(now),
         rto_deadline=f(now + p.rto_us), entropy=i(entropy),
-        retransmits=i(0))
+        retransmits=i(0), tail_bytes=jnp.asarray(tail_bytes, jnp.float32))
 
 
 def init_roce_rcv(total_pkts) -> RoceRcv:
@@ -167,9 +170,12 @@ def roce_next_packet(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
         & ((fs.psn_next - fs.snd_una).astype(jnp.float32) < p.window_pkts)
     psn = fs.psn_next
     is_rtx = can & (psn < fs.snd_una)  # never true: kept for TxPacket shape
+    # full MTU except the message's odd tail packet (ref.pkt_size)
+    size = jnp.where(psn >= fs.total_pkts - 1, fs.tail_bytes,
+                     jnp.float32(p.mtu_bytes))
 
     # DCQCN byte counter (oracle: on_bytes_sent before pacing the next send)
-    bytes_ctr = fs.bytes_ctr + jnp.float32(p.mtu_bytes)
+    bytes_ctr = fs.bytes_ctr + size
     b_hit = bytes_ctr >= dc.byte_counter
     b_stage = fs.b_stage + b_hit.astype(jnp.int32)
     inc_rate, inc_target = _increase(dc, fs.rate, fs.target, fs.t_stage,
@@ -178,7 +184,7 @@ def roce_next_packet(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
     target = jnp.where(b_hit, inc_target, fs.target)
     bytes_ctr = jnp.where(b_hit, 0.0, bytes_ctr)
 
-    next_send_ts = now + p.mtu_bytes / jnp.maximum(rate, 1e-9)
+    next_send_ts = now + size / jnp.maximum(rate, 1e-9)
     new = fs._replace(
         psn_next=psn + 1,
         rate=rate, target=target,

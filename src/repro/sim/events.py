@@ -38,8 +38,13 @@ from ..core.params import (NetworkSpec, RoCEParams, STrackParams,
                            make_roce_params, make_strack_params)
 from .topology import FatTree
 
-PROP_DELAY_US = 0.5  # per-link propagation (4 links x 2 directions = 8us RTT
-#                      with serialization; paper's net base RTT is 8us)
+#: Legacy default per-link propagation delay (us).  Since the per-hop
+#: latency model landed, NetSim derives its propagation from
+#: ``NetworkSpec.hop_prop_effective_us`` — the same knob the jitted fabric
+#: uses — so an uncongested cross-ToR data+ACK round trip realizes exactly
+#: ``net.base_rtt_us`` on BOTH backends.  This constant remains only as
+#: the historical reference value.
+PROP_DELAY_US = 0.5
 
 
 class Queue:
@@ -169,7 +174,7 @@ class Switch:
             self.sim.pause_log.append(now)
             up = self.upstream.get(port)
             if up is not None:
-                self.sim.schedule(now + PROP_DELAY_US, "pause", up)
+                self.sim.schedule(now + self.sim.prop_us, "pause", up)
 
     def on_dequeue(self, pkt, queue, now):
         port = getattr(pkt, "_ingress", None)
@@ -182,7 +187,7 @@ class Switch:
             self.paused_ports.discard(port)
             up = self.upstream.get(port)
             if up is not None:
-                self.sim.schedule(now + PROP_DELAY_US, "resume", up)
+                self.sim.schedule(now + self.sim.prop_us, "resume", up)
 
 
 class Flow:
@@ -252,6 +257,11 @@ class NetSim:
         self._fid = itertools.count()
 
         rate = net.rate_Bpus
+        # Per-link propagation from the shared NetworkSpec delay model
+        # (derived so the uncongested cross-ToR RTT == net.base_rtt_us,
+        # exactly as the jitted fabric's per-hop pipeline realizes it).
+        self.prop_us = net.hop_prop_effective_us
+        prop = self.prop_us
         lossless = transport == "roce"
         kmin = net.ecn_kmin_bytes
         kmax = net.ecn_kmax_bytes
@@ -265,18 +275,18 @@ class NetSim:
         self.spines = [Switch(self, f"sp{s}", switch_buffer_bytes, lossless)
                        for s in range(topo.n_spine)]
         # Queues
-        self.nic_q = [Queue(self, f"nic{h}", rate, PROP_DELAY_US,
+        self.nic_q = [Queue(self, f"nic{h}", rate, prop,
                             drain_host=h)
                       for h in range(topo.n_hosts)]
-        self.tor_up = [[Queue(self, f"t{t}->s{s}", rate, PROP_DELAY_US,
+        self.tor_up = [[Queue(self, f"t{t}->s{s}", rate, prop,
                               kmin, kmax, drop, switch=self.tors[t])
                         for s in range(topo.n_spine)]
                        for t in range(topo.n_tor)]
-        self.spine_down = [[Queue(self, f"s{s}->t{t}", rate, PROP_DELAY_US,
+        self.spine_down = [[Queue(self, f"s{s}->t{t}", rate, prop,
                                   kmin, kmax, drop, switch=self.spines[s])
                             for t in range(topo.n_tor)]
                            for s in range(topo.n_spine)]
-        self.host_down = [Queue(self, f"t->h{h}", rate, PROP_DELAY_US,
+        self.host_down = [Queue(self, f"t->h{h}", rate, prop,
                                 kmin, kmax, drop,
                                 switch=self.tors[topo.tor_of(h)])
                           for h in range(topo.n_hosts)]

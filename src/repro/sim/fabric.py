@@ -38,19 +38,37 @@ modes, entropy seeds and message patterns all reuse one XLA program —
 ``workloads.sweep()`` vmaps those axes through it.  docs/performance.md
 has the full model and the ``make bench`` numbers.
 
-Time model (1 tick = 1 MTU serialization time at link rate):
+Time model (1 tick = 1 MTU serialization time at link rate), since the
+per-hop latency pipeline (``ack_path="perhop"``, the default):
 
   * each host clocks out <=1 data packet per tick (NIC rate == link rate;
     flows sharing a NIC are arbitrated round-robin) plus rare probes,
-  * every fabric queue serves 1 packet/tick; served packets advance to the
-    next hop *this* tick and are eligible for service the next tick, so a
-    hop costs >=1 tick of serialization plus any queueing,
+  * every queue-ring slot carries a *departure-time lane* (``PktQ.ready``):
+    a packet served or injected at tick ``t`` becomes serviceable at the
+    next hop at ``t + 1 + hop_prop_ticks`` — one tick of serialization
+    plus the per-link propagation delay, both accrued AT EVERY TRAVERSED
+    STAGE (host->uplink->downlink->host), so RTT samples and ECN marks
+    reflect real per-hop queueing + propagation instead of one folded
+    constant,
   * egress ECN marking on the residual queue depth between Kmin..Kmax
     (deterministic dither; RoCEv2 mode uses the 1-BDP DCQCN threshold),
   * lossy mode tail-drops data beyond 5 BDP; lossless (PFC) mode never
-    drops data — backpressure bounds the queues,
-  * ACK/SACK/CNP messages ride a fixed-latency per-flow return pipe
-    covering the base-RTT remainder, as in ``jaxsim.py``.
+    drops data — backpressure bounds the queues; PFC accounting is
+    per-PACKET wire bytes (odd tails and 64B probes, not whole MTUs) and
+    pause/resume frames take ``pfc_delay_ticks`` to reach the upstream
+    queue (one hop of propagation, as in the oracle),
+  * ACK/SACK/CNP messages return through a per-flow reverse-path pipe
+    whose latency is the ACK's own store-and-forward pipeline —
+    ``hops * (prop + ack serialization)`` for that flow's path (2 hops
+    same-ToR, 4 cross-ToR) — so the uncongested data+ACK round trip
+    realizes exactly ``net.base_rtt_us`` on fabric AND oracle,
+  * variable message sizes are first-class: the final PSN of a message is
+    its odd tail (``ref.pkt_size`` semantics) in the send window, DCQCN
+    pacing/byte-counter, receiver byte counts and PFC accounting; a tail
+    packet still costs one serialization tick (tick quantization).
+  * ``ack_path="folded"`` (or a ``delay_ticks`` override, as ``jaxsim.py``
+    uses) restores the legacy model: no per-hop propagation, the full
+    base-RTT remainder folded into one fixed-latency return pipe.
 
 Dependency-scheduled messages (collective traces, Figs 21-28) run inside
 the same ``lax.scan``: every flow belongs to a *message*, messages carry
@@ -90,8 +108,9 @@ import jax.numpy as jnp
 
 from ..core import reliability as rel
 from ..core import transport as tp
-from ..core.params import (NetworkSpec, RoCEParams, STrackParams,
-                           make_roce_params, make_strack_params)
+from ..core.params import (ACK_WIRE_BYTES, NetworkSpec, RoCEParams,
+                           STrackParams, make_roce_params,
+                           make_strack_params)
 from ..core.reliability import SackMsg
 from .dcqcn_fab import (RoceFabParams, empty_roce_msgs, init_roce_flow,
                         init_roce_rcv, make_roce_fab_params, roce_done,
@@ -101,6 +120,7 @@ from .topology import FatTree
 
 LB_MODES = ("adaptive", "oblivious", "fixed")
 PROTOCOLS = ("strack", "rocev2")
+ACK_PATHS = ("perhop", "folded")
 
 
 def ecmp_mix(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
@@ -161,7 +181,8 @@ class Protocol(NamedTuple):
     vmaps them).  Message pytrees must carry a bool ``valid`` leaf named
     ``valid`` — the return pipe relies on it.
 
-      init(total_pkts[N], entropy0[N]) -> (flow_states, rcv_states)
+      init(total_pkts[N], tail_bytes[N], entropy0[N])
+                                       -> (flow_states, rcv_states)
       empty_msgs(h, n)                 -> msg pytree, leading dims (h, n)
       on_data(rcv, psn, size, ecn, ent, ts, probe, now) -> (rcv, msg)
       on_ack(flow, msg, now)           -> flow
@@ -201,9 +222,10 @@ def _empty_sack_pipe(p: STrackParams, h: int, n: int) -> SackMsg:
 def make_strack_protocol(p: STrackParams) -> Protocol:
     """STrack: window CC (Algo 3/4) + spray (Algo 2) + SACK reliability."""
 
-    def init(total_pkts, entropy0):
+    def init(total_pkts, tail_bytes, entropy0):
         del entropy0  # spray picks paths; no per-flow pinned entropy
-        fl = jax.vmap(lambda tpk: tp.init_flow(p, tpk))(total_pkts)
+        fl = jax.vmap(lambda tpk, tb: tp.init_flow(p, tpk, tail_bytes=tb))(
+            total_pkts, tail_bytes)
         rcv = jax.vmap(rel.init_receiver)(total_pkts)
         return fl, rcv
 
@@ -235,9 +257,9 @@ def make_strack_protocol(p: STrackParams) -> Protocol:
 def make_rocev2_protocol(p: RoceFabParams) -> Protocol:
     """RoCEv2: DCQCN rate CC + go-back-N, one fixed path per flow."""
 
-    def init(total_pkts, entropy0):
-        fl = jax.vmap(lambda tpk, e: init_roce_flow(p, tpk, e))(
-            total_pkts, entropy0)
+    def init(total_pkts, tail_bytes, entropy0):
+        fl = jax.vmap(lambda tpk, e, tb: init_roce_flow(
+            p, tpk, e, tail_bytes=tb))(total_pkts, entropy0, tail_bytes)
         rcv = jax.vmap(init_roce_rcv)(total_pkts)
         return fl, rcv
 
@@ -390,6 +412,9 @@ class PktQ(NamedTuple):
     probe: jax.Array   # bool
     ecn: jax.Array     # bool (accumulated across hops)
     ent: jax.Array     # i32 (path entropy)
+    ready: jax.Array   # i32 (departure-time lane: earliest service tick —
+    #                    arrival at this hop after upstream serialization
+    #                    plus the link's propagation delay)
 
 
 class FabricState(NamedTuple):
@@ -404,12 +429,15 @@ class FabricState(NamedTuple):
     delivered: jax.Array     # f32[N]
     done_tick: jax.Array     # i32[N], -1 until message completion
     # --- PFC (all-zero and untouched when pfc is off) ---
+    qbytes: jax.Array        # f32[Q+1]: per-queue wire-byte occupancy
     ing_host: jax.Array      # f32[NH]: bytes at ToR(h) from host h's NIC
     ing_sd: jax.Array        # f32[S, T]: bytes at ToR t from spine s
     ing_up: jax.Array        # f32[T, S]: bytes at spine s from ToR t
     paused_nic: jax.Array    # bool[NH]
     paused_sd: jax.Array     # bool[S, T]: spine_down[s][t] paused by ToR t
     paused_up: jax.Array     # bool[T, S]: tor_up[t][s] paused by spine s
+    pfc_line: jax.Array      # bool[max(PD,1), NH+2*TS]: pause-frame delay
+    #                          line (decision at tick u lands at u + PD)
     pauses: jax.Array        # i32: cumulative pause (xoff) events
     # --- dependency scheduling (trivial when the trace has no deps) ---
     pending: jax.Array           # i32[n_msgs]: unmet dependency count
@@ -426,8 +454,24 @@ class FabricConfig:
     lb_mode: str = "adaptive"        # adaptive | oblivious | fixed (STrack)
     timer_every: int = 8             # ticks between timer sweeps
     delay_ticks: Optional[int] = None  # return-pipe latency override
+    #                                    (implies the folded legacy model)
     protocol: str = "strack"         # strack | rocev2
     pfc: Optional[bool] = None       # None -> lossless iff rocev2
+    # --- per-hop latency pipeline ---------------------------------------
+    # "perhop" (default): packets accrue serialization + propagation at
+    # every traversed queue stage and ACKs return through a per-flow
+    # reverse-path pipe sized to that flow's hop count, so the uncongested
+    # RTT realizes net.base_rtt_us exactly (the oracle's model).
+    # "folded": the legacy model — no per-hop propagation, the whole
+    # base-RTT remainder folded into one fixed return-pipe latency.
+    ack_path: str = "perhop"
+    # Per-link propagation override (us); None uses the NetworkSpec's
+    # derived value (net.hop_prop_effective_us).
+    hop_prop_us: Optional[float] = None
+    # Ticks a PFC pause/resume frame takes to reach the upstream queue.
+    # None derives one hop of propagation (0 in folded mode — the legacy
+    # next-tick behavior).
+    pfc_delay_ticks: Optional[int] = None
     # Message -> sub-flow striping (paper's 4-QP "optimized RoCEv2"): each
     # message is split into this many equal-size single-QP sub-flows, each
     # with its own path entropy; the message completes when the last
@@ -490,6 +534,65 @@ def _scatter_add(vec, idx, val, n):
     return jnp.concatenate([vec, pad], 0).at[idx].add(val)[:n]
 
 
+def _scatter_pipe(pipe, rows, slot, fidx, valid, h, n):
+    """Scatter per-delivery message rows into the [H, N] return pipe at
+    per-flow slots (each flow's ACK rides its own reverse-path latency).
+    Invalid entries hit the trash slot past the flattened pipe."""
+    flat_idx = jnp.where(valid, slot * n + fidx, h * n)
+
+    def one(a, b):
+        flat = a.reshape((h * n,) + a.shape[2:])
+        pad = jnp.zeros((1,) + flat.shape[1:], a.dtype)
+        out = jnp.concatenate([flat, pad], 0).at[flat_idx].set(b)
+        return out[:h * n].reshape(a.shape)
+
+    return jax.tree.map(one, pipe, rows)
+
+
+def _hop_delays(cfg: FabricConfig) -> dict:
+    """Static per-hop delay constants the program closes over.
+
+    Returns K (per-link propagation, whole ticks), D_same/D_cross (ACK
+    return-pipe ticks for same-ToR / cross-ToR flows) and PD (PFC
+    pause-frame propagation ticks).  In "perhop" mode the return delay is
+    the remainder of the hop-exact round trip — float propagation and ACK
+    serialization are rounded ONCE here, so the realized uncongested RTT
+    stays within a tick of ``h * (mtu_ser + ack_ser + 2 * prop)``; the
+    folded mode (or a ``delay_ticks`` override) reproduces the legacy
+    single-constant pipe with no per-hop propagation.
+    """
+    net = cfg.net
+    tick_us = net.mtu_serialize_us
+    folded = cfg.ack_path == "folded" or cfg.delay_ticks is not None
+    if folded:
+        if cfg.delay_ticks is not None:
+            d = int(cfg.delay_ticks)
+        else:
+            d = max(1, round(net.base_rtt_us / tick_us) - 3)
+        K, D_same, D_cross = 0, d, d
+    else:
+        prop_us = (cfg.hop_prop_us if cfg.hop_prop_us is not None
+                   else net.hop_prop_effective_us)
+        k_f = prop_us / tick_us
+        a_f = net.ack_serialize_us / tick_us
+        K = int(round(k_f))
+
+        def ret(hops):
+            # hops = one-way store-and-forward stage count (NIC included);
+            # the fabric's forward pass realizes (hops-1)*(1+K) ticks, the
+            # pipe carries the rest of the exact round trip
+            rtt_f = hops * (1.0 + a_f + 2.0 * k_f)
+            return max(1, int(round(rtt_f - (hops - 1) * (1 + K))))
+
+        D_same, D_cross = ret(2), ret(4)
+    if cfg.pfc_delay_ticks is not None:
+        PD = max(0, int(cfg.pfc_delay_ticks))
+    else:
+        PD = K
+    return dict(K=K, D_same=D_same, D_cross=D_cross, PD=PD,
+                H=max(D_same, D_cross) + 2)
+
+
 def _rank_in_queue(qid: jax.Array, flag: jax.Array) -> jax.Array:
     """Rank of each candidate among flag-set candidates of the same queue,
     in candidate-index order.
@@ -536,11 +639,12 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                   cfg: FabricConfig, dep: Optional[DepSpec] = None):
     """Build the pure jnp fabric program for fixed (topology, N, ticks).
 
-    Returns ``program(src, dst, total_pkts, ent0, lb_code) ->
+    Returns ``program(src, dst, total_pkts, tail_bytes, ent0, lb_code) ->
     (final_state, tick_metrics)`` — jittable and vmappable (the sweep
     helpers vmap it over stacked flow arrays).  ``lb_code`` is the traced
     ``LB_MODES`` index, so one compiled program serves every STrack spray
-    mode (and every entropy seed / message-size pattern).  ``dep`` is the
+    mode (and every entropy seed / message-size pattern); ``tail_bytes``
+    is each flow's odd-tail wire size (data, like sizes).  ``dep`` is the
     static message/dependency structure the program closes over; ``None``
     means one deps-free message per flow.
 
@@ -554,6 +658,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     if cfg.lb_mode not in LB_MODES:
         raise ValueError(f"unknown lb_mode {cfg.lb_mode!r}; "
                          f"expected one of {LB_MODES}")
+    if cfg.ack_path not in ACK_PATHS:
+        raise ValueError(f"unknown ack_path {cfg.ack_path!r}; "
+                         f"expected one of {ACK_PATHS}")
     if cfg.trace_every < 0:
         raise ValueError(f"trace_every must be >= 0, got {cfg.trace_every}")
     # the event-horizon scan cannot stack a per-tick trace (its trip count
@@ -590,37 +697,51 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
         data_drop_pkts = drop_pkts
         hard_pkts = drop_pkts + max_extra  # probes squeeze past data drop
     cap = hard_pkts + max_extra + 2
-    if cfg.delay_ticks is not None:
-        D = int(cfg.delay_ticks)
-    else:
-        D = max(1, round(net.base_rtt_us / tick_us) - 3)
-    H = D + 2
+    hd = _hop_delays(cfg)
+    K, D_same, D_cross, PD, H = (hd["K"], hd["D_same"], hd["D_cross"],
+                                 hd["PD"], hd["H"])
+    n_ports = NH + 2 * TS            # PFC delay-line width (nic | sd | up)
 
     mtu_f = jnp.float32(net.mtu_bytes)
+    ack_f = jnp.float32(ACK_WIRE_BYTES)
     buffer_b = jnp.float32(cfg.switch_buffer_bytes)
     qrows = jnp.arange(Q, dtype=jnp.int32)
     is_up_row = qrows < TS
     spine_of_row = jnp.where(is_up_row, qrows % S, (qrows - TS) // T)
     host_tor = jnp.arange(NH, dtype=jnp.int32) // HPT
 
-    def program(src, dst, total_pkts, ent0, lb_code):
+    def program(src, dst, total_pkts, tail_b, ent0, lb_code):
         src = jnp.asarray(src, jnp.int32)
         dst = jnp.asarray(dst, jnp.int32)
         total_pkts = jnp.asarray(total_pkts, jnp.int32)
+        tail_b = jnp.asarray(tail_b, jnp.float32)
         lb_code = jnp.asarray(lb_code, jnp.int32)
         src_tor = src // HPT
         dst_tor = dst // HPT
         same_tor = src_tor == dst_tor
         iota_n = jnp.arange(N, dtype=jnp.int32)
         fixed_ent = ecmp_mix(src, dst, iota_n) % cfg.max_paths
+        # per-flow ACK return latency: the reverse path's store-and-forward
+        # pipeline (2 hops same-ToR, 4 cross-ToR; one constant in folded
+        # mode where D_same == D_cross)
+        dflow = jnp.where(same_tor, jnp.int32(D_same), jnp.int32(D_cross))
 
-        fl0, rcv0 = proto.init(total_pkts, ent0)
+        def wire_bytes(flow, psn, probe):
+            """Per-packet wire size: probes are ACK-sized, the final PSN
+            of a message is its odd tail, everything else a full MTU."""
+            f = jnp.clip(flow, 0, N - 1)
+            tail = psn >= total_pkts[f] - 1
+            return jnp.where(probe, ack_f,
+                             jnp.where(tail, tail_b[f], mtu_f))
+
+        fl0, rcv0 = proto.init(total_pkts, tail_b, ent0)
         q0 = PktQ(flow=jnp.full((Q + 1, cap), -1, jnp.int32),
                   psn=jnp.zeros((Q + 1, cap), jnp.int32),
                   ts=jnp.zeros((Q + 1, cap), jnp.float32),
                   probe=jnp.zeros((Q + 1, cap), bool),
                   ecn=jnp.zeros((Q + 1, cap), bool),
-                  ent=jnp.zeros((Q + 1, cap), jnp.int32))
+                  ent=jnp.zeros((Q + 1, cap), jnp.int32),
+                  ready=jnp.zeros((Q + 1, cap), jnp.int32))
         st0 = FabricState(
             flows=fl0, rcv=rcv0, q=q0,
             qhead=jnp.zeros((Q + 1,), jnp.int32),
@@ -630,12 +751,14 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             drops=jnp.zeros((), jnp.int32),
             delivered=jnp.zeros((N,), jnp.float32),
             done_tick=jnp.full((N,), -1, jnp.int32),
+            qbytes=jnp.zeros((Q + 1,), jnp.float32),
             ing_host=jnp.zeros((NH,), jnp.float32),
             ing_sd=jnp.zeros((S, T), jnp.float32),
             ing_up=jnp.zeros((T, S), jnp.float32),
             paused_nic=jnp.zeros((NH,), bool),
             paused_sd=jnp.zeros((S, T), bool),
             paused_up=jnp.zeros((T, S), bool),
+            pfc_line=jnp.zeros((max(PD, 1), n_ports), bool),
             pauses=jnp.zeros((), jnp.int32),
             pending=dep.init_pending,
             msg_done=jnp.zeros((n_msgs,), bool),
@@ -661,17 +784,30 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 sendable_msg & (st.msg_release_tick < 0),
                 t.astype(jnp.int32), st.msg_release_tick)
 
-            # ---- 1. serve: every unpaused queue pops its head packet -----
+            # ---- 1. serve: every unpaused queue pops its head packet,
+            # once the head's departure-time lane says it has arrived
+            # (upstream serialization + link propagation accrued) ---------
             qs = st.qsize[:Q]
             if pfc:
+                if PD > 0:
+                    # effective pause = the decision from PD ticks ago
+                    # (pause frames propagate one hop upstream)
+                    eff = st.pfc_line[t % PD]
+                    eff_nic = eff[:NH]
+                    eff_sd = eff[NH:NH + TS].reshape(S, T)
+                    eff_up = eff[NH + TS:].reshape(T, S)
+                else:
+                    eff_nic, eff_sd, eff_up = (st.paused_nic, st.paused_sd,
+                                               st.paused_up)
                 paused_row = jnp.concatenate(
-                    [st.paused_up.reshape(-1), st.paused_sd.reshape(-1),
+                    [eff_up.reshape(-1), eff_sd.reshape(-1),
                      jnp.zeros((NH,), bool)])
                 has = (qs > 0) & (~paused_row)
             else:
                 has = qs > 0
             hidx = st.qhead[:Q] % cap
             pop = PktQ(*[f[qrows, hidx] for f in st.q])
+            has = has & (pop.ready <= t)
             residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
             frac = jnp.clip((residual - kmin_p)
                             / jnp.maximum(kmax_p - kmin_p, 1e-9), 0.0, 1.0)
@@ -684,23 +820,29 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             qsize = st.qsize.at[:Q].add(-served)
 
             fclip = jnp.clip(pop.flow, 0, N - 1)
+            # per-packet wire bytes of every popped head (tail-aware)
+            pop_bytes = wire_bytes(pop.flow, pop.psn, pop.probe)
             # fabric advance targets (tor_up -> spine_down -> host_down)
             adv_tgt = jnp.where(
                 is_up_row, TS + spine_of_row * T + dst_tor[fclip],
                 2 * TS + dst[fclip])[:2 * TS]
             adv_valid = has[:2 * TS]
+            # (adv.ready is never read: cand assigns every candidate's
+            # next-hop ready wholesale below)
             adv = PktQ(flow=pop.flow[:2 * TS], psn=pop.psn[:2 * TS],
                        ts=pop.ts[:2 * TS], probe=pop.probe[:2 * TS],
-                       ecn=ecn_out[:2 * TS], ent=pop.ent[:2 * TS])
+                       ecn=ecn_out[:2 * TS], ent=pop.ent[:2 * TS],
+                       ready=pop.ready[:2 * TS])
 
             # ---- 2. deliveries -> per-flow receivers (one host = one q) --
             del_has = has[2 * TS:]
             del_flow = fclip[2 * TS:]
             rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
             rnew, sack = jax.vmap(
-                lambda r, psn, ecn, ent, ts, pb: proto.on_data(
-                    r, psn, mtu_f, ecn, ent, ts, pb, now))(
-                rrows, pop.psn[2 * TS:], ecn_out[2 * TS:], pop.ent[2 * TS:],
+                lambda r, psn, sz, ecn, ent, ts, pb: proto.on_data(
+                    r, psn, sz, ecn, ent, ts, pb, now))(
+                rrows, pop.psn[2 * TS:], pop_bytes[2 * TS:],
+                ecn_out[2 * TS:], pop.ent[2 * TS:],
                 pop.ts[2 * TS:], pop.probe[2 * TS:])
             rnew = _bwhere(del_has, rnew, rrows)
             rcv = _scatter_rows(st.rcv, rnew,
@@ -708,16 +850,14 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             delivered = _scatter_add(
                 st.delivered,
                 jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
-                mtu_f, N)
+                pop_bytes[2 * TS:], N)
 
-            # write emitted messages into the return pipe, slot t + D
+            # write emitted messages into the return pipe at slot
+            # t + D[flow]: each flow's ACK rides its own reverse path
             sack_valid = sack.valid & del_has
-            wslot = (t + D) % H
-            prow = jax.tree.map(lambda a: a[wslot], st.pipe)
-            prow = _scatter_rows(prow, sack._replace(valid=sack_valid),
-                                 jnp.where(sack_valid, del_flow, N), N)
-            pipe = jax.tree.map(lambda a, r: a.at[wslot].set(r),
-                                st.pipe, prow)
+            slot_del = (t + dflow[del_flow]) % H
+            pipe = _scatter_pipe(st.pipe, sack._replace(valid=sack_valid),
+                                 slot_del, del_flow, sack_valid, H, N)
 
             # ---- 3. due messages reach their senders ---------------------
             cur = t % H
@@ -748,7 +888,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 # deadline and spray state stay put), so the probe is
                 # *delayed* until resume — as in the oracle, where it waits
                 # in the paused NIC queue — not silently lost.
-                blocked = probe_tx.valid & st.paused_nic[src]
+                blocked = probe_tx.valid & eff_nic[src]
                 flows = _bwhere(sendable & (~blocked), flows_t, flows)
                 probe_valid = probe_valid & (~blocked)
             else:
@@ -764,7 +904,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             if pfc:
                 # a paused NIC injects nothing (state update withheld too,
                 # so the flow re-offers the same packet next tick)
-                sel = sel & (~st.paused_nic[src])
+                sel = sel & (~eff_nic[src])
             flows = _bwhere(sel, flows_sent, flows)
 
             if not proto.uses_spray:
@@ -796,13 +936,22 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             cand_valid = jnp.concatenate([adv_valid, sel, probe_valid])
             now_n = jnp.full((N,), now, jnp.float32)
             zb, ob = jnp.zeros((N,), bool), jnp.ones((N,), bool)
+            # every enqueue (fabric advance or NIC injection) arrives at
+            # the next stage after 1 tick of serialization + K ticks of
+            # link propagation — the per-hop departure-time lane
             cand = PktQ(
                 flow=jnp.concatenate([adv.flow, iota_n, iota_n]),
                 psn=jnp.concatenate([adv.psn, tx.psn, probe_tx.psn]),
                 ts=jnp.concatenate([adv.ts, now_n, now_n]),
                 probe=jnp.concatenate([adv.probe, zb, ob]),
                 ecn=jnp.concatenate([adv.ecn, zb, zb]),
-                ent=jnp.concatenate([adv.ent, ent, ent_probe]))
+                ent=jnp.concatenate([adv.ent, ent, ent_probe]),
+                ready=jnp.full((2 * TS + 2 * N,), 0, jnp.int32) + t + 1 + K)
+            # per-candidate wire bytes (PFC accounting is per-packet)
+            cand_bytes = jnp.concatenate([
+                pop_bytes[:2 * TS],
+                wire_bytes(iota_n, tx.psn, zb),
+                wire_bytes(iota_n, probe_tx.psn, ob)])
             # Two-pass enqueue. Pass 1: drop decision from the occupancy
             # bound qsize + rank-among-valid (over-counts same-tick earlier
             # drops by design — the queue is at threshold then anyway).
@@ -844,22 +993,23 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             # Ingress attribution is derivable per packet: a packet's port
             # at any switch follows from (flow src/dst, queue row, entropy),
             # so the counters are maintained incrementally without storing
-            # a port field in the ring.  All packets are accounted as one
-            # MTU (probes are rare and absent in RoCEv2 mode).
+            # a port field in the ring.  Accounting is per-packet WIRE
+            # bytes: odd tail packets and 64B probes count their real
+            # size, not a whole MTU (``events.Switch`` semantics).
             if pfc:
                 # dequeues leaving a switch buffer
                 f_up, f_sd, f_hd = (fclip[:TS], fclip[TS:2 * TS],
                                     fclip[2 * TS:])
                 ing_host = _scatter_add(
                     st.ing_host, jnp.where(has[:TS], src[f_up], NH),
-                    -mtu_f, NH)
+                    -pop_bytes[:TS], NH)
                 sd_i = jnp.arange(TS, dtype=jnp.int32)
                 sd_s = sd_i // T   # spine of spine_down row TS + s*T + t
                 up_flat = st.ing_up.reshape(-1)
                 up_flat = _scatter_add(
                     up_flat,
                     jnp.where(has[TS:2 * TS], src_tor[f_sd] * S + sd_s, TS),
-                    -mtu_f, TS)
+                    -pop_bytes[TS:2 * TS], TS)
                 pkt_spine = at.ecmp_spine(src[f_hd], dst[f_hd],
                                           pop.ent[2 * TS:])
                 hd_same = same_tor[f_hd]
@@ -867,31 +1017,41 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 ing_host = _scatter_add(
                     ing_host,
                     jnp.where(served_hd & hd_same, src[f_hd], NH),
-                    -mtu_f, NH)
+                    -pop_bytes[2 * TS:], NH)
                 sd_flat = st.ing_sd.reshape(-1)
                 sd_flat = _scatter_add(
                     sd_flat,
                     jnp.where(served_hd & (~hd_same),
                               pkt_spine * T + host_tor, TS),
-                    -mtu_f, TS)
+                    -pop_bytes[2 * TS:], TS)
                 # enqueues entering a switch buffer
                 up_i = jnp.arange(TS, dtype=jnp.int32)  # t*S+s of source row
                 up_flat = _scatter_add(
-                    up_flat, jnp.where(accept[:TS], up_i, TS), mtu_f, TS)
+                    up_flat, jnp.where(accept[:TS], up_i, TS),
+                    cand_bytes[:TS], TS)
                 sd_flat = _scatter_add(
                     sd_flat, jnp.where(accept[TS:2 * TS], sd_i, TS),
-                    mtu_f, TS)
+                    cand_bytes[TS:2 * TS], TS)
                 acc_data = accept[2 * TS:2 * TS + N]
                 acc_probe = accept[2 * TS + N:]
                 ing_host = _scatter_add(
-                    ing_host, jnp.where(acc_data, src, NH), mtu_f, NH)
+                    ing_host, jnp.where(acc_data, src, NH),
+                    cand_bytes[2 * TS:2 * TS + N], NH)
                 ing_host = _scatter_add(
-                    ing_host, jnp.where(acc_probe, src, NH), mtu_f, NH)
+                    ing_host, jnp.where(acc_probe, src, NH),
+                    cand_bytes[2 * TS + N:], NH)
                 ing_sd = sd_flat.reshape(S, T)
                 ing_up = up_flat.reshape(T, S)
 
-                # dynamic shared-buffer threshold per switch
-                qsz_b = qsize[:Q].astype(jnp.float32) * mtu_f
+                # byte-accurate shared-buffer occupancy (served bytes out,
+                # accepted bytes in) for the dynamic threshold
+                qbytes = st.qbytes.at[:Q].add(
+                    -jnp.where(has, pop_bytes, 0.0))
+                add_b = jax.ops.segment_sum(
+                    jnp.where(accept, cand_bytes, 0.0),
+                    jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
+                qbytes = (qbytes + add_b).at[Q].set(0.0)
+                qsz_b = qbytes[:Q]
                 tor_occ = (qsz_b[:TS].reshape(T, S).sum(1)
                            + qsz_b[2 * TS:].reshape(T, HPT).sum(1))
                 spine_occ = qsz_b[TS:2 * TS].reshape(S, T).sum(1)
@@ -900,6 +1060,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 xoff_spine = a * jnp.maximum(buffer_b - spine_occ, 0.0) \
                     / (1 + a)
 
+                # the gate chains on the switch's DECISION state; the
+                # effective (upstream) state lags it by the pause-frame
+                # propagation delay via the pfc_line ring
                 paused_nic = pfc_gate(st.paused_nic, ing_host,
                                       xoff_tor[host_tor], cfg.pfc_xon_frac)
                 paused_sd = pfc_gate(st.paused_sd, ing_sd,
@@ -910,11 +1073,20 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                     jnp.sum(paused_nic & ~st.paused_nic)
                     + jnp.sum(paused_sd & ~st.paused_sd)
                     + jnp.sum(paused_up & ~st.paused_up)).astype(jnp.int32)
+                if PD > 0:
+                    dec = jnp.concatenate(
+                        [paused_nic, paused_sd.reshape(-1),
+                         paused_up.reshape(-1)])
+                    pfc_line = st.pfc_line.at[t % PD].set(dec)
+                else:
+                    pfc_line = st.pfc_line
             else:
+                qbytes = st.qbytes
                 ing_host, ing_sd, ing_up = (st.ing_host, st.ing_sd,
                                             st.ing_up)
                 paused_nic, paused_sd, paused_up = (
                     st.paused_nic, st.paused_sd, st.paused_up)
+                pfc_line = st.pfc_line
                 pauses = st.pauses
 
             # ---- 7. completion + metrics --------------------------------
@@ -949,9 +1121,10 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             new_st = FabricState(
                 flows=flows, rcv=rcv, q=q, qhead=qhead, qsize=qsize,
                 pipe=pipe, obl_rr=obl_rr, drops=drops, delivered=delivered,
-                done_tick=done_tick, ing_host=ing_host, ing_sd=ing_sd,
-                ing_up=ing_up, paused_nic=paused_nic, paused_sd=paused_sd,
-                paused_up=paused_up, pauses=pauses,
+                done_tick=done_tick, qbytes=qbytes, ing_host=ing_host,
+                ing_sd=ing_sd, ing_up=ing_up, paused_nic=paused_nic,
+                paused_sd=paused_sd, paused_up=paused_up,
+                pfc_line=pfc_line, pauses=pauses,
                 pending=pending, msg_done=msg_done,
                 msg_release_tick=msg_release_tick,
                 msg_done_tick=msg_done_tick,
@@ -979,10 +1152,12 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             fabric: the soonest of (a) the first timer sweep at which some
             released flow's deadline has expired, (b) the first pacing
             release at which a window-open flow may send, (c) the next
-            return-pipe slot holding an undelivered ACK/SACK/CNP.  All
-            three are conservative lower bounds (floor rounding): an
-            executed tick that turns out to be identity simply re-skips,
-            so parity is exact and progress is >= 1 tick per trip.
+            return-pipe slot holding an undelivered ACK/SACK/CNP, (d) the
+            earliest departure-time-lane arrival of an in-flight packet
+            (the per-hop pipeline's occupancy).  All are conservative
+            lower bounds (floor rounding): an executed tick that turns out
+            to be identity simply re-skips, so parity is exact and
+            progress is >= 1 tick per trip.
             """
             timer_ev, send_ev = jax.vmap(proto.next_event)(st.flows)
             sendable = (st.pending <= 0)[dep.msg_of_flow]
@@ -1009,7 +1184,23 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             due = t + 1 + (slots - t - 1) % H
             t_pipe = jnp.min(jnp.where(jnp.any(st.pipe.valid, axis=1),
                                        due, jnp.int32(n_ticks)))
-            tgt = jnp.minimum(jnp.minimum(t_timer, t_send), t_pipe)
+            # in-flight pipeline occupancy: the earliest ready tick of any
+            # nonempty unpaused queue's head (paused queues cannot change
+            # state while the fabric is otherwise idle — the gate is a
+            # fixed point absent serves/enqueues, and idle requires the
+            # pause-frame delay line settled)
+            hidx = st.qhead[:Q] % cap
+            rdy = st.q.ready[qrows, hidx]
+            pending_q = st.qsize[:Q] > 0
+            if pfc:
+                dec_row = jnp.concatenate(
+                    [st.paused_up.reshape(-1), st.paused_sd.reshape(-1),
+                     jnp.zeros((NH,), bool)])
+                pending_q = pending_q & (~dec_row)
+            t_queue = jnp.maximum(t + 1, jnp.min(jnp.where(
+                pending_q, rdy, jnp.int32(n_ticks))))
+            tgt = jnp.minimum(jnp.minimum(t_timer, t_send),
+                              jnp.minimum(t_pipe, t_queue))
             return jnp.minimum(tgt, jnp.int32(n_ticks))
 
         if cfg.time_warp:
@@ -1017,14 +1208,21 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 t, st, trips = carry
                 st, can_any = tick(st, t)
                 # Idle <=> every future tick up to the warp target is a
-                # provable no-op: no packet sits in any queue, no released
-                # flow offered a packet this tick (send eligibility is
-                # time-independent between timer/pacing/ack events), and
-                # no freshly-released message still needs its release tick
-                # recorded by the next dense tick.
-                idle = ((jnp.sum(st.qsize[:Q]) == 0) & (~can_any)
+                # provable no-op: no released flow offered a packet this
+                # tick (send eligibility is time-independent between
+                # timer/pacing/ack events), any queued packet is still in
+                # flight on its link (warp_target wakes at the earliest
+                # departure-lane arrival), no freshly-released message
+                # still needs its release tick recorded, and the PFC
+                # pause-frame delay line holds no in-flight transition.
+                idle = ((~can_any)
                         & ~jnp.any((st.pending <= 0)
                                    & (st.msg_release_tick < 0)))
+                if pfc and PD > 0:
+                    dec = jnp.concatenate(
+                        [st.paused_nic, st.paused_sd.reshape(-1),
+                         st.paused_up.reshape(-1)])
+                    idle = idle & jnp.all(st.pfc_line == dec[None, :])
                 t_next = jnp.where(idle, warp_target(st, t), t + 1)
                 return t_next, st, trips + jnp.int32(1)
 
@@ -1053,7 +1251,8 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                                       lambda t, s: tick(s, t)[0], final)
         return final, ys
 
-    program.dims = dict(T=T, S=S, NH=NH, TS=TS, Q=Q, cap=cap, D=D, H=H)
+    program.dims = dict(T=T, S=S, NH=NH, TS=TS, Q=Q, cap=cap, H=H,
+                        K=K, D_same=D_same, D_cross=D_cross, PD=PD)
     return program
 
 
@@ -1141,14 +1340,21 @@ _UNSET = object()
 def _flow_arrays(flows, cfg: FabricConfig, entropy_seed=_UNSET):
     """Host-side program inputs for one flow list.  ``entropy_seed``
     overrides ``cfg.roce_entropy_seed`` (sweeps vmap the seed axis, so the
-    batch helper passes a per-entry seed against one shared cfg)."""
+    batch helper passes a per-entry seed against one shared cfg).
+
+    Returns ``(src, dst, total_pkts, tail_bytes, ent0)`` — ``tail_bytes``
+    is the wire size of each flow's final PSN (``ref.pkt_size`` odd-tail
+    semantics: sub-MTU and non-MTU-multiple messages are first-class)."""
     if entropy_seed is _UNSET:
         entropy_seed = cfg.roce_entropy_seed
+    mtu = cfg.net.mtu_bytes
     src = jnp.asarray([f[0] for f in flows], jnp.int32)
     dst = jnp.asarray([f[1] for f in flows], jnp.int32)
-    total_pkts = jnp.asarray(
-        [max(1, int(math.ceil(f[2] / cfg.net.mtu_bytes))) for f in flows],
-        jnp.int32)
+    npkts = [max(1, int(math.ceil(f[2] / mtu))) for f in flows]
+    total_pkts = jnp.asarray(npkts, jnp.int32)
+    tail_bytes = jnp.asarray(
+        [max(1.0, float(f[2]) - (n - 1) * mtu)
+         for f, n in zip(flows, npkts)], jnp.float32)
     if entropy_seed is not None:
         rng = random.Random(entropy_seed)
         ent0 = jnp.asarray([rng.randrange(1 << 16) for _ in flows],
@@ -1159,7 +1365,7 @@ def _flow_arrays(flows, cfg: FabricConfig, entropy_seed=_UNSET):
         # sub-flows of one message get distinct draws via the flow index
         iota_n = jnp.arange(len(flows), dtype=jnp.int32)
         ent0 = ecmp_mix(src, dst, iota_n + jnp.int32(40503)) % (1 << 16)
-    return src, dst, total_pkts, ent0
+    return src, dst, total_pkts, tail_bytes, ent0
 
 
 #: Final-state arrays the host-side metrics derive from — fetched in ONE
@@ -1251,10 +1457,10 @@ def run_fabric_trace(topo: FatTree, messages, n_ticks: int,
     """
     flows, dep = expand_messages(messages, cfg.subflows)
     _check_flows(flows, topo.n_hosts)
-    src, dst, total_pkts, ent0 = _flow_arrays(flows, cfg)
+    src, dst, total_pkts, tails, ent0 = _flow_arrays(flows, cfg)
     prog = _get_program(topo, len(flows), n_ticks, cfg, dep)
     lb = jnp.int32(LB_MODES.index(cfg.lb_mode))
-    final, metrics = prog.jit_single(src, dst, total_pkts, ent0, lb)
+    final, metrics = prog.jit_single(src, dst, total_pkts, tails, ent0, lb)
     metrics = _finish_metrics(dict(metrics), _final_host(final), cfg,
                               prog.dims, dep)
     return final, metrics
@@ -1326,10 +1532,11 @@ def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
     srcs = jnp.stack([a[0] for a in arrs])
     dsts = jnp.stack([a[1] for a in arrs])
     pkts = jnp.stack([a[2] for a in arrs])
-    ents = jnp.stack([a[3] for a in arrs])
+    tails = jnp.stack([a[3] for a in arrs])
+    ents = jnp.stack([a[4] for a in arrs])
     lbs = jnp.asarray([LB_MODES.index(m) for m in lb_modes], jnp.int32)
     prog = _get_program(topo, int(srcs.shape[1]), n_ticks, cfg, dep)
-    finals, stacked = prog.jit_batch(srcs, dsts, pkts, ents, lbs)
+    finals, stacked = prog.jit_batch(srcs, dsts, pkts, tails, ents, lbs)
     # one transfer for the finals + one for any stacked trace (the old
     # per-entry gather re-pulled the full batch B times)
     fin_all = _final_host(finals)

@@ -13,7 +13,10 @@ at the bottleneck:
   * each tick every flow may clock out <=1 packet (NIC rate == link rate),
   * the queue serves 1 packet/tick, marks egress ECN on residual depth
     between Kmin..Kmax (deterministic ramp), silently drops beyond 5 BDP,
-  * SACKs ride the fixed-latency return pipe (fwd delay folded in).
+  * SACKs ride the fixed-latency return pipe (fwd delay folded in) — the
+    ``delay_ticks`` override keeps this module on the fabric's legacy
+    "folded" delay model; the multi-queue fabric itself defaults to the
+    per-hop latency pipeline (``FabricConfig.ack_path="perhop"``).
 
 Everything is fixed-shape; the whole run is a single lax.scan.  See the
 module map in ``fabric.py`` for how the sim/ package fits together.

@@ -139,9 +139,14 @@ class Scenario:
         """Tick budget for a fabric run: the larger of the worst
         per-destination serialisation and the dependency critical path
         (chained traces serialise whole messages end-to-end, each handoff
-        costing a delivery+ack round trip), with convergence margin."""
+        costing a delivery+ack round trip), with convergence margin.
+
+        Each handoff budgets one full base RTT plus a small per-hop
+        quantization slack: the per-hop pipeline realizes the RTT in
+        whole-tick serialization + propagation stages, so rounding can
+        cost a couple of ticks per dependency step."""
         mtu = self.net.mtu_bytes
-        rtt_ticks = self.net.base_rtt_us / self.net.mtu_serialize_us
+        rtt_ticks = self.net.base_rtt_us / self.net.mtu_serialize_us + 2
         pkts: dict[int, float] = {}
         per_dst: dict[int, float] = {}
         for m in self.messages:
@@ -259,6 +264,7 @@ def collective_scenario(topo: FatTree, algo: str, n_jobs: int,
 BACKENDS = ("fabric", "events")
 PROTOCOLS = ("strack", "rocev2")
 LB_MODES = ("adaptive", "oblivious", "fixed")
+ACK_PATHS = ("perhop", "folded")
 
 
 @dataclass(frozen=True)
@@ -274,6 +280,21 @@ class RunConfig:
     n_ticks: Optional[int] = None    # fabric horizon (None -> default_ticks)
     switch_buffer_bytes: Optional[float] = None  # None -> backend default
     roce_entropy_seed: Optional[int] = None      # align QP entropy w/ oracle
+    # --- per-hop latency model ------------------------------------------
+    # "perhop" (default): packets accrue serialization + propagation at
+    # every queue stage and ACKs return over their flow's reverse path, so
+    # the uncongested RTT realizes net.base_rtt_us on BOTH backends (the
+    # events oracle always runs this model).  "folded" restores the
+    # fabric's legacy single-constant return pipe (fabric-only knob).
+    ack_path: str = "perhop"
+    # Per-link propagation override (us); None derives it from the
+    # scenario's NetworkSpec (net.hop_prop_effective_us).  Honoured by
+    # both backends.
+    hop_prop_us: Optional[float] = None
+    # Fabric: ticks a PFC pause/resume frame takes to reach the upstream
+    # queue (None -> one hop of propagation; the oracle always delays
+    # pause frames by its propagation).
+    pfc_delay_ticks: Optional[int] = None
     # Event-horizon scan (fabric): skip provably-dead tick intervals in one
     # scan trip.  Bit-identical completion ticks / drops / pauses vs dense
     # ticking (tests/test_timewarp.py); set False to force dense ticking.
@@ -298,6 +319,9 @@ class RunConfig:
         if self.lb_mode not in LB_MODES:
             raise ValueError(f"unknown lb_mode {self.lb_mode!r}; "
                              f"expected one of {LB_MODES}")
+        if self.ack_path not in ACK_PATHS:
+            raise ValueError(f"unknown ack_path {self.ack_path!r}; "
+                             f"expected one of {ACK_PATHS}")
         if self.trace_every < 0:
             raise ValueError(
                 f"trace_every must be >= 0, got {self.trace_every}")
@@ -423,6 +447,8 @@ def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
     kw = dict(net=sc.net, max_paths=cfg.max_paths, lb_mode=cfg.lb_mode,
               protocol=cfg.protocol, pfc=cfg.pfc, subflows=cfg.subflows,
               roce_entropy_seed=cfg.roce_entropy_seed,
+              ack_path=cfg.ack_path, hop_prop_us=cfg.hop_prop_us,
+              pfc_delay_ticks=cfg.pfc_delay_ticks,
               time_warp=time_warp, trace_every=trace_every)
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
@@ -466,6 +492,10 @@ def _run_fabric_backend(sc: Scenario, cfg: RunConfig) -> dict:
 
 
 def _events_sim(sc: Scenario, cfg: RunConfig, **netsim_kw) -> NetSim:
+    if cfg.hop_prop_us is not None:
+        # the oracle reads its per-link propagation from the NetworkSpec;
+        # a RunConfig override rides in on a replaced spec
+        sc = replace(sc, net=replace(sc.net, hop_prop_us=cfg.hop_prop_us))
     kw = dict(seed=cfg.seed)
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes

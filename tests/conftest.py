@@ -1,0 +1,32 @@
+"""Shared pytest plumbing: repo-root imports, the --update-golden flow,
+and the tier1 / slow / fuzz marker registration (see pytest.ini)."""
+import sys
+from pathlib import Path
+
+import pytest
+
+# benchmarks/ (the perf harness whose JSON schema check is unit-tested)
+# lives at the repo root, which pytest does not put on sys.path when the
+# tests run from an installed-src layout.
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current fabric results "
+             "instead of asserting against them")
+
+
+@pytest.fixture(scope="session")
+def update_golden(request) -> bool:
+    return bool(request.config.getoption("--update-golden"))
+
+
+@pytest.fixture(scope="session")
+def golden_dir() -> Path:
+    return GOLDEN_DIR

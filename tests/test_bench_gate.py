@@ -1,0 +1,93 @@
+"""Unit tests for the `make bench` parity gate: the BENCH_fabric.json
+schema checker must flag parity failures and malformed reports with a
+non-zero exit, not bury them in a report nobody reads."""
+import copy
+import json
+
+import pytest
+
+from benchmarks.perf import check_report_file, validate_report
+
+GOOD = {
+    "meta": {"utc": "2026-07-31T00:00:00Z", "jax": "0.4.35",
+             "backend": "cpu", "platform": "Linux"},
+    "scenarios": {
+        "perm1024": {
+            "n_ticks": 9000, "n_hosts": 1024, "n_msgs": 1024,
+            "dense": {"cold_s": 10.0, "run_s": 8.0, "compile_s": 2.0,
+                      "ticks_per_s": 1125.0},
+            "warp": {"cold_s": 3.0, "run_s": 0.5, "compile_s": 2.5,
+                     "ticks_per_s": 18000.0, "warp_trips": 1234},
+            "speedup": 16.0, "parity_ok": True, "unfinished": 0,
+            "max_fct_us": 700.5,
+        },
+    },
+}
+
+
+def test_valid_report_passes():
+    assert validate_report(GOOD) == []
+
+
+def test_parity_failure_is_flagged():
+    bad = copy.deepcopy(GOOD)
+    bad["scenarios"]["perm1024"]["parity_ok"] = False
+    problems = validate_report(bad)
+    assert any("parity_ok is FALSE" in p for p in problems)
+
+
+def test_schema_violations_are_flagged():
+    # missing scenario key
+    bad = copy.deepcopy(GOOD)
+    del bad["scenarios"]["perm1024"]["speedup"]
+    assert any("missing key 'speedup'" in p for p in validate_report(bad))
+    # wrong type
+    bad = copy.deepcopy(GOOD)
+    bad["scenarios"]["perm1024"]["n_ticks"] = "9000"
+    assert any("n_ticks" in p for p in validate_report(bad))
+    # empty scenarios
+    assert any("scenarios" in p
+               for p in validate_report({"meta": GOOD["meta"],
+                                         "scenarios": {}}))
+    # not even a dict
+    assert validate_report([1, 2, 3])
+
+
+def test_check_report_file_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(GOOD))
+    assert check_report_file(str(good)) == 0
+
+    bad_dict = copy.deepcopy(GOOD)
+    bad_dict["scenarios"]["perm1024"]["parity_ok"] = False
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(bad_dict))
+    assert check_report_file(str(bad)) == 1
+
+    broken = tmp_path / "broken.json"
+    broken.write_text("{not json")
+    assert check_report_file(str(broken)) == 2
+    assert check_report_file(str(tmp_path / "absent.json")) == 2
+
+
+def test_bench_all_exits_nonzero_on_parity_failure(monkeypatch, tmp_path):
+    """bench_all must sys.exit(1) — not merely log — when a scenario's
+    dense/warp parity gate fails."""
+    import benchmarks.perf as perf
+
+    def fake_bench_scenario(name, sc, cfg_kw, repeats=2):
+        row = copy.deepcopy(GOOD["scenarios"]["perm1024"])
+        row["parity_ok"] = False
+        return row
+
+    monkeypatch.setattr(perf, "bench_scenario", fake_bench_scenario)
+    monkeypatch.setattr(
+        perf, "canonical_scenarios",
+        lambda: {"fake": (None, {})})
+    out = tmp_path / "BENCH_fabric.json"
+    with pytest.raises(SystemExit) as exc:
+        perf.bench_all(str(out), repeats=1)
+    assert exc.value.code == 1
+    # the report is still written for post-mortem, then the gate fires
+    assert json.loads(out.read_text())["scenarios"]["fake"]["parity_ok"] \
+        is False

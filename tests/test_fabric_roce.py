@@ -21,14 +21,19 @@ from repro.sim.topology import full_bisection
 from repro.sim.workloads import (incast_scenario, permutation_scenario,
                                  run_on_events, run_on_fabric)
 
+pytestmark = pytest.mark.tier1
+
 NET = NetworkSpec(link_gbps=400.0)
 TOPO44 = full_bisection(4, 4)        # 16 hosts, 4 ToRs, 4 spines
 SEED = 1234                          # NetSim's default rng seed
 BUF = 1e6                            # small shared buffer => PFC exercised
 
-# fabric is a tick-quantised approximation of the event oracle; completion
-# times must agree within this factor, drops (where any) within 2x
-FCT_TOL = (0.6, 1.6)
+# The fabric is a tick-quantised approximation of the event oracle;
+# completion times must agree within this factor, drops (where any)
+# within 2x.  Tightened from (0.6, 1.6) by the per-hop latency pipeline
+# (measured RoCEv2 ratios ~0.999-1.001: DCQCN pacing follows the same
+# per-hop RTT on both backends).
+FCT_TOL = (0.8, 1.25)
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,144 @@
+"""Differential fuzz: random small Scenarios on the jitted fabric vs the
+event oracle.
+
+Every example draws a random topology (ToR/spine/host dims), message trace
+(sizes including sub-MTU and odd non-MTU-multiple tails, optional
+dependency edges and groups) and run config (protocol, lb_mode, subflows),
+then asserts:
+
+  * both backends finish every message,
+  * fabric-vs-oracle completion time within the tightened per-hop parity
+    band (ratio band with an absolute few-tick floor, since fuzz cases are
+    RTT-scale where quantisation is relatively larger),
+  * the event-horizon scan (``time_warp``) is BIT-exact vs dense ticking
+    on the same scenario — FCT lists, drops and pauses.
+
+Example count: ``REPRO_FUZZ_EXAMPLES`` (default 8; ``make test-fast`` runs
+3, ``make test`` the default).  When ``hypothesis`` is installed an extra
+property-based entry point drives the same checker from minimised draws;
+the seeded loop below runs everywhere (the restricted container image has
+no hypothesis).
+"""
+import os
+import random
+
+import pytest
+
+from repro.core.params import NetworkSpec
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import Message, RunConfig, Scenario, run
+
+pytestmark = [pytest.mark.tier1, pytest.mark.fuzz]
+
+N_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8"))
+MTU = 4096
+
+#: Ratio band for fabric/oracle completion-time parity.  Matches the
+#: tightened deterministic gates (tests/test_fabric*.py, COLL_TOL) with
+#: headroom for the tiny randomized scenarios this suite generates.
+BAND = (0.7, 1.4)
+#: Absolute floor: RTT-scale FCTs may differ by a few quantisation ticks
+#: even when the relative band would flag them.
+ABS_TICKS = 8.0
+
+
+def random_scenario(rng: random.Random) -> Scenario:
+    """Small random Scenario: dims, sizes (sub-MTU / exact / odd-tail),
+    optional dependency chains and groups."""
+    topo = full_bisection(rng.choice([2, 4]), rng.choice([2, 4]))
+    net = NetworkSpec(link_gbps=rng.choice([100.0, 400.0]))
+    n_msgs = rng.randint(3, 8)
+    chained = rng.random() < 0.5
+    msgs = []
+    for i in range(n_msgs):
+        src = rng.randrange(topo.n_hosts)
+        dst = rng.randrange(topo.n_hosts)
+        while dst == src:
+            dst = rng.randrange(topo.n_hosts)
+        shape = rng.randrange(3)
+        if shape == 0:                       # sub-MTU message
+            size = float(rng.randint(64, MTU - 1))
+        elif shape == 1:                     # exact MTU multiple
+            size = float(rng.randint(1, 12) * MTU)
+        else:                                # odd tail packet
+            size = float(rng.randint(1, 12) * MTU + rng.randint(1, MTU - 1))
+        deps = ()
+        if chained and i > 0 and rng.random() < 0.7:
+            deps = tuple(sorted(rng.sample(range(i),
+                                           rng.randint(1, min(2, i)))))
+        group = 0 if chained else rng.randint(0, 1)
+        msgs.append(Message(mid=i, src=src, dst=dst, size=size,
+                            deps=deps, group=group))
+    return Scenario("fuzz", topo, net, tuple(msgs))
+
+
+def random_config(rng: random.Random, sc: Scenario) -> dict:
+    """Random run-config axes both backends support."""
+    if rng.random() < 0.5:
+        return dict(protocol="strack", pfc=False,
+                    lb_mode=rng.choice(["adaptive", "oblivious"]))
+    kw = dict(protocol="rocev2", subflows=rng.choice([1, 4]))
+    if not sc.has_deps:
+        # deps-free traces launch in mid order on both backends, so the
+        # oracle's QP entropy draw sequence can be replayed exactly;
+        # dependency traces launch in completion order (band absorbs it)
+        kw["roce_entropy_seed"] = 1234
+    return kw
+
+
+def check_parity(rng: random.Random) -> dict:
+    """One fuzz example; returns diagnostics (used by the calibration
+    script in docs/performance.md)."""
+    sc = random_scenario(rng)
+    kw = random_config(rng, sc)
+    fb = run(sc, RunConfig(backend="fabric", **kw))
+    fd = run(sc, RunConfig(backend="fabric", time_warp=False, **kw))
+    ev = run(sc, RunConfig(backend="events", until=2e7, **kw))
+
+    # --- time-warp bit-exactness on the randomized scenario ---
+    assert fb["max_fct"] == fd["max_fct"], (kw, fb["max_fct"], fd["max_fct"])
+    assert fb["avg_fct"] == fd["avg_fct"]
+    assert fb["drops"] == fd["drops"] and fb["pauses"] == fd["pauses"]
+    if "max_collective_time" in fb:
+        assert fb["max_collective_time"] == fd["max_collective_time"]
+
+    # --- both backends complete ---
+    assert fb["unfinished"] == 0, (sc.messages, kw, fb)
+    assert ev["unfinished"] == 0, (sc.messages, kw, ev)
+
+    # --- completion-time parity in the tightened band ---
+    if sc.is_trace:
+        a, b = fb["max_collective_time"], ev["max_collective_time"]
+    else:
+        a, b = fb["max_fct"], ev["max_fct"]
+    tick = sc.net.mtu_serialize_us
+    ratio = a / b
+    ok = (BAND[0] < ratio < BAND[1]) or abs(a - b) <= ABS_TICKS * tick
+    assert ok, (sc.messages, kw, a, b, ratio)
+    return dict(ratio=ratio, fabric_us=a, events_us=b, cfg=kw,
+                n_msgs=len(sc.messages), has_deps=sc.has_deps)
+
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_fuzz_parity_seeded(seed):
+    """Deterministic seeded sweep — runs on every image (no hypothesis)."""
+    check_parity(random.Random(seed * 7919 + 13))
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=N_EXAMPLES, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def test_fuzz_parity_hypothesis(seed):
+        """Property-based wrapper over the same checker (minimising on the
+        generator seed keeps draws reproducible across backends)."""
+        check_parity(random.Random(seed))

@@ -4,6 +4,9 @@ import pytest
 
 from repro.sim.jaxsim import IncastConfig, run_incast
 
+# 25k dense ticks with a per-tick trace: excluded from `make test-fast`
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def incast8():

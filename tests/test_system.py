@@ -49,6 +49,7 @@ def test_strack_drops_recovered_roce_lossless():
     assert r["drops"] == 0                            # PFC keeps it lossless
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algo", ["ring", "dbt", "hd", "a2a"])
 def test_collectives_complete_both_transports(algo):
     for tr in ("strack", "roce"):

@@ -20,6 +20,8 @@ from repro.sim.workloads import (RunConfig, collective_scenario,
                                  incast_scenario, permutation_scenario,
                                  run, sweep)
 
+pytestmark = pytest.mark.tier1
+
 NET = NetworkSpec(link_gbps=400.0)
 NET100 = NetworkSpec(link_gbps=100.0)
 TOPO44 = full_bisection(4, 4)        # 16 hosts
@@ -87,6 +89,7 @@ def test_timewarp_parity_chained_ring():
     assert trips < ticks // 3, (trips, ticks)
 
 
+@pytest.mark.slow
 def test_timewarp_parity_lossy_roce_rto_gaps():
     """Lossy RoCEv2 incast: go-back-N RTO recovery leaves long dead
     intervals; warp must wake exactly at the timer sweeps dense fires."""
