@@ -3,7 +3,7 @@ PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast fabric-smoke collective-smoke bench-smoke \
-	smoke bench benchmarks update-golden
+	scale-smoke smoke bench benchmarks update-golden
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
@@ -16,8 +16,15 @@ test:
 
 # Smoke-speed suite: slow-marked tests excluded and the differential fuzz
 # suite reduced to 3 examples (full count under `make test` / tier1).
+# The second pass re-runs the shard-marked tests under a FORCED 4-device
+# host platform so multi-device shard_map parity never silently skips on
+# single-device CI hosts (XLA_FLAGS must be set before jax imports, so it
+# needs its own interpreter).
 test-fast:
 	$(PP) REPRO_FUZZ_EXAMPLES=3 $(PY) -m pytest -q -m "not slow"
+	$(PP) REPRO_FUZZ_EXAMPLES=3 \
+	  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	  $(PY) -m pytest -q -m shard
 
 # Regenerate tests/golden/*.json after an INTENTIONAL fidelity change;
 # review the diff like code.
@@ -43,12 +50,21 @@ bench-smoke:
 # What CI should run on every change.
 smoke: tier1 fabric-smoke collective-smoke bench-smoke
 
+# 512-host warp smoke point: a midsize permutation must clear a warm
+# ticks/sec floor, catching at-scale scan regressions the 16-host
+# bench-smoke canary can't see.
+scale-smoke:
+	$(PP) $(PY) -m benchmarks.perf --scale
+
 # Perf trajectory: dense vs event-horizon wall-clock + ticks/sec on the
-# canonical scenarios (1024-host permutation, chunked ring, incast-256);
-# writes BENCH_fabric.json.  Exits non-zero when any scenario's
-# dense/warp parity gate fails or the JSON violates the schema
-# (benchmarks/perf.py validate_report; re-check with --check).
-bench:
+# canonical scenarios (1024-host permutation, chunked ring, incast-256),
+# the warp-only 8K scenarios (perm8k, allreduce8k) and the n_hosts scale
+# axis; writes BENCH_fabric.json.  Runs the 512-host scale smoke first,
+# then exits non-zero when any scenario's parity gate fails, the JSON
+# violates the schema, or warp ticks/sec regressed >20% against the
+# previously committed report (benchmarks/perf.py validate_report /
+# regression_problems; re-check with --check).
+bench: scale-smoke
 	$(PP) $(PY) -m benchmarks.perf --out BENCH_fabric.json
 
 # Full paper-figure benchmark sweep (slow).

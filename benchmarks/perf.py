@@ -1,31 +1,47 @@
 """Fabric perf harness — the trajectory toward the paper's 8K hosts.
 
-Times the jitted fabric on three canonical scenarios, dense ticking vs
-the event-horizon (time-warp) scan, separating compile from run
-wall-clock, and writes the machine-readable ``BENCH_fabric.json``:
+Times the jitted fabric on the canonical scenarios, dense ticking vs the
+event-horizon (time-warp) scan, separating compile from run wall-clock,
+and writes the machine-readable ``BENCH_fabric.json``:
 
-  * ``perm1024``  — 1024-host permutation (scale: per-tick cost at 32x32)
-  * ``ring8``     — 8-rank chunked ring allreduce (dependency-chained
-                    trace: SACK-pipe round trips + dep stalls dominate)
-  * ``incast256`` — 256-to-1 incast (drop/RTO recovery gaps + long
-                    post-completion tail)
+  * ``perm1024``    — 1024-host permutation (scale: per-tick cost at 32x32)
+  * ``ring8``       — 8-rank chunked ring allreduce (dependency-chained
+                      trace: SACK-pipe round trips + dep stalls dominate)
+  * ``incast256``   — 256-to-1 incast (drop/RTO recovery gaps + long
+                      post-completion tail)
+  * ``perm8k``      — the paper's cluster scale: 8192-host permutation,
+                      warp-only (dense ticking at 8K is not a useful
+                      number), parity from a small-scale oracle spot-check
+  * ``allreduce8k`` — 8192 ranks of halving-doubling allreduce as 64
+                      concurrent 128-rank jobs on one shared 8K fabric
+                      (multi-tenant contention included), run under the
+                      active-set formulation
 
-Each scenario runs both modes through the same compiled-program cache and
-asserts dense/warp parity (identical FCTs, drops, pauses) before
-reporting, so a speedup number can never come from a semantics drift.
+plus a **scale axis** (``n_hosts`` vs warp ticks/sec, compile seconds and
+``program_builds``) over 64 / 256 / 1024 / 8192-host permutations, so the
+XLA compile-time ceiling is tracked across PRs instead of rediscovered.
+
+Dense+warp scenarios assert dense/warp parity (identical FCTs, drops,
+pauses) before reporting; warp-only scenarios run the same workload
+generator at small scale against the events oracle and gate on the fuzz
+parity band.  Either way a speedup number can never come from a
+semantics drift.
 
     PYTHONPATH=src python -m benchmarks.perf [--out BENCH_fabric.json]
     PYTHONPATH=src python -m benchmarks.perf --smoke   # CI floor check
+    PYTHONPATH=src python -m benchmarks.perf --scale   # 512-host floor
     PYTHONPATH=src python -m benchmarks.perf --check BENCH_fabric.json
 
 ``make bench`` fails loudly (non-zero exit) when any scenario's
-``parity_ok`` is false or the written JSON does not match the schema
-(``validate_report``); ``--check`` re-validates an existing report.
+``parity_ok`` is false, when the written JSON does not match the schema
+(``validate_report``), or when any scenario's warp ticks/sec regressed
+more than ``REGRESSION_TOL`` against the previously committed
+BENCH_fabric.json; ``--check`` re-validates an existing report.
 
 ``--smoke`` runs only the 2k-tick 16-host canary and fails if the warm
-time-warped fabric drops below a ticks/sec floor — the fast CI guard
-``make smoke`` chains (full runs: ``make bench``).  Schema and scaling
-notes: docs/performance.md.
+time-warped fabric drops below a ticks/sec floor; ``--scale`` is the
+larger 512-host warp smoke point ``make bench`` chains.  Schema and
+scaling notes: docs/performance.md.
 """
 from __future__ import annotations
 
@@ -38,6 +54,7 @@ import time
 import jax
 
 from repro.core.params import NetworkSpec
+from repro.sim import fabric
 from repro.sim.topology import full_bisection
 from repro.sim.workloads import (RunConfig, Scenario, collective_scenario,
                                  incast_scenario, permutation_scenario, run)
@@ -46,6 +63,26 @@ from repro.sim.workloads import (RunConfig, Scenario, collective_scenario,
 #: reference container does ~50k warp ticks/s on this shape; flag only
 #: order-of-magnitude regressions, not machine noise.
 SMOKE_FLOOR_TICKS_PER_S = 5_000.0
+
+#: Floor for the 512-host ``--scale`` smoke point (warm warp run).  A
+#: single-core container does a few thousand ticks/s here; like the 2k
+#: canary this flags order-of-magnitude breakage only.
+SCALE_FLOOR_TICKS_PER_S = 500.0
+
+#: ``make bench`` regression gate: fail when any scenario's warm warp
+#: ticks/sec drops more than this fraction below the committed report.
+REGRESSION_TOL = 0.20
+
+#: Fabric-vs-oracle band for the warp-only scenarios' small-scale parity
+#: spot-check — the differential-fuzz band (tests/test_fuzz_parity.py).
+SPOT_BAND = (0.7, 1.4)
+
+#: Lane cap for the 8K-rank allreduce: halving-doubling releases ~1-2
+#: messages per rank at a time (8192 ranks), so 32k lanes is ~2x headroom
+#: over the peak live-flow count while cutting per-tick transport work
+#: ~3.5x vs the 114,688-flow dense formulation.  The program raises if
+#: the cap is ever exceeded, so a too-small cap fails loudly mid-bench.
+ALLREDUCE8K_ACTIVE_CAP = 32_768
 
 
 def canonical_scenarios() -> dict:
@@ -74,10 +111,41 @@ def canonical_scenarios() -> dict:
     }
 
 
+def scale_scenarios() -> dict:
+    """The paper's 8K-host scenarios: warp-only (spec below) with a
+    small-scale oracle spot-check standing in for the dense-parity gate.
+    name -> (Scenario, cfg overrides, spot Scenario, spot cfg overrides).
+    """
+    net400 = NetworkSpec(link_gbps=400.0)
+    net100 = NetworkSpec(link_gbps=100.0)
+    return {
+        "perm8k": (
+            permutation_scenario(full_bisection(128, 64), 64 * 2 ** 10,
+                                 net=net400, seed=0),
+            {},
+            permutation_scenario(full_bisection(4, 4), 64 * 2 ** 10,
+                                 net=net400, seed=0),
+            {}),
+        "allreduce8k": (
+            collective_scenario(full_bisection(128, 64), "hd", 64, 128,
+                                128 * 2 ** 10, net=net100, seed=0),
+            {"active_cap": ALLREDUCE8K_ACTIVE_CAP},
+            collective_scenario(full_bisection(4, 4), "hd", 2, 8,
+                                128 * 2 ** 10, net=net100, seed=0),
+            {"active_cap": 48}),
+    }
+
+
+#: n_hosts -> full_bisection dims for the compile/throughput scale axis.
+#: The 8192 point reuses the perm8k scenario run (same generator/params).
+SCALE_AXIS_DIMS = {64: (8, 8), 256: (16, 16), 1024: (32, 32)}
+
+
 def _time_mode(sc: Scenario, n_ticks: int, warp: bool, repeats: int,
                **cfg_kw) -> tuple[dict, dict]:
     cfg = RunConfig(backend="fabric", time_warp=warp, trace_every=0,
                     n_ticks=n_ticks, **cfg_kw)
+    b0 = fabric.program_builds
     t0 = time.perf_counter()
     res = run(sc, cfg)
     cold_s = time.perf_counter() - t0
@@ -91,6 +159,7 @@ def _time_mode(sc: Scenario, n_ticks: int, warp: bool, repeats: int,
         "run_s": round(run_s, 4),
         "compile_s": round(max(0.0, cold_s - run_s), 4),
         "ticks_per_s": round(n_ticks / run_s, 1),
+        "program_builds": fabric.program_builds - b0,
     }
     if warp:
         row["warp_trips"] = res.get("warp_trips")
@@ -109,6 +178,7 @@ def _parity(dense: dict, warp: dict) -> bool:
 def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
                    repeats: int = 2) -> dict:
     n_ticks = sc.default_ticks()
+    b0 = fabric.program_builds
     dense_row, dense_res = _time_mode(sc, n_ticks, False, repeats, **cfg_kw)
     warp_row, warp_res = _time_mode(sc, n_ticks, True, repeats, **cfg_kw)
     row = {
@@ -121,6 +191,7 @@ def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
         "parity_ok": _parity(dense_res, warp_res),
         "unfinished": dense_res["unfinished"],
         "max_fct_us": dense_res["max_fct"],
+        "program_builds": fabric.program_builds - b0,
     }
     print(f"bench[{name}]: {n_ticks} ticks x {row['n_msgs']} msgs on "
           f"{row['n_hosts']} hosts | dense {dense_row['run_s']:.3f}s "
@@ -130,26 +201,105 @@ def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
     return row
 
 
+def _oracle_spotcheck(sc: Scenario, cfg_kw: dict) -> dict:
+    """Small-scale fabric-vs-events run of a warp-only scenario's
+    generator; ok iff the completion-time ratio sits in the fuzz band."""
+    fb = run(sc, RunConfig(backend="fabric", time_warp=True,
+                           trace_every=0, **cfg_kw))
+    ev_kw = {k: v for k, v in cfg_kw.items()
+             if k not in ("active_cap", "shard")}
+    ev = run(sc, RunConfig(backend="events", until=2e7, **ev_kw))
+    if "max_collective_time" in fb:
+        a, b = fb["max_collective_time"], ev["max_collective_time"]
+    else:
+        a, b = fb["max_fct"], ev["max_fct"]
+    ratio = a / b
+    ok = (SPOT_BAND[0] < ratio < SPOT_BAND[1]
+          and fb["unfinished"] == 0 and ev["unfinished"] == 0)
+    return {"n_hosts": sc.topo.n_hosts, "n_msgs": len(sc.messages),
+            "fabric_us": round(a, 3), "events_us": round(b, 3),
+            "ratio": round(ratio, 4), "ok": ok}
+
+
+def bench_scenario_warp_only(name: str, sc: Scenario, cfg_kw: dict,
+                             spot_sc: Scenario, spot_kw: dict,
+                             repeats: int = 1) -> dict:
+    """8K-scale scenario: warp scan only (a dense 8K run is pure heat),
+    with the oracle spot-check providing the parity gate."""
+    spot = _oracle_spotcheck(spot_sc, spot_kw)
+    n_ticks = sc.default_ticks()
+    b0 = fabric.program_builds
+    warp_row, warp_res = _time_mode(sc, n_ticks, True, repeats, **cfg_kw)
+    row = {
+        "n_ticks": n_ticks,
+        "n_hosts": sc.topo.n_hosts,
+        "n_msgs": len(sc.messages),
+        "warp": warp_row,
+        "warp_only": True,
+        "parity_ok": bool(spot["ok"] and warp_res["unfinished"] == 0),
+        "parity_spotcheck": spot,
+        "unfinished": warp_res["unfinished"],
+        "max_fct_us": warp_res["max_fct"],
+        "program_builds": fabric.program_builds - b0,
+    }
+    if "active_cap" in cfg_kw:
+        row["active_cap"] = cfg_kw["active_cap"]
+    print(f"bench[{name}]: {n_ticks} ticks x {row['n_msgs']} msgs on "
+          f"{row['n_hosts']} hosts | warp {warp_row['run_s']:.3f}s "
+          f"({warp_row['ticks_per_s']:,.0f} t/s, {warp_row['warp_trips']} "
+          f"trips, compile {warp_row['compile_s']:.1f}s) | spot-check "
+          f"ratio {spot['ratio']} on {spot['n_hosts']} hosts, "
+          f"parity={'ok' if row['parity_ok'] else 'FAIL'}")
+    return row
+
+
+def bench_scale_axis(repeats: int = 1) -> list:
+    """Warp permutation runs across host counts with a cleared program
+    cache per point, so ``compile_s`` and ``program_builds`` measure the
+    real per-scale build cost (the compile-time ceiling ROADMAP names)."""
+    axis = []
+    for n_hosts, (t, h) in sorted(SCALE_AXIS_DIMS.items()):
+        fabric.clear_program_cache()
+        sc = permutation_scenario(full_bisection(t, h), 64 * 2 ** 10,
+                                  net=NetworkSpec(link_gbps=400.0), seed=0)
+        n_ticks = sc.default_ticks()
+        row, _ = _time_mode(sc, n_ticks, True, repeats)
+        axis.append({"n_hosts": n_hosts, "n_ticks": n_ticks,
+                     "ticks_per_s": row["ticks_per_s"],
+                     "compile_s": row["compile_s"],
+                     "program_builds": row["program_builds"],
+                     "warp_trips": row["warp_trips"]})
+        print(f"scale[{n_hosts:>5} hosts]: {row['ticks_per_s']:>9,.1f} t/s "
+              f"warm, compile {row['compile_s']:.2f}s, "
+              f"{row['program_builds']} builds")
+    return axis
+
+
 #: BENCH_fabric.json schema: required keys and their types, per level.
 #: ``validate_report`` walks this so a malformed report (hand-edited,
 #: truncated write, schema drift) fails the gate as loudly as a parity
 #: failure does.
 _SCHEMA_META = {"utc": str, "jax": str, "backend": str, "platform": str}
 _SCHEMA_SCENARIO = {"n_ticks": int, "n_hosts": int, "n_msgs": int,
-                    "dense": dict, "warp": dict, "speedup": (int, float),
-                    "parity_ok": bool, "unfinished": int,
-                    "max_fct_us": (int, float)}
+                    "warp": dict, "parity_ok": bool, "unfinished": int,
+                    "max_fct_us": (int, float), "program_builds": int}
+#: dense+speedup are required unless the row is flagged ``warp_only``.
+_SCHEMA_SCENARIO_DENSE = {"dense": dict, "speedup": (int, float)}
 _SCHEMA_MODE = {"cold_s": (int, float), "run_s": (int, float),
-                "compile_s": (int, float), "ticks_per_s": (int, float)}
+                "compile_s": (int, float), "ticks_per_s": (int, float),
+                "program_builds": int}
+_SCHEMA_SCALE_POINT = {"n_hosts": int, "n_ticks": int,
+                       "ticks_per_s": (int, float),
+                       "compile_s": (int, float), "program_builds": int}
 
 
 def validate_report(report: dict) -> list:
     """Schema-check one BENCH_fabric.json report dict.
 
     Returns a list of human-readable problems (empty = valid): missing or
-    mis-typed keys at the meta / scenario / mode levels, and any scenario
-    whose ``parity_ok`` gate is false — the caller turns a non-empty list
-    into a non-zero exit.
+    mis-typed keys at the meta / scenario / mode / scale-axis levels, and
+    any scenario whose ``parity_ok`` gate is false — the caller turns a
+    non-empty list into a non-zero exit.
     """
     problems = []
 
@@ -177,14 +327,50 @@ def validate_report(report: dict) -> list:
     for name, row in scenarios.items():
         if not chk(row, _SCHEMA_SCENARIO, f"scenarios.{name}"):
             continue
-        for mode in ("dense", "warp"):
+        modes = ["warp"]
+        if not row.get("warp_only"):
+            chk(row, _SCHEMA_SCENARIO_DENSE, f"scenarios.{name}")
+            modes.append("dense")
+        for mode in modes:
             if isinstance(row.get(mode), dict):
                 chk(row[mode], _SCHEMA_MODE, f"scenarios.{name}.{mode}")
         if row.get("parity_ok") is False:
             problems.append(
-                f"scenarios.{name}: parity_ok is FALSE — the time-warped "
-                f"scan diverged from dense ticking; a speedup number from "
-                f"this report cannot be trusted")
+                f"scenarios.{name}: parity_ok is FALSE — the fabric "
+                f"diverged from its reference (dense ticking or the "
+                f"events-oracle spot-check); a speedup number from this "
+                f"report cannot be trusted")
+    # scale axis is optional for backward compatibility with pre-scale
+    # reports, but when present every point must be well-formed
+    if "scale_axis" in report:
+        axis = report["scale_axis"]
+        if not isinstance(axis, list) or not axis:
+            problems.append("scale_axis: expected a non-empty list")
+        else:
+            for i, pt in enumerate(axis):
+                chk(pt, _SCHEMA_SCALE_POINT, f"scale_axis[{i}]")
+    return problems
+
+
+def regression_problems(new: dict, baseline: dict,
+                        tol: float = REGRESSION_TOL) -> list:
+    """Compare warm warp ticks/sec per scenario against the committed
+    report; >tol fractional drops are gate failures.  Scenarios missing
+    on either side are skipped (new scenarios land without a baseline)."""
+    problems = []
+    old_sc = (baseline or {}).get("scenarios") or {}
+    new_sc = (new or {}).get("scenarios") or {}
+    for name in sorted(set(old_sc) & set(new_sc)):
+        try:
+            old_tps = float(old_sc[name]["warp"]["ticks_per_s"])
+            new_tps = float(new_sc[name]["warp"]["ticks_per_s"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if old_tps > 0 and new_tps < (1.0 - tol) * old_tps:
+            problems.append(
+                f"scenarios.{name}: warp ticks/sec regressed "
+                f"{(1 - new_tps / old_tps) * 100:.1f}% "
+                f"({old_tps:,.1f} -> {new_tps:,.1f}; gate is {tol:.0%})")
     return problems
 
 
@@ -209,6 +395,13 @@ def check_report_file(path: str) -> int:
 
 def bench_all(out_path: str = "BENCH_fabric.json",
               repeats: int = 2) -> dict:
+    # the committed report (if any) is the regression baseline — read it
+    # BEFORE overwriting
+    try:
+        with open(out_path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        baseline = None
     report = {
         "meta": {
             "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -218,16 +411,32 @@ def bench_all(out_path: str = "BENCH_fabric.json",
         },
         "scenarios": {},
     }
+    # scale axis first: each point measures a cold build (cache cleared),
+    # and the 1024-host program it leaves cached is exactly perm1024's
+    report["scale_axis"] = bench_scale_axis(repeats=max(1, repeats - 1))
     for name, (sc, cfg_kw) in canonical_scenarios().items():
         report["scenarios"][name] = bench_scenario(name, sc, cfg_kw,
                                                    repeats=repeats)
+    for name, (sc, cfg_kw, spot_sc, spot_kw) in scale_scenarios().items():
+        row = bench_scenario_warp_only(name, sc, cfg_kw, spot_sc, spot_kw,
+                                       repeats=1)
+        report["scenarios"][name] = row
+        if name == "perm8k":
+            w = row["warp"]
+            report["scale_axis"].append({
+                "n_hosts": row["n_hosts"], "n_ticks": row["n_ticks"],
+                "ticks_per_s": w["ticks_per_s"],
+                "compile_s": w["compile_s"],
+                "program_builds": w["program_builds"],
+                "warp_trips": w["warp_trips"]})
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}")
-    # Loud gate: schema-check the report we just wrote and fail the
-    # process (non-zero exit) if any scenario's dense/warp parity broke —
-    # a silent parity drift would invalidate every speedup number.
+    # Loud gates: (1) schema + parity on the report we just wrote, and
+    # (2) warp throughput vs the previously committed report — fail the
+    # process on either, never bury a regression in a report nobody reads.
     problems = validate_report(report)
+    problems += regression_problems(report, baseline)
     if problems:
         for p in problems:
             print(f"bench gate: {p}", file=sys.stderr)
@@ -253,13 +462,33 @@ def smoke(n_ticks: int = 2000,
           f"{warp_row['warp_trips']} trips, parity exact")
 
 
+def scale_smoke(floor: float = SCALE_FLOOR_TICKS_PER_S) -> None:
+    """512-host warp smoke point (``make bench`` chains this): a midsize
+    permutation must beat a conservative warm ticks/sec floor, catching
+    at-scale scan regressions the 16-host canary can't see."""
+    sc = permutation_scenario(full_bisection(16, 32), 64 * 2 ** 10,
+                              net=NetworkSpec(link_gbps=400.0), seed=0)
+    n_ticks = sc.default_ticks()
+    warp_row, warp_res = _time_mode(sc, n_ticks, True, repeats=1)
+    tps = warp_row["ticks_per_s"]
+    assert warp_res["unfinished"] == 0, warp_res
+    assert tps >= floor, (
+        f"scale-smoke FAILED: warm time-warp fabric ran {tps:,.0f} ticks/s "
+        f"< floor {floor:,.0f} on the 512-host permutation")
+    print(f"scale-smoke ok: 512 hosts, warp {tps:,.0f} ticks/s "
+          f"(floor {floor:,.0f}), compile {warp_row['compile_s']:.2f}s, "
+          f"{warp_row['warp_trips']} trips")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="BENCH_fabric.json")
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--smoke", action="store_true",
                     help="2k-tick ticks/sec floor canary (CI)")
-    ap.add_argument("--floor", type=float, default=SMOKE_FLOOR_TICKS_PER_S)
+    ap.add_argument("--scale", action="store_true",
+                    help="512-host warp ticks/sec floor point (CI)")
+    ap.add_argument("--floor", type=float, default=None)
     ap.add_argument("--check", metavar="PATH",
                     help="validate an existing BENCH_fabric.json (schema "
                          "+ parity gate) without running anything")
@@ -267,7 +496,12 @@ def main() -> None:
     if args.check:
         sys.exit(check_report_file(args.check))
     if args.smoke:
-        smoke(floor=args.floor)
+        smoke(floor=args.floor if args.floor is not None
+              else SMOKE_FLOOR_TICKS_PER_S)
+        return
+    if args.scale:
+        scale_smoke(floor=args.floor if args.floor is not None
+                    else SCALE_FLOOR_TICKS_PER_S)
         return
     bench_all(args.out, repeats=args.repeats)
 

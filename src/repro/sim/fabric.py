@@ -106,6 +106,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import compat
 from ..core import reliability as rel
 from ..core import transport as tp
 from ..core.params import (ACK_WIRE_BYTES, NetworkSpec, RoCEParams,
@@ -445,6 +446,8 @@ class FabricState(NamedTuple):
     msg_release_tick: jax.Array  # i32[n_msgs], -1 until sendable
     msg_done_tick: jax.Array     # i32[n_msgs], -1 until complete
     group_done_tick: jax.Array   # i32[G], -1 until all group msgs complete
+    act_overflow: jax.Array      # i32: ticks the live-flow count exceeded
+    #                              cfg.active_cap (always 0 when unset)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -506,6 +509,23 @@ class FabricConfig:
     # any decimation — and is what large-host runs want: the stacked
     # [n_ticks, Q] trace is what used to cap host count.
     trace_every: int = 1
+    # Active-set formulation: when set, the per-tick transport work
+    # (ACK processing, timers, next-packet, enqueue candidates) runs over
+    # at most this many compacted lanes — the flows that are released
+    # (deps met) and not yet done — instead of all N flows.  Bit-exact vs
+    # the dense formulation as long as the live count never exceeds the
+    # cap; an overflow is detected in-scan and raised after the run.
+    # Requires trace_every=0 (or time_warp): the decimated trace samples
+    # all-flow means that the active set deliberately skips.
+    active_cap: Optional[int] = None
+    # Shard the fabric over this many devices with shard_map (0/1 = off):
+    # queue rings partition by switch row block, flow/receiver/return-pipe
+    # state by flow block; popped heads and NIC offers cross pods through
+    # explicit all_gather exchanges while all small per-queue vectors stay
+    # replicated, so results are bit-exact vs the unsharded program.
+    # CPU-only hosts test this via
+    # ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    shard: int = 0
 
     @property
     def pfc_enabled(self) -> bool:
@@ -532,6 +552,22 @@ def _scatter_rows(tree_all, tree_rows, idx, n):
 def _scatter_add(vec, idx, val, n):
     pad = jnp.zeros((1,) + vec.shape[1:], vec.dtype)
     return jnp.concatenate([vec, pad], 0).at[idx].add(val)[:n]
+
+
+def _gather_rows(tree, idx, n):
+    """Gather rows from per-flow pytrees; idx == n reads a zero trash row
+    (the dual of :func:`_scatter_rows` — active-set and shard lanes use it
+    to pull compacted row subsets)."""
+    def one(a):
+        pad = jnp.zeros((1,) + a.shape[1:], a.dtype)
+        return jnp.concatenate([a, pad], 0)[idx]
+    return jax.tree.map(one, tree)
+
+
+def _set_rows(vec, idx, val, n):
+    """Flat-vector row set with a trash slot at idx == n."""
+    pad = jnp.zeros((1,) + vec.shape[1:], vec.dtype)
+    return jnp.concatenate([vec, pad], 0).at[idx].set(val)[:n]
 
 
 def _scatter_pipe(pipe, rows, slot, fidx, valid, h, n):
@@ -593,24 +629,79 @@ def _hop_delays(cfg: FabricConfig) -> dict:
                 H=max(D_same, D_cross) + 2)
 
 
-def _rank_in_queue(qid: jax.Array, flag: jax.Array) -> jax.Array:
-    """Rank of each candidate among flag-set candidates of the same queue,
-    in candidate-index order.
+#: Chunk width of the sort-free ranker: candidates split into blocks of
+#: this size; each block is resolved with a dense lower-triangle count and
+#: blocks are combined through a scatter-add table + exclusive cumsum.
+#: Intra-block work is O(M * CHUNK) and the cross-block table is
+#: O(M / CHUNK * n_queues) memory, so CHUNK trades flat FLOPs against
+#: table footprint; 256 keeps both small from 1K through 8K hosts.
+_RANK_CHUNK = 256
 
-    Sort-based O(M log M) replacement for the all-pairs lower-triangle mask
-    (O(M^2) per tick, which dominated once collective traces pushed the
-    candidate count into the thousands).  Entries are keyed (qid, ~flag) so
-    a stable sort puts each queue's flagged candidates first, index-ordered;
-    rank = position - start-of-queue-run.  Values at non-flagged entries
-    are meaningless — callers only read ranks where ``flag`` holds.
-    """
+
+def _rank_in_queue_argsort(qid: jax.Array, flag: jax.Array) -> jax.Array:
+    """Stable-argsort reference ranker, O(M log M) — kept as a second
+    independent implementation for the property tests (the hot path uses
+    the sort-free :func:`_rank_in_queue`).  Same contract: rank among
+    flag-set candidates of the same queue in candidate-index order, with
+    an explicit ``-1`` fill at non-flagged entries."""
     m = qid.shape[0]
     key = qid * 2 + (~flag).astype(jnp.int32)
     order = jnp.argsort(key, stable=True)
     sq = qid[order]
     start = jnp.searchsorted(sq, sq, side="left").astype(jnp.int32)
     rank_sorted = jnp.arange(m, dtype=jnp.int32) - start
-    return jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+    ranks = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+    return jnp.where(flag, ranks, -1)
+
+
+def _rank_in_queue(qid: jax.Array, flag: jax.Array,
+                   n_queues: int) -> jax.Array:
+    """Rank of each candidate among flag-set candidates of the same queue,
+    in candidate-index order; non-flagged entries are ``-1`` (explicit
+    masked fill — callers must not read ranks where ``flag`` is unset).
+
+    Sort-free and fully parallel (no sequential carry): candidates split
+    into ``_RANK_CHUNK``-wide blocks; a single scatter-add builds the
+    [n_blocks, n_queues] table of flagged counts per (block, queue), an
+    exclusive cumsum over the block axis turns it into each block's
+    per-queue starting rank, and a batched dense lower-triangle count
+    resolves ordering within blocks.  O(M * CHUNK) flat work — the
+    "scatter-add / segmented-cumsum" replacement for the old per-tick
+    stable argsort (O(M log M) with sort constants); ``n_queues`` is
+    static so the table is fixed-shape.
+    """
+    m = qid.shape[0]
+    c = _RANK_CHUNK
+    qid = qid.astype(jnp.int32)
+    if m == 0:
+        return jnp.zeros((0,), jnp.int32)
+    pad = (-m) % c
+    if pad:
+        qid_p = jnp.concatenate(
+            [qid, jnp.full((pad,), n_queues, jnp.int32)])
+        flag_p = jnp.concatenate([flag, jnp.zeros((pad,), bool)])
+    else:
+        qid_p, flag_p = qid, flag
+    nb = qid_p.shape[0] // c
+    qc = qid_p.reshape(nb, c)
+    fc = flag_p.reshape(nb, c)
+    # cross-block base: flagged count of each (earlier block, same queue);
+    # one flat scatter-add (non-flagged entries land in the n_queues trash
+    # column) then an exclusive cumsum down the block axis
+    qw = n_queues + 1
+    blk = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), c)
+    slot = blk * qw + jnp.where(flag_p, qid_p, n_queues)
+    tbl = jnp.zeros((nb * qw,), jnp.int32).at[slot].add(
+        flag_p.astype(jnp.int32)).reshape(nb, qw)
+    start = jnp.cumsum(tbl, axis=0) - tbl
+    base = start.reshape(-1)[blk * qw + qid_p]
+    # intra-block: dense strictly-lower-triangle same-queue count
+    tril = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    intra = jnp.sum((qc[:, :, None] == qc[:, None, :])
+                    & fc[:, None, :] & tril[None, :, :],
+                    axis=2).astype(jnp.int32)
+    ranks = base + intra.reshape(-1)
+    return jnp.where(flag, ranks[:m], -1)
 
 
 def _make_protocol(cfg: FabricConfig):
@@ -636,7 +727,8 @@ def _make_protocol(cfg: FabricConfig):
 
 
 def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
-                  cfg: FabricConfig, dep: Optional[DepSpec] = None):
+                  cfg: FabricConfig, dep: Optional[DepSpec] = None,
+                  n_real: Optional[int] = None):
     """Build the pure jnp fabric program for fixed (topology, N, ticks).
 
     Returns ``program(src, dst, total_pkts, tail_bytes, ent0, lb_code) ->
@@ -666,6 +758,27 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     # the event-horizon scan cannot stack a per-tick trace (its trip count
     # is data-dependent): warp runs are events-only summaries
     trace_every = 0 if cfg.time_warp else cfg.trace_every
+    DP = int(cfg.shard) if int(cfg.shard) > 1 else 1
+    A = int(cfg.active_cap) if cfg.active_cap else 0
+    if A < 0:
+        raise ValueError(f"active_cap must be positive, got {A}")
+    if A and trace_every:
+        raise ValueError(
+            "active_cap requires trace_every=0 (or time_warp): the dense "
+            "trace samples all-flow means the active set skips")
+    if DP > 1:
+        if A:
+            raise ValueError("active_cap and shard are mutually exclusive")
+        if trace_every:
+            raise ValueError(
+                "shard requires trace_every=0 (or time_warp): the per-tick "
+                "trace is not defined on the sharded program")
+        n_dev = len(jax.devices())
+        if n_dev < DP:
+            raise ValueError(
+                f"cfg.shard={DP} needs {DP} devices but only {n_dev} are "
+                f"visible; on CPU hosts export "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={DP}")
     net = cfg.net
     proto, kmin_p, kmax_p, _ = _make_protocol(cfg)
     pfc = cfg.pfc_enabled
@@ -677,6 +790,20 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     N = n_flows
     if N <= 0:
         raise ValueError("fabric program needs at least one flow")
+    # NR: the "real" (pre-padding) flow count.  The sharded path pads the
+    # flow axis to a device multiple with inert zero-packet flows; NIC
+    # round-robin arbitration keys on NR so padded and unpadded programs
+    # arbitrate identically (bit-exact shard-vs-unsharded parity).
+    NR = int(n_real) if n_real is not None else N
+    if DP > 1 and N % DP != 0:
+        raise ValueError(f"sharded flow axis must be a multiple of "
+                         f"shard={DP}, got {N} (callers pad with inert "
+                         f"flows via _shard_pad_inputs)")
+    if A >= N:
+        A = 0  # cap >= N: the dense formulation is already minimal
+    NL = N // DP                     # flow lanes per pod
+    QRL = -(-(Q + 1) // DP)          # ring rows per pod (global trash incl.)
+    QR = QRL * DP
     if dep is None:
         dep = _trivial_dep(range(N))
     n_msgs, n_groups = dep.n_msgs, dep.n_groups
@@ -710,7 +837,12 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     spine_of_row = jnp.where(is_up_row, qrows % S, (qrows - TS) // T)
     host_tor = jnp.arange(NH, dtype=jnp.int32) // HPT
 
-    def program(src, dst, total_pkts, tail_b, ent0, lb_code):
+    def body(src, dst, total_pkts, tail_b, ent0, lb_code):
+        # Bump the retrace counter at TRACE time (python side effects fire
+        # once per jax trace, not per run) — the job-batching regression
+        # hook: bucketed batch sizes must not retrace this body.
+        global program_traces
+        program_traces += 1
         src = jnp.asarray(src, jnp.int32)
         dst = jnp.asarray(dst, jnp.int32)
         total_pkts = jnp.asarray(total_pkts, jnp.int32)
@@ -726,6 +858,23 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
         # mode where D_same == D_cross)
         dflow = jnp.where(same_tor, jnp.int32(D_same), jnp.int32(D_cross))
 
+        if DP > 1:
+            # pod-local offsets: flow lanes [foff, foff+NL), ring rows
+            # [qoff, qoff+QRL) live on this pod; everything else replicated
+            pod = jax.lax.axis_index("pod")
+            foff = pod * NL
+            qoff = pod * QRL
+
+            def fslice(x):
+                """This pod's [NL] slice of a replicated [N] flow vector."""
+                return jax.lax.dynamic_slice_in_dim(x, foff, NL)
+
+            def gath(tree):
+                """Concatenate pod-local leading axes back to global."""
+                return jax.tree.map(
+                    lambda a: jax.lax.all_gather(a, "pod", tiled=True),
+                    tree)
+
         def wire_bytes(flow, psn, probe):
             """Per-packet wire size: probes are ACK-sized, the final PSN
             of a message is its odd tail, everything else a full MTU."""
@@ -734,19 +883,25 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             return jnp.where(probe, ack_f,
                              jnp.where(tail, tail_b[f], mtu_f))
 
-        fl0, rcv0 = proto.init(total_pkts, tail_b, ent0)
-        q0 = PktQ(flow=jnp.full((Q + 1, cap), -1, jnp.int32),
-                  psn=jnp.zeros((Q + 1, cap), jnp.int32),
-                  ts=jnp.zeros((Q + 1, cap), jnp.float32),
-                  probe=jnp.zeros((Q + 1, cap), bool),
-                  ecn=jnp.zeros((Q + 1, cap), bool),
-                  ent=jnp.zeros((Q + 1, cap), jnp.int32),
-                  ready=jnp.zeros((Q + 1, cap), jnp.int32))
+        if DP > 1:
+            fl0, rcv0 = proto.init(fslice(total_pkts), fslice(tail_b),
+                                   fslice(ent0))
+            q_rows = QRL
+        else:
+            fl0, rcv0 = proto.init(total_pkts, tail_b, ent0)
+            q_rows = Q + 1
+        q0 = PktQ(flow=jnp.full((q_rows, cap), -1, jnp.int32),
+                  psn=jnp.zeros((q_rows, cap), jnp.int32),
+                  ts=jnp.zeros((q_rows, cap), jnp.float32),
+                  probe=jnp.zeros((q_rows, cap), bool),
+                  ecn=jnp.zeros((q_rows, cap), bool),
+                  ent=jnp.zeros((q_rows, cap), jnp.int32),
+                  ready=jnp.zeros((q_rows, cap), jnp.int32))
         st0 = FabricState(
             flows=fl0, rcv=rcv0, q=q0,
             qhead=jnp.zeros((Q + 1,), jnp.int32),
             qsize=jnp.zeros((Q + 1,), jnp.int32),
-            pipe=proto.empty_msgs(H, N),
+            pipe=proto.empty_msgs(H, NL if DP > 1 else N),
             obl_rr=iota_n % cfg.max_paths,  # stagger oblivious spray starts
             drops=jnp.zeros((), jnp.int32),
             delivered=jnp.zeros((N,), jnp.float32),
@@ -764,7 +919,8 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             msg_done=jnp.zeros((n_msgs,), bool),
             msg_release_tick=jnp.full((n_msgs,), -1, jnp.int32),
             msg_done_tick=jnp.full((n_msgs,), -1, jnp.int32),
-            group_done_tick=jnp.full((n_groups,), -1, jnp.int32))
+            group_done_tick=jnp.full((n_groups,), -1, jnp.int32),
+            act_overflow=jnp.zeros((), jnp.int32))
 
         def tick(st: FabricState, t):
             """One dense tick at tick-index ``t`` -> (new_state, can_any).
@@ -805,8 +961,19 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 has = (qs > 0) & (~paused_row)
             else:
                 has = qs > 0
-            hidx = st.qhead[:Q] % cap
-            pop = PktQ(*[f[qrows, hidx] for f in st.q])
+            if DP > 1:
+                # the inter-pod hop: each pod pops its own ring rows' heads
+                # and the [~Q x 7 scalar] head fields cross pods in one
+                # all_gather — packets move from the queue's pod to the
+                # destination flow's pod through this exchange
+                qhead_pad = jnp.pad(st.qhead, (0, QR - (Q + 1)))
+                hidx_l = jax.lax.dynamic_slice_in_dim(
+                    qhead_pad, qoff, QRL) % cap
+                pop_l = PktQ(*[f[jnp.arange(QRL), hidx_l] for f in st.q])
+                pop = PktQ(*[a[:Q] for a in gath(pop_l)])
+            else:
+                hidx = st.qhead[:Q] % cap
+                pop = PktQ(*[f[qrows, hidx] for f in st.q])
             has = has & (pop.ready <= t)
             residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
             frac = jnp.clip((residual - kmin_p)
@@ -837,16 +1004,27 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             # ---- 2. deliveries -> per-flow receivers (one host = one q) --
             del_has = has[2 * TS:]
             del_flow = fclip[2 * TS:]
-            rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
+            slot_del = (t + dflow[del_flow]) % H
+            if DP > 1:
+                # receiver + return-pipe state live on the flow-owner pod:
+                # every pod walks the global delivery rows but gathers /
+                # commits only the flows it owns (trash row otherwise)
+                own = del_has & (del_flow >= foff) & (del_flow < foff + NL)
+                lrow = jnp.where(own, del_flow - foff, NL)
+                rrows = _gather_rows(st.rcv, lrow, NL)
+                commit, fidx, n_lanes = own, lrow, NL
+            else:
+                rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
+                commit, fidx, n_lanes = del_has, del_flow, N
             rnew, sack = jax.vmap(
                 lambda r, psn, sz, ecn, ent, ts, pb: proto.on_data(
                     r, psn, sz, ecn, ent, ts, pb, now))(
                 rrows, pop.psn[2 * TS:], pop_bytes[2 * TS:],
                 ecn_out[2 * TS:], pop.ent[2 * TS:],
                 pop.ts[2 * TS:], pop.probe[2 * TS:])
-            rnew = _bwhere(del_has, rnew, rrows)
+            rnew = _bwhere(commit, rnew, rrows)
             rcv = _scatter_rows(st.rcv, rnew,
-                                jnp.where(del_has, del_flow, N), N)
+                                jnp.where(commit, fidx, n_lanes), n_lanes)
             delivered = _scatter_add(
                 st.delivered,
                 jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
@@ -854,58 +1032,153 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
 
             # write emitted messages into the return pipe at slot
             # t + D[flow]: each flow's ACK rides its own reverse path
-            sack_valid = sack.valid & del_has
-            slot_del = (t + dflow[del_flow]) % H
+            sack_valid = sack.valid & commit
             pipe = _scatter_pipe(st.pipe, sack._replace(valid=sack_valid),
-                                 slot_del, del_flow, sack_valid, H, N)
+                                 slot_del, fidx, sack_valid, H, n_lanes)
 
-            # ---- 3. due messages reach their senders ---------------------
+            # ---- 3.-5. transport lanes: due ACKs, timers, sends ----------
+            # Three equivalent lane formulations of the same per-flow
+            # steps (all bit-exact in observables — the fuzz suite pins
+            # them against each other):
+            #   * dense (default): lanes are all N flows,
+            #   * active-set: lanes are the <= A flows that are released
+            #     and not done, compacted with a fill-value nonzero (the
+            #     ascending index order preserves candidate order, hence
+            #     ranks, drops and ring layout),
+            #   * sharded: this pod's NL flow lanes; NIC offers cross pods
+            #     through an all_gather so arbitration stays global.
             cur = t % H
-            due = jax.tree.map(lambda a: a[cur], pipe)
-            flows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
-                st.flows, due)
-            pipe = pipe._replace(
-                valid=pipe.valid.at[cur].set(jnp.zeros((N,), bool)))
 
-            # ---- 4. timers (probes / RTO / DCQCN) every timer_every ticks
             def timers(fl):
                 return jax.vmap(lambda f: proto.on_timer(f, now))(fl)
 
-            empty_tx = tp.TxPacket(
-                valid=jnp.zeros((N,), bool), psn=jnp.zeros((N,), jnp.int32),
-                entropy=jnp.zeros((N,), jnp.int32),
-                is_rtx=jnp.zeros((N,), bool), is_probe=jnp.zeros((N,), bool))
-            flows_t, probe_tx = jax.lax.cond(
-                (t % cfg.timer_every) == 0, timers,
-                lambda fl: (fl, empty_tx), flows)
-            # Gated (dependency-pending) flows keep their init-time timer
-            # state — their deadlines effectively start counting at release,
-            # as in the oracle where timers are armed at add_flow time.
-            probe_valid = probe_tx.valid & sendable
-            if pfc:
-                # A paused NIC emits nothing.  Withhold the timer-state
-                # commit for flows whose probe was blocked (their probe
-                # deadline and spray state stay put), so the probe is
-                # *delayed* until resume — as in the oracle, where it waits
-                # in the paused NIC queue — not silently lost.
-                blocked = probe_tx.valid & eff_nic[src]
-                flows = _bwhere(sendable & (~blocked), flows_t, flows)
-                probe_valid = probe_valid & (~blocked)
-            else:
-                flows = _bwhere(sendable, flows_t, flows)
+            def empty_tx(n):
+                return tp.TxPacket(
+                    valid=jnp.zeros((n,), bool),
+                    psn=jnp.zeros((n,), jnp.int32),
+                    entropy=jnp.zeros((n,), jnp.int32),
+                    is_rtx=jnp.zeros((n,), bool),
+                    is_probe=jnp.zeros((n,), bool))
 
-            # ---- 5. sends: each NIC clocks out <=1 data pkt (RR arb.) ----
-            flows_sent, tx = jax.vmap(
-                lambda f: proto.next_packet(f, now))(flows)
-            can_tx = tx.valid & sendable
-            score = jnp.where(can_tx, (iota_n - t) % N, N)
-            best = jax.ops.segment_min(score, src, num_segments=NH)
-            sel = can_tx & (score == best[src])
-            if pfc:
-                # a paused NIC injects nothing (state update withheld too,
-                # so the flow re-offers the same packet next tick)
-                sel = sel & (~eff_nic[src])
-            flows = _bwhere(sel, flows_sent, flows)
+            overflow = jnp.zeros((), jnp.int32)
+            if DP > 1:
+                due = jax.tree.map(lambda a: a[cur], pipe)
+                flows_l = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
+                    st.flows, due)
+                pipe = pipe._replace(valid=pipe.valid.at[cur].set(
+                    jnp.zeros((NL,), bool)))
+                flows_t_l, probe_tx_l = jax.lax.cond(
+                    (t % cfg.timer_every) == 0, timers,
+                    lambda fl: (fl, empty_tx(NL)), flows_l)
+                probe_tx = gath(probe_tx_l)
+                probe_valid = probe_tx.valid & sendable
+                if pfc:
+                    blocked = probe_tx.valid & eff_nic[src]
+                    flows_l = _bwhere(fslice(sendable & (~blocked)),
+                                      flows_t_l, flows_l)
+                    probe_valid = probe_valid & (~blocked)
+                else:
+                    flows_l = _bwhere(fslice(sendable), flows_t_l, flows_l)
+                flows_sent_l, tx_l = jax.vmap(
+                    lambda f: proto.next_packet(f, now))(flows_l)
+                tx = gath(tx_l)
+                can_tx = tx.valid & sendable
+                score = jnp.where(can_tx, (iota_n - t) % NR, NR)
+                best = jax.ops.segment_min(score, src, num_segments=NH)
+                sel = can_tx & (score == best[src])
+                if pfc:
+                    sel = sel & (~eff_nic[src])
+                flows = _bwhere(fslice(sel), flows_sent_l, flows_l)
+                lane_flow, lane_src, lane_dst = iota_n, src, dst
+                lane_same, lane_stor = same_tor, src_tor
+                lane_fix, lane_rr = fixed_ent, st.obl_rr
+                lane_idx, L = iota_n, N
+            elif A:
+                # active set: released, not-yet-done flows (ascending flow
+                # index; fill lanes read/write the trash row).  Done flows
+                # are transition-silent (next_packet invalid, timers
+                # gated), so excluding them preserves every observable.
+                done_prev = jax.vmap(proto.done)(st.flows)
+                act_mask = sendable & (~done_prev)
+                act_idx = jnp.nonzero(
+                    act_mask, size=A, fill_value=N)[0].astype(jnp.int32)
+                lane_ok = act_idx < N
+                act_clip = jnp.minimum(act_idx, N - 1)
+                overflow = (jnp.sum(act_mask) > A).astype(jnp.int32)
+                due = _gather_rows(
+                    jax.tree.map(lambda a: a[cur], pipe), act_idx, N)
+                rows = _gather_rows(st.flows, act_idx, N)
+                rows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
+                    rows, due)
+                pipe = pipe._replace(valid=pipe.valid.at[cur].set(
+                    jnp.zeros((N,), bool)))
+                rows_t, probe_tx = jax.lax.cond(
+                    (t % cfg.timer_every) == 0, timers,
+                    lambda fl: (fl, empty_tx(A)), rows)
+                lane_src = src[act_clip]
+                probe_valid = probe_tx.valid & lane_ok
+                if pfc:
+                    blocked = probe_tx.valid & eff_nic[lane_src]
+                    rows = _bwhere(lane_ok & (~blocked), rows_t, rows)
+                    probe_valid = probe_valid & (~blocked)
+                else:
+                    rows = _bwhere(lane_ok, rows_t, rows)
+                rows_sent, tx = jax.vmap(
+                    lambda f: proto.next_packet(f, now))(rows)
+                can_tx = tx.valid & lane_ok
+                score = jnp.where(can_tx, (act_idx - t) % NR, NR)
+                best = jax.ops.segment_min(score, lane_src,
+                                           num_segments=NH)
+                sel = can_tx & (score == best[lane_src])
+                if pfc:
+                    sel = sel & (~eff_nic[lane_src])
+                rows = _bwhere(sel, rows_sent, rows)
+                flows = _scatter_rows(st.flows, rows,
+                                      jnp.where(lane_ok, act_idx, N), N)
+                lane_flow, lane_dst = act_clip, dst[act_clip]
+                lane_same, lane_stor = same_tor[act_clip], src_tor[act_clip]
+                lane_fix, lane_rr = fixed_ent[act_clip], st.obl_rr[act_clip]
+                lane_idx, L = act_idx, A
+            else:
+                due = jax.tree.map(lambda a: a[cur], pipe)
+                flows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
+                    st.flows, due)
+                pipe = pipe._replace(valid=pipe.valid.at[cur].set(
+                    jnp.zeros((N,), bool)))
+                # Gated (dependency-pending) flows keep their init-time
+                # timer state — their deadlines effectively start counting
+                # at release, as in the oracle where timers are armed at
+                # add_flow time.
+                flows_t, probe_tx = jax.lax.cond(
+                    (t % cfg.timer_every) == 0, timers,
+                    lambda fl: (fl, empty_tx(N)), flows)
+                probe_valid = probe_tx.valid & sendable
+                if pfc:
+                    # A paused NIC emits nothing.  Withhold the timer-state
+                    # commit for flows whose probe was blocked (their probe
+                    # deadline and spray state stay put), so the probe is
+                    # *delayed* until resume — as in the oracle, where it
+                    # waits in the paused NIC queue — not silently lost.
+                    blocked = probe_tx.valid & eff_nic[src]
+                    flows = _bwhere(sendable & (~blocked), flows_t, flows)
+                    probe_valid = probe_valid & (~blocked)
+                else:
+                    flows = _bwhere(sendable, flows_t, flows)
+                flows_sent, tx = jax.vmap(
+                    lambda f: proto.next_packet(f, now))(flows)
+                can_tx = tx.valid & sendable
+                score = jnp.where(can_tx, (iota_n - t) % NR, NR)
+                best = jax.ops.segment_min(score, src, num_segments=NH)
+                sel = can_tx & (score == best[src])
+                if pfc:
+                    # a paused NIC injects nothing (state update withheld
+                    # too, so the flow re-offers the same packet next tick)
+                    sel = sel & (~eff_nic[src])
+                flows = _bwhere(sel, flows_sent, flows)
+                lane_flow, lane_src, lane_dst = iota_n, src, dst
+                lane_same, lane_stor = same_tor, src_tor
+                lane_fix, lane_rr = fixed_ent, st.obl_rr
+                lane_idx, L = iota_n, N
 
             if not proto.uses_spray:
                 ent = tx.entropy
@@ -917,50 +1190,56 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 # selects below are index arithmetic, not extra queue work.
                 is_obl = lb_code == 1
                 is_fix = lb_code == 2
-                ent_obl = (st.obl_rr + 1) % cfg.max_paths
+                ent_obl = (lane_rr + 1) % cfg.max_paths
                 ent = jnp.where(is_obl, ent_obl,
-                                jnp.where(is_fix, fixed_ent, tx.entropy))
+                                jnp.where(is_fix, lane_fix, tx.entropy))
                 ent_probe = jnp.where(
                     is_obl, ent_obl,
-                    jnp.where(is_fix, fixed_ent, probe_tx.entropy))
-                obl_rr = jnp.where(is_obl & sel, ent_obl, st.obl_rr)
+                    jnp.where(is_fix, lane_fix, probe_tx.entropy))
+                if A:
+                    obl_rr = _set_rows(
+                        st.obl_rr, jnp.where(is_obl & sel, lane_idx, N),
+                        ent_obl, N)
+                else:
+                    obl_rr = jnp.where(is_obl & sel, ent_obl, st.obl_rr)
 
-            spine = at.ecmp_spine(src, dst, ent)
-            inj_q = jnp.where(same_tor, 2 * TS + dst, src_tor * S + spine)
-            spine_p = at.ecmp_spine(src, dst, ent_probe)
-            inj_qp = jnp.where(same_tor, 2 * TS + dst,
-                               src_tor * S + spine_p)
+            spine = at.ecmp_spine(lane_src, lane_dst, ent)
+            inj_q = jnp.where(lane_same, 2 * TS + lane_dst,
+                              lane_stor * S + spine)
+            spine_p = at.ecmp_spine(lane_src, lane_dst, ent_probe)
+            inj_qp = jnp.where(lane_same, 2 * TS + lane_dst,
+                               lane_stor * S + spine_p)
 
             # ---- 6. enqueue: fabric advances + data + probes -------------
             cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
             cand_valid = jnp.concatenate([adv_valid, sel, probe_valid])
-            now_n = jnp.full((N,), now, jnp.float32)
-            zb, ob = jnp.zeros((N,), bool), jnp.ones((N,), bool)
+            now_l = jnp.full((L,), now, jnp.float32)
+            zb, ob = jnp.zeros((L,), bool), jnp.ones((L,), bool)
             # every enqueue (fabric advance or NIC injection) arrives at
             # the next stage after 1 tick of serialization + K ticks of
             # link propagation — the per-hop departure-time lane
             cand = PktQ(
-                flow=jnp.concatenate([adv.flow, iota_n, iota_n]),
+                flow=jnp.concatenate([adv.flow, lane_flow, lane_flow]),
                 psn=jnp.concatenate([adv.psn, tx.psn, probe_tx.psn]),
-                ts=jnp.concatenate([adv.ts, now_n, now_n]),
+                ts=jnp.concatenate([adv.ts, now_l, now_l]),
                 probe=jnp.concatenate([adv.probe, zb, ob]),
                 ecn=jnp.concatenate([adv.ecn, zb, zb]),
                 ent=jnp.concatenate([adv.ent, ent, ent_probe]),
-                ready=jnp.full((2 * TS + 2 * N,), 0, jnp.int32) + t + 1 + K)
+                ready=jnp.full((2 * TS + 2 * L,), 0, jnp.int32) + t + 1 + K)
             # per-candidate wire bytes (PFC accounting is per-packet)
             cand_bytes = jnp.concatenate([
                 pop_bytes[:2 * TS],
-                wire_bytes(iota_n, tx.psn, zb),
-                wire_bytes(iota_n, probe_tx.psn, ob)])
+                wire_bytes(lane_flow, tx.psn, zb),
+                wire_bytes(lane_flow, probe_tx.psn, ob)])
             # Two-pass enqueue. Pass 1: drop decision from the occupancy
             # bound qsize + rank-among-valid (over-counts same-tick earlier
             # drops by design — the queue is at threshold then anyway).
             # Pass 2: ring positions from rank-among-ACCEPTED, so accepted
             # packets pack the ring contiguously and a drop never leaves a
             # stale gap slot.  Small candidate counts use the all-pairs
-            # mask (cheaper than two sorts); collective-scale traces use
-            # the sort-based rank (the mask is O(M^2) per tick).
-            M = 2 * TS + 2 * N
+            # mask (cheaper than the scan); at scale the sort-free chunked
+            # scatter-add ranker runs in O(M * CHUNK) flat work.
+            M = 2 * TS + 2 * L
             if M <= 256:
                 tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
                 same_q = cand_qid[:, None] == cand_qid[None, :]
@@ -970,7 +1249,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                                    axis=1).astype(jnp.int32)
             else:
                 def rank_among(flag):
-                    return _rank_in_queue(cand_qid, flag)
+                    return _rank_in_queue(cand_qid, flag, Q)
             rank_v = rank_among(cand_valid)
             occ = qsize[cand_qid] + rank_v
             dropped = cand_valid & (((~cand.probe) & (occ >= data_drop_pkts))
@@ -978,10 +1257,25 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             accept = cand_valid & (~dropped)
             rank_a = rank_among(accept)
             pos = (qhead[cand_qid] + qsize[cand_qid] + rank_a) % cap
-            flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
-            q = PktQ(*[f.reshape(-1).at[flat_idx].set(v)
-                       .reshape(Q + 1, cap)
-                       for f, v in zip(st.q, cand)])
+            if DP > 1:
+                # each pod writes only the ring rows it owns (the accept /
+                # position math above is replicated, so every pod agrees)
+                ownq = accept & (cand_qid >= qoff) & (cand_qid < qoff + QRL)
+                flat_idx = jnp.where(ownq, (cand_qid - qoff) * cap + pos,
+                                     QRL * cap)
+
+                def _wrow(f, v):
+                    flat = f.reshape(-1)
+                    pad1 = jnp.zeros((1,), f.dtype)
+                    out = jnp.concatenate([flat, pad1], 0).at[flat_idx]
+                    return out.set(v)[:QRL * cap].reshape(QRL, cap)
+
+                q = PktQ(*[_wrow(f, v) for f, v in zip(st.q, cand)])
+            else:
+                flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
+                q = PktQ(*[f.reshape(-1).at[flat_idx].set(v)
+                           .reshape(Q + 1, cap)
+                           for f, v in zip(st.q, cand)])
             added = jax.ops.segment_sum(
                 accept.astype(jnp.int32),
                 jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
@@ -1032,14 +1326,14 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 sd_flat = _scatter_add(
                     sd_flat, jnp.where(accept[TS:2 * TS], sd_i, TS),
                     cand_bytes[TS:2 * TS], TS)
-                acc_data = accept[2 * TS:2 * TS + N]
-                acc_probe = accept[2 * TS + N:]
+                acc_data = accept[2 * TS:2 * TS + L]
+                acc_probe = accept[2 * TS + L:]
                 ing_host = _scatter_add(
-                    ing_host, jnp.where(acc_data, src, NH),
-                    cand_bytes[2 * TS:2 * TS + N], NH)
+                    ing_host, jnp.where(acc_data, lane_src, NH),
+                    cand_bytes[2 * TS:2 * TS + L], NH)
                 ing_host = _scatter_add(
-                    ing_host, jnp.where(acc_probe, src, NH),
-                    cand_bytes[2 * TS + N:], NH)
+                    ing_host, jnp.where(acc_probe, lane_src, NH),
+                    cand_bytes[2 * TS + L:], NH)
                 ing_sd = sd_flat.reshape(S, T)
                 ing_up = up_flat.reshape(T, S)
 
@@ -1090,7 +1384,18 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 pauses = st.pauses
 
             # ---- 7. completion + metrics --------------------------------
-            done = jax.vmap(proto.done)(flows)
+            if DP > 1:
+                done = jax.lax.all_gather(
+                    jax.vmap(proto.done)(flows), "pod", tiled=True)
+            elif A:
+                # non-lane flows cannot change done-ness this tick (only
+                # ACK processing completes a flow, and every released
+                # not-done flow is a lane); done lanes update in place
+                done = _set_rows(
+                    done_prev, jnp.where(lane_ok, act_idx, N),
+                    jax.vmap(proto.done)(rows), N)
+            else:
+                done = jax.vmap(proto.done)(flows)
             done_tick = jnp.where(done & (st.done_tick < 0),
                                   t.astype(jnp.int32), st.done_tick)
 
@@ -1128,7 +1433,8 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 pending=pending, msg_done=msg_done,
                 msg_release_tick=msg_release_tick,
                 msg_done_tick=msg_done_tick,
-                group_done_tick=group_done_tick)
+                group_done_tick=group_done_tick,
+                act_overflow=st.act_overflow + overflow)
             return new_st, jnp.any(can_tx)
 
         def snapshot(st: FabricState) -> dict:
@@ -1159,7 +1465,11 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             to be identity simply re-skips, so parity is exact and
             progress is >= 1 tick per trip.
             """
-            timer_ev, send_ev = jax.vmap(proto.next_event)(st.flows)
+            if DP > 1:
+                timer_ev, send_ev = gath(
+                    jax.vmap(proto.next_event)(st.flows))
+            else:
+                timer_ev, send_ev = jax.vmap(proto.next_event)(st.flows)
             sendable = (st.pending <= 0)[dep.msg_of_flow]
             inf = jnp.float32(jnp.inf)
             timer_ev = jnp.where(sendable, timer_ev, inf)
@@ -1182,15 +1492,27 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             t_send = ev_tick(send_ev, 0.5)
             slots = jnp.arange(H, dtype=jnp.int32)
             due = t + 1 + (slots - t - 1) % H
-            t_pipe = jnp.min(jnp.where(jnp.any(st.pipe.valid, axis=1),
-                                       due, jnp.int32(n_ticks)))
+            if DP > 1:
+                pipe_any = jnp.any(jax.lax.all_gather(
+                    jnp.any(st.pipe.valid, axis=1), "pod"), axis=0)
+            else:
+                pipe_any = jnp.any(st.pipe.valid, axis=1)
+            t_pipe = jnp.min(jnp.where(pipe_any, due, jnp.int32(n_ticks)))
             # in-flight pipeline occupancy: the earliest ready tick of any
             # nonempty unpaused queue's head (paused queues cannot change
             # state while the fabric is otherwise idle — the gate is a
             # fixed point absent serves/enqueues, and idle requires the
             # pause-frame delay line settled)
-            hidx = st.qhead[:Q] % cap
-            rdy = st.q.ready[qrows, hidx]
+            if DP > 1:
+                qhead_pad = jnp.pad(st.qhead, (0, QR - (Q + 1)))
+                hidx_l = jax.lax.dynamic_slice_in_dim(
+                    qhead_pad, qoff, QRL) % cap
+                rdy = jax.lax.all_gather(
+                    st.q.ready[jnp.arange(QRL), hidx_l], "pod",
+                    tiled=True)[:Q]
+            else:
+                hidx = st.qhead[:Q] % cap
+                rdy = st.q.ready[qrows, hidx]
             pending_q = st.qsize[:Q] > 0
             if pfc:
                 dec_row = jnp.concatenate(
@@ -1251,8 +1573,47 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                                       lambda t, s: tick(s, t)[0], final)
         return final, ys
 
+    if DP > 1:
+        # One shard_map around the whole program: the heavy state (queue
+        # rings by switch-row block; flow/receiver/return-pipe by flow
+        # block) lives partitioned for the entire scan, the small
+        # per-queue/per-message vectors are computed replicated (identical
+        # op order on every pod — bit-exact vs the unsharded program), and
+        # the two explicit all_gather exchanges above are the only
+        # cross-pod traffic.
+        Pspec = jax.sharding.PartitionSpec
+        mesh = compat.make_mesh((DP,), ("pod",))
+        fl_s, rcv_s = jax.eval_shape(
+            proto.init,
+            jax.ShapeDtypeStruct((NL,), jnp.int32),
+            jax.ShapeDtypeStruct((NL,), jnp.float32),
+            jax.ShapeDtypeStruct((NL,), jnp.int32))
+        pipe_s = jax.eval_shape(lambda: proto.empty_msgs(H, NL))
+        rep = Pspec()
+        st_spec = FabricState(
+            flows=jax.tree.map(lambda _: Pspec("pod"), fl_s),
+            rcv=jax.tree.map(lambda _: Pspec("pod"), rcv_s),
+            q=PktQ(*([Pspec("pod")] * len(PktQ._fields))),
+            qhead=rep, qsize=rep,
+            pipe=jax.tree.map(lambda _: Pspec(None, "pod"), pipe_s),
+            obl_rr=rep, drops=rep, delivered=rep, done_tick=rep,
+            qbytes=rep, ing_host=rep, ing_sd=rep, ing_up=rep,
+            paused_nic=rep, paused_sd=rep, paused_up=rep, pfc_line=rep,
+            pauses=rep, pending=rep, msg_done=rep, msg_release_tick=rep,
+            msg_done_tick=rep, group_done_tick=rep, act_overflow=rep)
+        m_spec = ({"warp_trips": rep, "end_tick": rep}
+                  if cfg.time_warp else {})
+        sharded = compat.shard_map(
+            body, mesh=mesh, in_specs=(rep,) * 6,
+            out_specs=(st_spec, m_spec), check_vma=False)
+
+        def program(src, dst, total_pkts, tail_b, ent0, lb_code):
+            return sharded(src, dst, total_pkts, tail_b, ent0, lb_code)
+    else:
+        program = body
     program.dims = dict(T=T, S=S, NH=NH, TS=TS, Q=Q, cap=cap, H=H,
-                        K=K, D_same=D_same, D_cross=D_cross, PD=PD)
+                        K=K, D_same=D_same, D_cross=D_cross, PD=PD,
+                        shard=DP, active_cap=A)
     return program
 
 
@@ -1263,6 +1624,13 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
 #: Cumulative count of fresh program builds (cache misses).  The regression
 #: tests assert this does not grow when a same-shape scenario re-runs.
 program_builds = 0
+
+#: Cumulative count of jax TRACES of fabric program bodies (bumped by a
+#: python side effect inside the body, which only runs while tracing).  A
+#: cached program can still retrace when called with a new input shape —
+#: e.g. a new batch size — so this is the regression hook for the
+#: job-axis bucketing: bucketed job counts must reuse one trace.
+program_traces = 0
 
 _PROGRAM_CACHE: "OrderedDict[tuple, _Program]" = OrderedDict()
 _PROGRAM_CACHE_MAX = 32  # LRU bound: compiled executables are not free
@@ -1303,14 +1671,15 @@ def _program_key(topo: FatTree, n_flows: int, n_ticks: int,
 
 def _get_program(topo: FatTree, n_flows: int, n_ticks: int,
                  cfg: FabricConfig, dep: Optional[DepSpec] = None,
-                 ) -> _Program:
+                 n_real: Optional[int] = None) -> _Program:
     """Cached (program, jitted entry points) for the given static dims."""
     if dep is None:
         dep = _trivial_dep(range(n_flows))
-    key = _program_key(topo, n_flows, n_ticks, cfg, dep)
+    key = _program_key(topo, n_flows, n_ticks, cfg, dep) + (n_real,)
     prog = _PROGRAM_CACHE.get(key)
     if prog is None:
-        program = _make_program(topo, n_flows, n_ticks, cfg, dep)
+        program = _make_program(topo, n_flows, n_ticks, cfg, dep,
+                                n_real=n_real)
         prog = _Program(program=program, jit_single=jax.jit(program),
                         jit_batch=jax.jit(jax.vmap(program)),
                         dims=program.dims)
@@ -1368,11 +1737,70 @@ def _flow_arrays(flows, cfg: FabricConfig, entropy_seed=_UNSET):
     return src, dst, total_pkts, tail_bytes, ent0
 
 
+def _pad_flow_arrays(arrs, npad: int, n_hosts: int):
+    """Pad program input arrays with ``npad`` inert flows.
+
+    Pad flows have ``total_pkts == 0`` — both protocols initialise them
+    done-at-t0 and they never produce a candidate packet — so the padded
+    program is observable-identical to the unpadded one (the NIC
+    arbitration modulus uses ``n_real``, not the padded count)."""
+    src, dst, total_pkts, tail_bytes, ent0 = arrs
+    z = jnp.zeros((npad,), jnp.int32)
+    return (jnp.concatenate([src, z]),
+            jnp.concatenate([dst, jnp.full((npad,), n_hosts - 1,
+                                           jnp.int32)]),
+            jnp.concatenate([total_pkts, z]),
+            jnp.concatenate([tail_bytes, jnp.ones((npad,), jnp.float32)]),
+            jnp.concatenate([ent0, z]))
+
+
+def _pad_dep(dep: DepSpec, npad: int) -> DepSpec:
+    """Extend a DepSpec with ``npad`` pad flows, each its own dep-free
+    message in its own extra group (so no real message or group waits on,
+    or is counted with, a pad)."""
+    ar = np.arange(npad, dtype=np.int32)
+    cat = lambda a, b: jnp.asarray(
+        np.concatenate([np.asarray(a, np.int32), b.astype(np.int32)]))
+    pad_ids = tuple(f"__shard_pad{i}" for i in range(npad))
+    return DepSpec(
+        n_msgs=dep.n_msgs + npad, n_groups=dep.n_groups + npad,
+        msg_of_flow=cat(dep.msg_of_flow, dep.n_msgs + ar),
+        group_of_msg=cat(dep.group_of_msg, dep.n_groups + ar),
+        init_pending=cat(dep.init_pending, np.zeros(npad)),
+        edge_parent=dep.edge_parent, edge_child=dep.edge_child,
+        msg_ids=dep.msg_ids + pad_ids, group_ids=dep.group_ids + pad_ids)
+
+
+def _shard_pad_inputs(flows, dep: DepSpec, arrs, cfg: FabricConfig,
+                      n_hosts: int):
+    """Pad the flow axis to a multiple of ``cfg.shard`` so the per-pod
+    lane count is uniform.  Returns ``(arrs, dep_run, n_real)`` where
+    ``n_real`` is None when no padding was needed."""
+    d = int(cfg.shard)
+    npad = (-len(flows)) % d
+    if npad == 0:
+        return arrs, dep, None
+    return (_pad_flow_arrays(arrs, npad, n_hosts), _pad_dep(dep, npad),
+            len(flows))
+
+
+def _slice_fin(fin: dict, n: int, n_msgs: int, n_groups: int) -> dict:
+    """Strip shard-pad entries from a :func:`_final_host` dict so the
+    metrics layer only ever sees the caller's real flows/messages/groups."""
+    out = dict(fin)
+    for k, m in (("done_tick", n), ("delivered", n),
+                 ("msg_done_tick", n_msgs), ("msg_release_tick", n_msgs),
+                 ("group_done_tick", n_groups)):
+        out[k] = fin[k][..., :m]
+    return out
+
+
 #: Final-state arrays the host-side metrics derive from — fetched in ONE
 #: ``jax.device_get`` (the old per-scalar pulls were a device-sync storm
 #: that dominated wall-clock at collective flow counts).
 _FINAL_KEYS = ("done_tick", "msg_done_tick", "msg_release_tick",
-               "group_done_tick", "drops", "pauses", "delivered")
+               "group_done_tick", "drops", "pauses", "delivered",
+               "act_overflow")
 
 
 def _final_host(finals) -> dict:
@@ -1423,6 +1851,12 @@ def _finish_metrics(metrics: dict, fin: dict, cfg: FabricConfig,
     # decimated or off entirely)
     metrics["drops"] = int(fin["drops"])
     metrics["pauses"] = int(fin["pauses"])
+    ov = int(np.asarray(fin["act_overflow"]).reshape(-1)[-1])
+    if ov:
+        raise RuntimeError(
+            f"active_cap={dims.get('active_cap')} exceeded on {ov} tick(s) "
+            f"— sendable flows beyond the cap would silently stall; raise "
+            f"FabricConfig.active_cap (or set it to None)")
     metrics["delivered_final"] = np.asarray(fin["delivered"])
     # Collective (group) metrics only for traces that actually carry
     # trace structure (dependency edges or several groups) — the events
@@ -1457,12 +1891,20 @@ def run_fabric_trace(topo: FatTree, messages, n_ticks: int,
     """
     flows, dep = expand_messages(messages, cfg.subflows)
     _check_flows(flows, topo.n_hosts)
-    src, dst, total_pkts, tails, ent0 = _flow_arrays(flows, cfg)
-    prog = _get_program(topo, len(flows), n_ticks, cfg, dep)
+    arrs = _flow_arrays(flows, cfg)
+    dep_run, n_real = dep, None
+    if int(cfg.shard) > 1:
+        arrs, dep_run, n_real = _shard_pad_inputs(
+            flows, dep, arrs, cfg, topo.n_hosts)
+    src, dst, total_pkts, tails, ent0 = arrs
+    prog = _get_program(topo, int(src.shape[0]), n_ticks, cfg, dep_run,
+                        n_real=n_real)
     lb = jnp.int32(LB_MODES.index(cfg.lb_mode))
     final, metrics = prog.jit_single(src, dst, total_pkts, tails, ent0, lb)
-    metrics = _finish_metrics(dict(metrics), _final_host(final), cfg,
-                              prog.dims, dep)
+    fin = _final_host(final)
+    if n_real is not None:
+        fin = _slice_fin(fin, n_real, dep.n_msgs, dep.n_groups)
+    metrics = _finish_metrics(dict(metrics), fin, cfg, prog.dims, dep)
     return final, metrics
 
 
@@ -1480,6 +1922,15 @@ def run_fabric(topo: FatTree,
     return run_fabric_trace(topo, msgs, n_ticks, cfg)
 
 
+def _job_bucket(b: int) -> int:
+    """Next power-of-two bucket for the vmapped job axis (1, 2, 4, 8...).
+
+    Batch sizes inside one bucket present identical input shapes to the
+    cached program's ``jit_batch`` entry point, so they share a single
+    trace/compile."""
+    return 1 << (int(b) - 1).bit_length()
+
+
 def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
                            cfg: FabricConfig = FabricConfig(),
                            lb_modes: Optional[Sequence[str]] = None,
@@ -1492,9 +1943,20 @@ def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
     *data* to the program may vary per entry: src/dst/size patterns,
     ``lb_modes`` (per-entry STrack spray mode) and ``entropy_seeds``
     (per-entry QP-entropy seed, RoCEv2) — the config axes ``sweep()``
-    fans out.  Returns (stacked_final_state, [metrics_dict_per_entry])."""
+    fans out.  Returns (stacked_final_state, [metrics_dict_per_entry]).
+
+    The job axis is bucket-padded to the next power of two (pad entries
+    replay entry 0 and are dropped from the results), so nearby job counts
+    share ONE jit trace of the cached program instead of re-tracing per
+    batch size — the multi-tenant compile-time lever.  The returned
+    stacked final state keeps the padded leading dim."""
     if not messages_batch:
         raise ValueError("need at least one message trace")
+    if int(cfg.shard) > 1:
+        raise ValueError(
+            "cfg.shard > 1 builds one shard_map program over the device "
+            "mesh; vmapped batches are unsupported — loop "
+            "run_fabric_trace instead")
     B = len(messages_batch)
     if lb_modes is None:
         lb_modes = [cfg.lb_mode] * B
@@ -1529,12 +1991,17 @@ def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
     for (flows, _), seed in zip(expanded, entropy_seeds):
         _check_flows(flows, topo.n_hosts)
         arrs.append(_flow_arrays(flows, cfg, entropy_seed=seed))
+    lb_codes = [LB_MODES.index(m) for m in lb_modes]
+    BP = _job_bucket(B)
+    if BP > B:
+        arrs = arrs + [arrs[0]] * (BP - B)
+        lb_codes = lb_codes + [lb_codes[0]] * (BP - B)
     srcs = jnp.stack([a[0] for a in arrs])
     dsts = jnp.stack([a[1] for a in arrs])
     pkts = jnp.stack([a[2] for a in arrs])
     tails = jnp.stack([a[3] for a in arrs])
     ents = jnp.stack([a[4] for a in arrs])
-    lbs = jnp.asarray([LB_MODES.index(m) for m in lb_modes], jnp.int32)
+    lbs = jnp.asarray(lb_codes, jnp.int32)
     prog = _get_program(topo, int(srcs.shape[1]), n_ticks, cfg, dep)
     finals, stacked = prog.jit_batch(srcs, dsts, pkts, tails, ents, lbs)
     # one transfer for the finals + one for any stacked trace (the old

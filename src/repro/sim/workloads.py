@@ -306,6 +306,18 @@ class RunConfig:
     trace_every: int = 0
     trace_queues: bool = False       # fabric: per-tick queue-depth settle
     qdelay_threshold_us: float = 8.0
+    # Fabric active set: lane count for the NIC/timer stage (None = every
+    # flow is a lane).  Caps the per-tick cost at O(active_cap) instead of
+    # O(n_flows) for traces where most flows are dep-gated or already
+    # done; the program RAISES post-run if the cap was ever exceeded.
+    # Requires the no-trace path (trace_every=0, trace_queues off).
+    active_cap: Optional[int] = None
+    # Fabric sharding: partition the program over this many devices with
+    # shard_map (queues by switch block, flows by block; the inter-pod hop
+    # is an explicit all_gather exchange).  0/1 = single-device.  On CPU,
+    # force a device mesh with XLA_FLAGS=--xla_force_host_platform_
+    # device_count=N.  Bit-exact vs unsharded; requires trace_every=0.
+    shard: int = 0
     seed: int = 1234                 # events-backend rng seed
     until: float = 1e9               # events-backend horizon (us)
 
@@ -325,6 +337,16 @@ class RunConfig:
         if self.trace_every < 0:
             raise ValueError(
                 f"trace_every must be >= 0, got {self.trace_every}")
+        if self.active_cap is not None and self.active_cap <= 0:
+            raise ValueError(
+                f"active_cap must be positive, got {self.active_cap}")
+        if self.shard < 0:
+            raise ValueError(f"shard must be >= 0, got {self.shard}")
+        if (self.active_cap or self.shard > 1) and (
+                self.trace_every or self.trace_queues):
+            raise ValueError(
+                "active_cap/shard need the no-trace path "
+                "(trace_every=0, trace_queues=False)")
 
 
 def run(sc: Scenario, cfg: RunConfig = RunConfig()) -> dict:
@@ -449,7 +471,8 @@ def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
               roce_entropy_seed=cfg.roce_entropy_seed,
               ack_path=cfg.ack_path, hop_prop_us=cfg.hop_prop_us,
               pfc_delay_ticks=cfg.pfc_delay_ticks,
-              time_warp=time_warp, trace_every=trace_every)
+              time_warp=time_warp, trace_every=trace_every,
+              active_cap=cfg.active_cap, shard=cfg.shard)
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
     return FabricConfig(**kw)

@@ -1,12 +1,14 @@
 """Unit tests for the `make bench` parity gate: the BENCH_fabric.json
-schema checker must flag parity failures and malformed reports with a
-non-zero exit, not bury them in a report nobody reads."""
+schema checker must flag parity failures, malformed reports and warp
+throughput regressions with a non-zero exit, not bury them in a report
+nobody reads."""
 import copy
 import json
 
 import pytest
 
-from benchmarks.perf import check_report_file, validate_report
+from benchmarks.perf import (check_report_file, regression_problems,
+                             validate_report)
 
 GOOD = {
     "meta": {"utc": "2026-07-31T00:00:00Z", "jax": "0.4.35",
@@ -15,18 +17,42 @@ GOOD = {
         "perm1024": {
             "n_ticks": 9000, "n_hosts": 1024, "n_msgs": 1024,
             "dense": {"cold_s": 10.0, "run_s": 8.0, "compile_s": 2.0,
-                      "ticks_per_s": 1125.0},
+                      "ticks_per_s": 1125.0, "program_builds": 1},
             "warp": {"cold_s": 3.0, "run_s": 0.5, "compile_s": 2.5,
-                     "ticks_per_s": 18000.0, "warp_trips": 1234},
+                     "ticks_per_s": 18000.0, "warp_trips": 1234,
+                     "program_builds": 1},
             "speedup": 16.0, "parity_ok": True, "unfinished": 0,
-            "max_fct_us": 700.5,
+            "max_fct_us": 700.5, "program_builds": 2,
+        },
+        "perm8k": {
+            "n_ticks": 4452, "n_hosts": 8192, "n_msgs": 8192,
+            "warp": {"cold_s": 27.0, "run_s": 20.0, "compile_s": 7.0,
+                     "ticks_per_s": 216.0, "warp_trips": 113,
+                     "program_builds": 1},
+            "warp_only": True, "parity_ok": True, "unfinished": 0,
+            "max_fct_us": 11.06, "program_builds": 1,
+            "parity_spotcheck": {"n_hosts": 16, "n_msgs": 16,
+                                 "fabric_us": 9.99, "events_us": 9.88,
+                                 "ratio": 1.011, "ok": True},
         },
     },
+    "scale_axis": [
+        {"n_hosts": 64, "n_ticks": 4452, "ticks_per_s": 9000.0,
+         "compile_s": 5.0, "program_builds": 1, "warp_trips": 100},
+        {"n_hosts": 8192, "n_ticks": 4452, "ticks_per_s": 216.0,
+         "compile_s": 7.0, "program_builds": 1, "warp_trips": 113},
+    ],
 }
 
 
 def test_valid_report_passes():
     assert validate_report(GOOD) == []
+
+
+def test_scale_axis_is_optional():
+    old_style = copy.deepcopy(GOOD)
+    del old_style["scale_axis"]
+    assert validate_report(old_style) == []
 
 
 def test_parity_failure_is_flagged():
@@ -36,21 +62,61 @@ def test_parity_failure_is_flagged():
     assert any("parity_ok is FALSE" in p for p in problems)
 
 
+def test_warp_only_rows_skip_dense_requirements():
+    # perm8k has no dense leg or speedup and must still validate (above),
+    # but a NON-warp_only row without them must be flagged
+    bad = copy.deepcopy(GOOD)
+    bad["scenarios"]["perm8k"]["warp_only"] = False
+    problems = validate_report(bad)
+    assert any("missing key 'dense'" in p for p in problems)
+    assert any("missing key 'speedup'" in p for p in problems)
+
+
 def test_schema_violations_are_flagged():
     # missing scenario key
     bad = copy.deepcopy(GOOD)
     del bad["scenarios"]["perm1024"]["speedup"]
     assert any("missing key 'speedup'" in p for p in validate_report(bad))
+    # missing program_builds (the retrace-regression hook is part of the
+    # contract now)
+    bad = copy.deepcopy(GOOD)
+    del bad["scenarios"]["perm1024"]["program_builds"]
+    assert any("missing key 'program_builds'" in p
+               for p in validate_report(bad))
     # wrong type
     bad = copy.deepcopy(GOOD)
     bad["scenarios"]["perm1024"]["n_ticks"] = "9000"
     assert any("n_ticks" in p for p in validate_report(bad))
+    # malformed scale-axis point
+    bad = copy.deepcopy(GOOD)
+    del bad["scale_axis"][0]["compile_s"]
+    assert any("scale_axis[0]" in p for p in validate_report(bad))
+    bad = copy.deepcopy(GOOD)
+    bad["scale_axis"] = []
+    assert any("scale_axis" in p for p in validate_report(bad))
     # empty scenarios
     assert any("scenarios" in p
                for p in validate_report({"meta": GOOD["meta"],
                                          "scenarios": {}}))
     # not even a dict
     assert validate_report([1, 2, 3])
+
+
+def test_regression_gate():
+    new = copy.deepcopy(GOOD)
+    # identical reports: no problems
+    assert regression_problems(new, GOOD) == []
+    # 10% drop: inside the 20% tolerance
+    new["scenarios"]["perm1024"]["warp"]["ticks_per_s"] = 16200.0
+    assert regression_problems(new, GOOD) == []
+    # 50% drop: gate fires, message names the scenario
+    new["scenarios"]["perm1024"]["warp"]["ticks_per_s"] = 9000.0
+    problems = regression_problems(new, GOOD)
+    assert len(problems) == 1 and "perm1024" in problems[0]
+    # scenarios only on one side are skipped; absent baseline is a pass
+    del new["scenarios"]["perm1024"]
+    assert regression_problems(new, GOOD) == []
+    assert regression_problems(GOOD, None) == []
 
 
 def test_check_report_file_exit_codes(tmp_path):
@@ -70,20 +136,27 @@ def test_check_report_file_exit_codes(tmp_path):
     assert check_report_file(str(tmp_path / "absent.json")) == 2
 
 
-def test_bench_all_exits_nonzero_on_parity_failure(monkeypatch, tmp_path):
-    """bench_all must sys.exit(1) — not merely log — when a scenario's
-    dense/warp parity gate fails."""
+def _patch_runners(monkeypatch, parity_ok=True):
     import benchmarks.perf as perf
 
     def fake_bench_scenario(name, sc, cfg_kw, repeats=2):
         row = copy.deepcopy(GOOD["scenarios"]["perm1024"])
-        row["parity_ok"] = False
+        row["parity_ok"] = parity_ok
         return row
 
     monkeypatch.setattr(perf, "bench_scenario", fake_bench_scenario)
-    monkeypatch.setattr(
-        perf, "canonical_scenarios",
-        lambda: {"fake": (None, {})})
+    monkeypatch.setattr(perf, "canonical_scenarios",
+                        lambda: {"fake": (None, {})})
+    monkeypatch.setattr(perf, "scale_scenarios", lambda: {})
+    monkeypatch.setattr(perf, "bench_scale_axis", lambda repeats=1:
+                        copy.deepcopy(GOOD["scale_axis"]))
+    return perf
+
+
+def test_bench_all_exits_nonzero_on_parity_failure(monkeypatch, tmp_path):
+    """bench_all must sys.exit(1) — not merely log — when a scenario's
+    dense/warp parity gate fails."""
+    perf = _patch_runners(monkeypatch, parity_ok=False)
     out = tmp_path / "BENCH_fabric.json"
     with pytest.raises(SystemExit) as exc:
         perf.bench_all(str(out), repeats=1)
@@ -91,3 +164,25 @@ def test_bench_all_exits_nonzero_on_parity_failure(monkeypatch, tmp_path):
     # the report is still written for post-mortem, then the gate fires
     assert json.loads(out.read_text())["scenarios"]["fake"]["parity_ok"] \
         is False
+
+
+def test_bench_all_exits_nonzero_on_throughput_regression(monkeypatch,
+                                                          tmp_path):
+    """bench_all reads the committed report before overwriting and fails
+    on a >20% warp ticks/sec drop at any shared scenario."""
+    perf = _patch_runners(monkeypatch, parity_ok=True)
+    out = tmp_path / "BENCH_fabric.json"
+    baseline = {"scenarios": {"fake": {
+        "warp": {"ticks_per_s":
+                 GOOD["scenarios"]["perm1024"]["warp"]["ticks_per_s"]
+                 * 10.0}}}}
+    out.write_text(json.dumps(baseline))
+    with pytest.raises(SystemExit) as exc:
+        perf.bench_all(str(out), repeats=1)
+    assert exc.value.code == 1
+    # a matching baseline passes (fresh report replaces it)
+    out.write_text(json.dumps({"scenarios": {"fake": {
+        "warp": {"ticks_per_s":
+                 GOOD["scenarios"]["perm1024"]["warp"]["ticks_per_s"]}}}}))
+    report = perf.bench_all(str(out), repeats=1)
+    assert report["scenarios"]["fake"]["parity_ok"] is True

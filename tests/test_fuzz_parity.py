@@ -22,6 +22,7 @@ no hypothesis).
 import os
 import random
 
+import jax
 import pytest
 
 from repro.core.params import NetworkSpec
@@ -102,6 +103,35 @@ def check_parity(rng: random.Random) -> dict:
     if "max_collective_time" in fb:
         assert fb["max_collective_time"] == fd["max_collective_time"]
 
+    # --- active-set leg: capping the NIC lanes at n_flows-1 forces the
+    # gather/scatter lane path and must stay bit-exact.  A RuntimeError
+    # means the cap was genuinely exceeded (e.g. a deps-free trace where
+    # every flow is released at t=0) — the loud-overflow contract, which
+    # is itself the asserted behaviour in that case.
+    nf = len(sc.messages) * kw.get("subflows", 1)
+    if nf > 1:
+        try:
+            fa = run(sc, RunConfig(backend="fabric",
+                                   active_cap=nf - 1, **kw))
+        except RuntimeError as e:
+            assert "active_cap" in str(e), e
+        else:
+            assert fa["max_fct"] == fb["max_fct"], (kw, fa, fb)
+            assert fa["avg_fct"] == fb["avg_fct"]
+            assert fa["drops"] == fb["drops"]
+            assert fa["pauses"] == fb["pauses"]
+
+    # --- sharded leg (auto-on when a device mesh is visible; `make
+    # test-fast` forces a 4-device host platform for the shard-marked
+    # entry point below) ---
+    if jax.device_count() >= 2:
+        fs = run(sc, RunConfig(backend="fabric", shard=2, **kw))
+        assert fs["max_fct"] == fb["max_fct"], (kw, fs, fb)
+        assert fs["avg_fct"] == fb["avg_fct"]
+        assert fs["drops"] == fb["drops"] and fs["pauses"] == fb["pauses"]
+        if "max_collective_time" in fb:
+            assert fs["max_collective_time"] == fb["max_collective_time"]
+
     # --- both backends complete ---
     assert fb["unfinished"] == 0, (sc.messages, kw, fb)
     assert ev["unfinished"] == 0, (sc.messages, kw, ev)
@@ -123,6 +153,18 @@ def check_parity(rng: random.Random) -> dict:
 def test_fuzz_parity_seeded(seed):
     """Deterministic seeded sweep — runs on every image (no hypothesis)."""
     check_parity(random.Random(seed * 7919 + 13))
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("seed", range(min(N_EXAMPLES, 4)))
+def test_fuzz_parity_sharded(seed):
+    """Same checker under a forced multi-device mesh so the shard=2 leg
+    inside check_parity is guaranteed active (the `shard`-marked pytest
+    pass runs with XLA_FLAGS=--xla_force_host_platform_device_count=4)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (force with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    check_parity(random.Random(seed * 104729 + 7))
 
 
 try:

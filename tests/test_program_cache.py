@@ -1,0 +1,99 @@
+"""Program cache under the multi-tenant job axis (PR 6).
+
+``run_fabric_trace_batch`` bucket-pads the vmapped job axis to the next
+power of two, so nearby job counts present ONE input shape to the cached
+program's ``jit_batch`` entry point: same compiled program
+(``program_builds``) AND same jit trace (``program_traces`` — a python
+side effect inside the program body that only fires while jax traces).
+Also covers the LRU bound on the cache itself.
+"""
+import dataclasses
+
+import pytest
+
+from repro.sim import fabric as F
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import Message
+
+pytestmark = pytest.mark.tier1
+
+TOPO = full_bisection(2, 4)
+CFG = F.FabricConfig(trace_every=0)
+
+
+def _perm_msgs(shift: int):
+    """8-host permutation trace; ``shift`` varies the pattern (data, not
+    structure) so batch entries differ while sharing one DepSpec."""
+    return [Message(mid=i, src=i, dst=(i + shift) % 8, size=32768.0,
+                    deps=(), group=0) for i in range(8)]
+
+
+def test_job_bucket_rounding():
+    assert [F._job_bucket(b) for b in (1, 2, 3, 4, 5, 7, 8, 9, 64, 65)] \
+        == [1, 2, 4, 4, 8, 8, 8, 16, 64, 128]
+
+
+def test_bucketed_job_counts_share_one_trace():
+    """3 jobs and 4 jobs land in the same bucket (4): one program build,
+    one jit trace, correct per-entry results for both calls."""
+    F.clear_program_cache()
+    batch3 = [_perm_msgs(s) for s in (1, 2, 3)]
+    batch4 = [_perm_msgs(s) for s in (1, 2, 3, 5)]
+
+    b0, t0 = F.program_builds, F.program_traces
+    _, per3 = F.run_fabric_trace_batch(TOPO, batch3, 4000, CFG)
+    builds_after_first = F.program_builds - b0
+    traces_after_first = F.program_traces - t0
+    assert builds_after_first == 1
+    assert len(per3) == 3
+
+    _, per4 = F.run_fabric_trace_batch(TOPO, batch4, 4000, CFG)
+    assert F.program_builds - b0 == builds_after_first, \
+        "same static shape must hit the program cache"
+    assert F.program_traces - t0 == traces_after_first, \
+        "job counts inside one bucket must reuse the jit trace"
+    assert len(per4) == 4
+
+    # pad entries replay entry 0 and are sliced off; the real entries
+    # must agree with their unbatched runs
+    _, solo = F.run_fabric_trace(TOPO, _perm_msgs(3), 4000, CFG)
+    assert per3[2]["fct_us"] == per4[2]["fct_us"] == solo["fct_us"]
+
+
+def test_bucket_boundary_retraces_once():
+    """Crossing a bucket boundary (4 -> 5 jobs => bucket 8) is a new
+    input shape: same cached program, exactly one extra jit trace."""
+    F.clear_program_cache()
+    b0 = F.program_builds
+    F.run_fabric_trace_batch(TOPO, [_perm_msgs(s) for s in (1, 2, 3, 5)],
+                             4000, CFG)
+    t_mid = F.program_traces
+    F.run_fabric_trace_batch(TOPO, [_perm_msgs(s) for s in (1, 2, 3, 5, 6)],
+                             4000, CFG)
+    assert F.program_builds - b0 == 1, "program cache key is shape-blind"
+    assert F.program_traces - t_mid == 1
+
+
+def test_lru_eviction(monkeypatch):
+    """Touching more distinct shapes than _PROGRAM_CACHE_MAX evicts the
+    oldest: re-running it rebuilds."""
+    F.clear_program_cache()
+    monkeypatch.setattr(F, "_PROGRAM_CACHE_MAX", 2)
+    ticks = [3000, 3100, 3200]  # n_ticks is a static dim -> distinct keys
+    for n in ticks:
+        F.run_fabric_trace(TOPO, _perm_msgs(1), n, CFG)
+    assert len(F._PROGRAM_CACHE) == 2
+    before = F.program_builds
+    F.run_fabric_trace(TOPO, _perm_msgs(1), ticks[-1], CFG)   # still cached
+    assert F.program_builds == before
+    F.run_fabric_trace(TOPO, _perm_msgs(1), ticks[0], CFG)    # evicted
+    assert F.program_builds == before + 1
+    F.clear_program_cache()
+
+
+def test_n_real_is_part_of_cache_key():
+    """Shard padding threads the real flow count into the program (NIC
+    arbitration modulus); two runs differing only in n_real must not
+    share a cached program."""
+    k1 = F._program_key(TOPO, 8, 4000, CFG, F._trivial_dep(range(8)))
+    assert k1 + (None,) != k1 + (6,)

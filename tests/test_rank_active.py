@@ -1,0 +1,175 @@
+"""Sort-free ranking + active-set formulation (PR 6 hot-path rewrite).
+
+``_rank_in_queue`` dropped its per-tick stable argsort for a chunked
+scatter-add/segmented-count scan; the contract ALSO changed from
+"meaningless values at non-flagged entries" to an explicit ``-1`` fill.
+The property tests here pin both the new implementation and the retained
+argsort reference against a straightforward O(M^2) lower-triangle oracle
+across the edge cases that bit-exactness of the enqueue stage rides on
+(empty, single, none/all flagged, duplicate qids, chunk-boundary sizes).
+
+The active-set tests assert the observable-equivalence argument the
+formulation rests on: excluding done or dep-gated flows from the NIC
+lanes is BIT-exact because such flows are transition-silent, and the
+program detects (and refuses to silently drop) a cap overflow.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.sim import fabric as F
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import Message, RunConfig
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# _rank_in_queue property tests
+# ---------------------------------------------------------------------------
+
+def _rank_reference(qid: np.ndarray, flag: np.ndarray) -> np.ndarray:
+    """O(M^2) lower-triangle oracle: rank of entry i = number of flagged
+    same-queue entries strictly before it; -1 when not flagged."""
+    m = qid.shape[0]
+    ref = np.full(m, -1, np.int32)
+    for i in range(m):
+        if flag[i]:
+            ref[i] = int(np.sum(flag[:i] & (qid[:i] == qid[i])))
+    return ref
+
+
+def _case(qid, flag, n_queues):
+    qid = np.asarray(qid, np.int32)
+    flag = np.asarray(flag, bool)
+    ref = _rank_reference(qid, flag)
+    new = np.asarray(F._rank_in_queue(jnp.asarray(qid), jnp.asarray(flag),
+                                      n_queues))
+    old = np.asarray(F._rank_in_queue_argsort(jnp.asarray(qid),
+                                              jnp.asarray(flag)))
+    assert np.array_equal(new, ref), (qid, flag, new, ref)
+    assert np.array_equal(old, ref), (qid, flag, old, ref)
+
+
+def test_rank_empty():
+    _case([], [], 4)
+
+
+def test_rank_single():
+    _case([2], [True], 4)
+    _case([2], [False], 4)
+
+
+def test_rank_none_flagged():
+    _case([0, 1, 2, 1], [False] * 4, 4)
+
+
+def test_rank_all_flagged_duplicate_qids():
+    _case([3, 3, 3, 3, 3], [True] * 5, 4)
+
+
+def test_rank_mixed_duplicates():
+    _case([0, 1, 0, 1, 0, 2], [True, False, True, True, True, True], 3)
+
+
+@pytest.mark.parametrize("m", [1, 63, 64, 65, 200, 255, 256, 257,
+                               300, 511, 512, 513])
+def test_rank_chunk_boundaries(m):
+    """Sizes straddling the _RANK_CHUNK block size (256): partial single
+    blocks, exact multiples, and one-past boundaries where the cross-block
+    cumsum base first kicks in."""
+    rng = np.random.default_rng(m)
+    n_queues = 17
+    qid = rng.integers(0, n_queues, size=m).astype(np.int32)
+    flag = rng.random(m) < 0.6
+    _case(qid, flag, n_queues)
+
+
+def test_rank_randomized():
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        n_queues = int(rng.integers(1, 40))
+        # one shape -> one jit trace; density varies per draw
+        qid = rng.integers(0, n_queues, size=192).astype(np.int32)
+        flag = rng.random(192) < rng.random()
+        _case(qid, flag, n_queues)
+
+
+# ---------------------------------------------------------------------------
+# active-set formulation
+# ---------------------------------------------------------------------------
+
+TOPO = full_bisection(2, 4)
+
+
+def _two_stage_trace():
+    """4 then 4 dependency-chained messages: at most 5 flows are ever
+    released & not-done at once, so active_cap=5 < N=8 genuinely takes
+    the capped lane path."""
+    msgs = [Message(mid=i, src=i, dst=(i + 4) % 8,
+                    size=float(12288 + 4096 * i), deps=(), group=0)
+            for i in range(4)]
+    msgs += [Message(mid=4 + i, src=(i + 4) % 8, dst=i,
+                     size=float(20480 + 4096 * i), deps=(i,), group=1)
+             for i in range(4)]
+    return msgs
+
+
+def _run(msgs, n_ticks, **kw):
+    kw.setdefault("trace_every", 0)
+    cfg = F.FabricConfig(**kw)
+    _, m = F.run_fabric_trace(TOPO, msgs, n_ticks, cfg)
+    return m
+
+
+@pytest.mark.parametrize("proto_kw", [
+    dict(),                                    # strack adaptive
+    dict(protocol="rocev2", pfc=True),         # lossless roce
+    dict(time_warp=True),                      # event-horizon scan
+])
+def test_active_cap_bit_exact(proto_kw):
+    msgs = _two_stage_trace()
+    base = _run(msgs, 9000, **proto_kw)
+    capped = _run(msgs, 9000, active_cap=5, **proto_kw)
+    assert base["fct_us"] == capped["fct_us"]
+    assert base["drops"] == capped["drops"]
+    assert base["pauses"] == capped["pauses"]
+    assert base["group_done_us"] == capped["group_done_us"]
+
+
+def test_active_cap_overflow_raises():
+    """A cap below the peak released&not-done count must raise, not
+    silently stall the flows beyond the cap."""
+    msgs = _two_stage_trace()
+    with pytest.raises(RuntimeError, match="active_cap"):
+        _run(msgs, 9000, active_cap=2)
+
+
+def test_active_cap_at_or_above_n_disables():
+    """cap >= n_flows degenerates to the plain every-flow-is-a-lane path
+    (A is normalized to 0) — results identical, no overflow possible."""
+    msgs = _two_stage_trace()
+    base = _run(msgs, 9000)
+    wide = _run(msgs, 9000, active_cap=64)
+    assert base["fct_us"] == wide["fct_us"]
+
+
+def test_active_cap_requires_no_trace():
+    with pytest.raises(ValueError, match="trace"):
+        _run(_two_stage_trace(), 9000, active_cap=5, trace_every=8,
+             time_warp=False)
+
+
+def test_runconfig_validates_active_cap():
+    with pytest.raises(ValueError, match="active_cap"):
+        RunConfig(active_cap=0)
+    with pytest.raises(ValueError, match="no-trace"):
+        RunConfig(active_cap=4, trace_every=16)
+
+
+def test_act_overflow_is_final_key():
+    """The overflow counter rides the single device_get like every other
+    final-carry scalar (no extra sync)."""
+    assert "act_overflow" in F._FINAL_KEYS

@@ -1,0 +1,129 @@
+"""shard_map-partitioned fabric vs the single-device program (PR 6).
+
+Every test asserts BIT-exactness: the sharded program keeps all
+small-vector state replicated with identical op order and exchanges only
+the popped ring heads + NIC offers across pods, so FCTs, drops, pauses
+and warp trip counts must match the unsharded run exactly.
+
+Runs under a forced multi-device host platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``, wired into
+``make test-fast``); skips — loudly, via the ``shard`` marker — when the
+runtime has fewer than 2 devices.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.sim import fabric as F
+from repro.sim.topology import full_bisection
+from repro.sim.workloads import Message, RunConfig, Scenario, run
+from repro.core.params import NetworkSpec
+
+pytestmark = [pytest.mark.tier1, pytest.mark.shard]
+
+NDEV = jax.device_count()
+needs_devices = pytest.mark.skipif(
+    NDEV < 2, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+TOPO = full_bisection(2, 4)
+D = 4 if NDEV >= 4 else 2
+
+
+def _pair(msgs, n_ticks, **kw):
+    cfg = F.FabricConfig(trace_every=0, **kw)
+    _, base = F.run_fabric_trace(TOPO, msgs, n_ticks, cfg)
+    _, shrd = F.run_fabric_trace(TOPO, msgs, n_ticks,
+                                 dataclasses.replace(cfg, shard=D))
+    return base, shrd
+
+
+def _assert_exact(base, shrd):
+    assert base["fct_us"] == shrd["fct_us"]
+    assert base["drops"] == shrd["drops"]
+    assert base["pauses"] == shrd["pauses"]
+    if "group_done_us" in base:
+        assert base["group_done_us"] == shrd["group_done_us"]
+
+
+@needs_devices
+def test_shard_strack_permutation():
+    msgs = [Message(mid=i, src=i, dst=(i + 3) % 8, size=65536.0,
+                    deps=(), group=0) for i in range(8)]
+    _assert_exact(*_pair(msgs, 6000))
+
+
+@needs_devices
+def test_shard_strack_padded_flow_axis():
+    """6 flows over 4 pods: the flow axis pads to 8 with inert zero-packet
+    flows; results must match the unpadded single-device run exactly
+    (arbitration modulus uses the real flow count)."""
+    msgs = [Message(mid=i, src=i, dst=(i + 3) % 8,
+                    size=float(8192 + 4096 * i), deps=(), group=0)
+            for i in range(6)]
+    base, shrd = _pair(msgs, 6000)
+    _assert_exact(base, shrd)
+    assert len(shrd["fct_us"]) == 6     # pads sliced out of every metric
+
+
+@needs_devices
+def test_shard_roce_pfc_incast():
+    msgs = [Message(mid=i, src=i, dst=7, size=150000.0, deps=(), group=0)
+            for i in range(6)]
+    base, shrd = _pair(msgs, 15000, protocol="rocev2", pfc=True)
+    _assert_exact(base, shrd)
+
+
+@needs_devices
+def test_shard_lossy_roce_striped():
+    msgs = [Message(mid=i, src=i, dst=(i + 5) % 8, size=100000.0,
+                    deps=(), group=0) for i in range(6)]
+    base, shrd = _pair(msgs, 12000, protocol="rocev2", pfc=False,
+                       subflows=4)
+    _assert_exact(base, shrd)
+
+
+@needs_devices
+def test_shard_chained_trace_warp():
+    msgs = [Message(mid=i, src=i, dst=(i + 4) % 8, size=24576.0,
+                    deps=(), group=0) for i in range(4)]
+    msgs += [Message(mid=4 + i, src=(i + 4) % 8, dst=i, size=16384.0,
+                     deps=(i,), group=1) for i in range(4)]
+    base, shrd = _pair(msgs, 8000, time_warp=True)
+    _assert_exact(base, shrd)
+    assert base["warp_trips"] == shrd["warp_trips"]
+
+
+@needs_devices
+def test_shard_through_runconfig():
+    """The workloads.run front door threads RunConfig.shard through."""
+    net = NetworkSpec(link_gbps=400.0)
+    msgs = tuple(Message(mid=i, src=i, dst=(i + 1) % 8, size=32768.0,
+                         deps=(), group=0) for i in range(8))
+    sc = Scenario("shard-front-door", TOPO, net, msgs)
+    a = run(sc, RunConfig(backend="fabric"))
+    b = run(sc, RunConfig(backend="fabric", shard=D))
+    assert a["max_fct"] == b["max_fct"] and a["avg_fct"] == b["avg_fct"]
+
+
+def test_shard_requires_devices_or_raises():
+    """Asking for more pods than devices is a loud ValueError with the
+    XLA_FLAGS recipe in the message, never a silent fallback."""
+    msgs = [Message(mid=i, src=i, dst=(i + 1) % 8, size=8192.0,
+                    deps=(), group=0) for i in range(8)]
+    cfg = F.FabricConfig(trace_every=0, shard=2 * max(NDEV, 1))
+    with pytest.raises(ValueError, match="device"):
+        F.run_fabric_trace(TOPO, msgs, 2000, cfg)
+
+
+def test_shard_rejects_trace_and_batch():
+    msgs = [Message(mid=i, src=i, dst=(i + 1) % 8, size=8192.0,
+                    deps=(), group=0) for i in range(8)]
+    cfg = F.FabricConfig(trace_every=4, time_warp=False, shard=2)
+    with pytest.raises(ValueError, match="trace"):
+        F.run_fabric_trace(TOPO, msgs, 2000, cfg)
+    with pytest.raises(ValueError, match="batch"):
+        F.run_fabric_trace_batch(
+            TOPO, [msgs, msgs], 2000,
+            F.FabricConfig(trace_every=0, shard=2))
