@@ -3,7 +3,7 @@ PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast fabric-smoke collective-smoke bench-smoke \
-	scale-smoke smoke bench benchmarks update-golden
+	scale-smoke smoke bench benchmarks update-golden profile
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
@@ -66,6 +66,14 @@ scale-smoke:
 # regression_problems; re-check with --check).
 bench: scale-smoke
 	$(PP) $(PY) -m benchmarks.perf --out BENCH_fabric.json
+
+# Trace one warm warp scenario (perm1024) under jax.profiler.trace into
+# traces/fabric: compile happens outside the trace, so the profile shows
+# the scan body the Pallas kernels target.  View with
+# `tensorboard --logdir traces/fabric`.  Override the scenario or the
+# kernel backend via benchmarks.perf --profile* / --kernel-backends.
+profile:
+	$(PP) $(PY) -m benchmarks.perf --profile traces/fabric
 
 # Full paper-figure benchmark sweep (slow).
 benchmarks:

@@ -19,7 +19,14 @@ and writes the machine-readable ``BENCH_fabric.json``:
 
 plus a **scale axis** (``n_hosts`` vs warp ticks/sec, compile seconds and
 ``program_builds``) over 64 / 256 / 1024 / 8192-host permutations, so the
-XLA compile-time ceiling is tracked across PRs instead of rediscovered.
+XLA compile-time ceiling is tracked across PRs instead of rediscovered,
+and a **kernel-backend axis**: every scenario's warp run is repeated per
+``FabricConfig.kernel_backend`` (``jnp`` inline stages vs the Pallas
+hot-path kernels; ``pallas_interpret`` on CPU hosts, compiled ``pallas``
+on TPU/GPU) under a bit-exact parity gate, and the scale axis carries a
+``kernel_backend`` tag per point — so BENCH_fabric.json tracks the
+kernel trajectory across PRs.  Select backends explicitly with
+``--kernel-backends jnp,pallas_interpret``.
 
 Dense+warp scenarios assert dense/warp parity (identical FCTs, drops,
 pauses) before reporting; warp-only scenarios run the same workload
@@ -31,6 +38,7 @@ semantics drift.
     PYTHONPATH=src python -m benchmarks.perf --smoke   # CI floor check
     PYTHONPATH=src python -m benchmarks.perf --scale   # 512-host floor
     PYTHONPATH=src python -m benchmarks.perf --check BENCH_fabric.json
+    PYTHONPATH=src python -m benchmarks.perf --profile traces/fabric
 
 ``make bench`` fails loudly (non-zero exit) when any scenario's
 ``parity_ok`` is false, when the written JSON does not match the schema
@@ -83,6 +91,23 @@ SPOT_BAND = (0.7, 1.4)
 #: ~3.5x vs the 114,688-flow dense formulation.  The program raises if
 #: the cap is ever exceeded, so a too-small cap fails loudly mid-bench.
 ALLREDUCE8K_ACTIVE_CAP = 32_768
+
+#: Summary keys the kernel-backend parity gate compares BIT-exactly (the
+#: Pallas kernels run the same stage cores as the jnp path, so any
+#: difference at all is a bug, not noise).
+_KERNEL_PARITY_KEYS = ("max_fct", "avg_fct", "drops", "pauses",
+                       "unfinished", "max_collective_time",
+                       "finished_groups")
+
+
+def default_kernel_backends() -> list:
+    """Kernel backends the bench sweeps by default: the inline jnp path
+    plus interpret-mode Pallas on CPU hosts (same XLA ops underneath, so
+    it is cheap and bit-exact-checkable anywhere) or compiled Pallas on
+    TPU/GPU."""
+    if jax.default_backend() == "cpu":
+        return ["jnp", "pallas_interpret"]
+    return ["jnp", "pallas"]
 
 
 def canonical_scenarios() -> dict:
@@ -175,8 +200,34 @@ def _parity(dense: dict, warp: dict) -> bool:
                for k in keys)
 
 
+def _kernel_parity_exact(a: dict, b: dict) -> bool:
+    return all(a.get(k) == b.get(k) or
+               (a.get(k) != a.get(k) and b.get(k) != b.get(k))  # both NaN
+               for k in _KERNEL_PARITY_KEYS)
+
+
+def _bench_kernel_rows(name: str, sc: Scenario, n_ticks: int,
+                       repeats: int, cfg_kw: dict, base_res: dict,
+                       kernel_backends: list) -> dict:
+    """Warp re-runs of one scenario per non-jnp kernel backend, each
+    gated BIT-exact against the jnp warp summary (same stage cores, so
+    exactness — not a band — is the contract)."""
+    rows = {}
+    for kb in kernel_backends:
+        if kb == "jnp":
+            continue
+        krow, kres = _time_mode(sc, n_ticks, True, repeats,
+                                kernel_backend=kb, **cfg_kw)
+        krow["parity_exact"] = _kernel_parity_exact(base_res, kres)
+        rows[kb] = krow
+        print(f"bench[{name}] kernels[{kb}]: warp {krow['run_s']:.3f}s "
+              f"({krow['ticks_per_s']:,.0f} t/s), parity="
+              f"{'exact' if krow['parity_exact'] else 'FAIL'}")
+    return rows
+
+
 def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
-                   repeats: int = 2) -> dict:
+                   repeats: int = 2, kernel_backends: list = ()) -> dict:
     n_ticks = sc.default_ticks()
     b0 = fabric.program_builds
     dense_row, dense_res = _time_mode(sc, n_ticks, False, repeats, **cfg_kw)
@@ -191,13 +242,17 @@ def bench_scenario(name: str, sc: Scenario, cfg_kw: dict,
         "parity_ok": _parity(dense_res, warp_res),
         "unfinished": dense_res["unfinished"],
         "max_fct_us": dense_res["max_fct"],
-        "program_builds": fabric.program_builds - b0,
+        "program_builds_total": fabric.program_builds - b0,
     }
     print(f"bench[{name}]: {n_ticks} ticks x {row['n_msgs']} msgs on "
           f"{row['n_hosts']} hosts | dense {dense_row['run_s']:.3f}s "
           f"({dense_row['ticks_per_s']:,.0f} t/s) | warp "
           f"{warp_row['run_s']:.3f}s ({warp_row['warp_trips']} trips) | "
           f"{row['speedup']}x, parity={'ok' if row['parity_ok'] else 'FAIL'}")
+    kernels = _bench_kernel_rows(name, sc, n_ticks, repeats, cfg_kw,
+                                 warp_res, kernel_backends)
+    if kernels:
+        row["kernels"] = kernels
     return row
 
 
@@ -223,7 +278,8 @@ def _oracle_spotcheck(sc: Scenario, cfg_kw: dict) -> dict:
 
 def bench_scenario_warp_only(name: str, sc: Scenario, cfg_kw: dict,
                              spot_sc: Scenario, spot_kw: dict,
-                             repeats: int = 1) -> dict:
+                             repeats: int = 1,
+                             kernel_backends: list = ()) -> dict:
     """8K-scale scenario: warp scan only (a dense 8K run is pure heat),
     with the oracle spot-check providing the parity gate."""
     spot = _oracle_spotcheck(spot_sc, spot_kw)
@@ -240,7 +296,7 @@ def bench_scenario_warp_only(name: str, sc: Scenario, cfg_kw: dict,
         "parity_spotcheck": spot,
         "unfinished": warp_res["unfinished"],
         "max_fct_us": warp_res["max_fct"],
-        "program_builds": fabric.program_builds - b0,
+        "program_builds_total": fabric.program_builds - b0,
     }
     if "active_cap" in cfg_kw:
         row["active_cap"] = cfg_kw["active_cap"]
@@ -250,28 +306,37 @@ def bench_scenario_warp_only(name: str, sc: Scenario, cfg_kw: dict,
           f"trips, compile {warp_row['compile_s']:.1f}s) | spot-check "
           f"ratio {spot['ratio']} on {spot['n_hosts']} hosts, "
           f"parity={'ok' if row['parity_ok'] else 'FAIL'}")
+    kernels = _bench_kernel_rows(name, sc, n_ticks, repeats, cfg_kw,
+                                 warp_res, kernel_backends)
+    if kernels:
+        row["kernels"] = kernels
     return row
 
 
-def bench_scale_axis(repeats: int = 1) -> list:
-    """Warp permutation runs across host counts with a cleared program
-    cache per point, so ``compile_s`` and ``program_builds`` measure the
-    real per-scale build cost (the compile-time ceiling ROADMAP names)."""
+def bench_scale_axis(repeats: int = 1, kernel_backends: list = ()) -> list:
+    """Warp permutation runs across host counts x kernel backends with a
+    cleared program cache per point, so ``compile_s`` and
+    ``program_builds`` measure the real per-scale build cost (the
+    compile-time ceiling ROADMAP names) per execution substrate."""
     axis = []
+    backends = list(kernel_backends) or ["jnp"]
     for n_hosts, (t, h) in sorted(SCALE_AXIS_DIMS.items()):
-        fabric.clear_program_cache()
         sc = permutation_scenario(full_bisection(t, h), 64 * 2 ** 10,
                                   net=NetworkSpec(link_gbps=400.0), seed=0)
         n_ticks = sc.default_ticks()
-        row, _ = _time_mode(sc, n_ticks, True, repeats)
-        axis.append({"n_hosts": n_hosts, "n_ticks": n_ticks,
-                     "ticks_per_s": row["ticks_per_s"],
-                     "compile_s": row["compile_s"],
-                     "program_builds": row["program_builds"],
-                     "warp_trips": row["warp_trips"]})
-        print(f"scale[{n_hosts:>5} hosts]: {row['ticks_per_s']:>9,.1f} t/s "
-              f"warm, compile {row['compile_s']:.2f}s, "
-              f"{row['program_builds']} builds")
+        for kb in backends:
+            fabric.clear_program_cache()
+            row, _ = _time_mode(sc, n_ticks, True, repeats,
+                                kernel_backend=kb)
+            axis.append({"n_hosts": n_hosts, "n_ticks": n_ticks,
+                         "kernel_backend": kb,
+                         "ticks_per_s": row["ticks_per_s"],
+                         "compile_s": row["compile_s"],
+                         "program_builds": row["program_builds"],
+                         "warp_trips": row["warp_trips"]})
+            print(f"scale[{n_hosts:>5} hosts, {kb}]: "
+                  f"{row['ticks_per_s']:>9,.1f} t/s warm, compile "
+                  f"{row['compile_s']:.2f}s, {row['program_builds']} builds")
     return axis
 
 
@@ -280,15 +345,26 @@ def bench_scale_axis(repeats: int = 1) -> list:
 #: truncated write, schema drift) fails the gate as loudly as a parity
 #: failure does.
 _SCHEMA_META = {"utc": str, "jax": str, "backend": str, "platform": str}
+#: ``program_builds_total`` (scenario level) is the whole-scenario build
+#: count across all modes — a diagnostic.  The retrace-regression hook
+#: reads the per-mode ``program_builds`` inside ``warp``/``dense``
+#: (``_SCHEMA_MODE``); the throughput regression gate reads
+#: ``warp.ticks_per_s``.  Earlier reports spelled the scenario-level
+#: field ``program_builds`` too, shadowing the per-mode one — the rename
+#: keeps the two hooks unambiguous.
 _SCHEMA_SCENARIO = {"n_ticks": int, "n_hosts": int, "n_msgs": int,
                     "warp": dict, "parity_ok": bool, "unfinished": int,
-                    "max_fct_us": (int, float), "program_builds": int}
+                    "max_fct_us": (int, float), "program_builds_total": int}
 #: dense+speedup are required unless the row is flagged ``warp_only``.
 _SCHEMA_SCENARIO_DENSE = {"dense": dict, "speedup": (int, float)}
 _SCHEMA_MODE = {"cold_s": (int, float), "run_s": (int, float),
                 "compile_s": (int, float), "ticks_per_s": (int, float),
                 "program_builds": int}
+#: per-backend warp re-run under ``scenarios.<name>.kernels.<backend>``;
+#: ``parity_exact`` is the bit-exactness gate vs the jnp warp summary.
+_SCHEMA_KERNEL_ROW = dict(_SCHEMA_MODE, parity_exact=bool)
 _SCHEMA_SCALE_POINT = {"n_hosts": int, "n_ticks": int,
+                       "kernel_backend": str,
                        "ticks_per_s": (int, float),
                        "compile_s": (int, float), "program_builds": int}
 
@@ -297,9 +373,22 @@ def validate_report(report: dict) -> list:
     """Schema-check one BENCH_fabric.json report dict.
 
     Returns a list of human-readable problems (empty = valid): missing or
-    mis-typed keys at the meta / scenario / mode / scale-axis levels, and
-    any scenario whose ``parity_ok`` gate is false — the caller turns a
-    non-empty list into a non-zero exit.
+    mis-typed keys at the meta / scenario / mode / kernels / scale-axis
+    levels, any scenario whose ``parity_ok`` gate is false, and any
+    kernel-backend row whose ``parity_exact`` gate is false — the caller
+    turns a non-empty list into a non-zero exit.
+
+    Which field feeds which gate (the point of the
+    ``program_builds_total`` rename):
+
+      * the **throughput regression gate** (``regression_problems``)
+        reads ``scenarios.<name>.warp.ticks_per_s`` — nothing else;
+      * the **retrace-regression hook** reads the per-mode
+        ``program_builds`` inside ``warp`` / ``dense`` /
+        ``kernels.<backend>`` rows (a warm re-run that rebuilds its
+        program is a cache bug);
+      * scenario-level ``program_builds_total`` is the whole-scenario
+        build count across every mode — a diagnostic, read by no gate.
     """
     problems = []
 
@@ -334,6 +423,24 @@ def validate_report(report: dict) -> list:
         for mode in modes:
             if isinstance(row.get(mode), dict):
                 chk(row[mode], _SCHEMA_MODE, f"scenarios.{name}.{mode}")
+        # kernels axis is optional (jnp-only sweeps), but when present
+        # every backend row must be well-formed and bit-exact
+        if "kernels" in row:
+            if not isinstance(row["kernels"], dict) or not row["kernels"]:
+                problems.append(f"scenarios.{name}.kernels: expected a "
+                                f"non-empty object")
+            else:
+                for kb, krow in row["kernels"].items():
+                    where = f"scenarios.{name}.kernels.{kb}"
+                    if not chk(krow, _SCHEMA_KERNEL_ROW, where):
+                        continue
+                    if krow.get("parity_exact") is False:
+                        problems.append(
+                            f"{where}: parity_exact is FALSE — the "
+                            f"{kb} kernel backend diverged from the "
+                            f"inline jnp stages; the kernels must be "
+                            f"bit-exact, so this is a kernel bug, not "
+                            f"noise")
         if row.get("parity_ok") is False:
             problems.append(
                 f"scenarios.{name}: parity_ok is FALSE — the fabric "
@@ -355,8 +462,11 @@ def validate_report(report: dict) -> list:
 def regression_problems(new: dict, baseline: dict,
                         tol: float = REGRESSION_TOL) -> list:
     """Compare warm warp ticks/sec per scenario against the committed
-    report; >tol fractional drops are gate failures.  Scenarios missing
-    on either side are skipped (new scenarios land without a baseline)."""
+    report; >tol fractional drops are gate failures.  The gate reads
+    exactly ``scenarios.<name>.warp.ticks_per_s`` on both sides — never
+    the kernels sub-rows, the dense row, or any ``program_builds*``
+    field.  Scenarios missing on either side are skipped (new scenarios
+    land without a baseline)."""
     problems = []
     old_sc = (baseline or {}).get("scenarios") or {}
     new_sc = (new or {}).get("scenarios") or {}
@@ -394,7 +504,9 @@ def check_report_file(path: str) -> int:
 
 
 def bench_all(out_path: str = "BENCH_fabric.json",
-              repeats: int = 2) -> dict:
+              repeats: int = 2, kernel_backends: list = None) -> dict:
+    if kernel_backends is None:
+        kernel_backends = default_kernel_backends()
     # the committed report (if any) is the regression baseline — read it
     # BEFORE overwriting
     try:
@@ -411,24 +523,33 @@ def bench_all(out_path: str = "BENCH_fabric.json",
         },
         "scenarios": {},
     }
-    # scale axis first: each point measures a cold build (cache cleared),
-    # and the 1024-host program it leaves cached is exactly perm1024's
-    report["scale_axis"] = bench_scale_axis(repeats=max(1, repeats - 1))
+    # scale axis first: each point measures a cold build (cache cleared
+    # per host-count x backend point)
+    report["scale_axis"] = bench_scale_axis(repeats=max(1, repeats - 1),
+                                            kernel_backends=kernel_backends)
     for name, (sc, cfg_kw) in canonical_scenarios().items():
-        report["scenarios"][name] = bench_scenario(name, sc, cfg_kw,
-                                                   repeats=repeats)
+        report["scenarios"][name] = bench_scenario(
+            name, sc, cfg_kw, repeats=repeats,
+            kernel_backends=kernel_backends)
     for name, (sc, cfg_kw, spot_sc, spot_kw) in scale_scenarios().items():
         row = bench_scenario_warp_only(name, sc, cfg_kw, spot_sc, spot_kw,
-                                       repeats=1)
+                                       repeats=1,
+                                       kernel_backends=kernel_backends)
         report["scenarios"][name] = row
         if name == "perm8k":
-            w = row["warp"]
-            report["scale_axis"].append({
-                "n_hosts": row["n_hosts"], "n_ticks": row["n_ticks"],
-                "ticks_per_s": w["ticks_per_s"],
-                "compile_s": w["compile_s"],
-                "program_builds": w["program_builds"],
-                "warp_trips": w["warp_trips"]})
+            # the 8192-host scale points reuse the perm8k runs (jnp warp
+            # row + the per-backend kernels rows) instead of re-timing
+            kern = row.get("kernels", {})
+            for kb, w in [("jnp", row["warp"])] + sorted(kern.items()):
+                if kb != "jnp" and kb not in kernel_backends:
+                    continue
+                report["scale_axis"].append({
+                    "n_hosts": row["n_hosts"], "n_ticks": row["n_ticks"],
+                    "kernel_backend": kb,
+                    "ticks_per_s": w["ticks_per_s"],
+                    "compile_s": w["compile_s"],
+                    "program_builds": w["program_builds"],
+                    "warp_trips": w["warp_trips"]})
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}")
@@ -480,6 +601,30 @@ def scale_smoke(floor: float = SCALE_FLOOR_TICKS_PER_S) -> None:
           f"{warp_row['warp_trips']} trips")
 
 
+def profile_scenario(trace_dir: str, name: str = "perm1024",
+                     kernel_backend: str = "jnp") -> None:
+    """One warp scenario under ``jax.profiler.trace`` (``make profile``).
+
+    Compiles OUTSIDE the trace (a cold run first), then traces warm
+    warp run(s), so the trace shows the scan body — the thing the Pallas
+    kernels target — not XLA compilation.  View with
+    ``tensorboard --logdir <trace_dir>`` (or ``xprof``)."""
+    sc, cfg_kw = canonical_scenarios()[name]
+    n_ticks = sc.default_ticks()
+    cfg = RunConfig(backend="fabric", time_warp=True, trace_every=0,
+                    n_ticks=n_ticks, kernel_backend=kernel_backend,
+                    **cfg_kw)
+    run(sc, cfg)                           # compile outside the trace
+    with jax.profiler.trace(trace_dir):
+        t0 = time.perf_counter()
+        res = run(sc, cfg)
+        run_s = time.perf_counter() - t0
+    print(f"profile[{name}, {kernel_backend}]: {n_ticks} ticks in "
+          f"{run_s:.3f}s warm ({n_ticks / run_s:,.0f} t/s, "
+          f"{res.get('warp_trips')} trips) -> {trace_dir}")
+    print(f"view with: tensorboard --logdir {trace_dir}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="BENCH_fabric.json")
@@ -492,9 +637,27 @@ def main() -> None:
     ap.add_argument("--check", metavar="PATH",
                     help="validate an existing BENCH_fabric.json (schema "
                          "+ parity gate) without running anything")
+    ap.add_argument("--kernel-backends", metavar="LIST", default=None,
+                    help="comma list of kernel backends to sweep "
+                         "(default: jnp + pallas_interpret on CPU, "
+                         "jnp + pallas elsewhere); 'jnp' alone skips "
+                         "the kernels axis")
+    ap.add_argument("--profile", metavar="DIR",
+                    help="trace one warm warp scenario under "
+                         "jax.profiler.trace into DIR and exit")
+    ap.add_argument("--profile-scenario", default="perm1024",
+                    choices=sorted(canonical_scenarios()),
+                    help="which canonical scenario --profile runs")
     args = ap.parse_args()
+    backends = (None if args.kernel_backends is None
+                else [b for b in args.kernel_backends.split(",") if b])
     if args.check:
         sys.exit(check_report_file(args.check))
+    if args.profile:
+        kb = next((b for b in (backends or []) if b != "jnp"), None)
+        profile_scenario(args.profile, name=args.profile_scenario,
+                         kernel_backend=kb or "jnp")
+        return
     if args.smoke:
         smoke(floor=args.floor if args.floor is not None
               else SMOKE_FLOOR_TICKS_PER_S)
@@ -503,7 +666,7 @@ def main() -> None:
         scale_smoke(floor=args.floor if args.floor is not None
                     else SCALE_FLOOR_TICKS_PER_S)
         return
-    bench_all(args.out, repeats=args.repeats)
+    bench_all(args.out, repeats=args.repeats, kernel_backends=backends)
 
 
 if __name__ == "__main__":

@@ -108,6 +108,9 @@ import jax.numpy as jnp
 
 from .. import compat
 from ..core import reliability as rel
+from ..kernels.fabric_kernels import (flow_transition_kernel, iota1,
+                                      rank_in_queue_core,
+                                      serve_enqueue_kernel)
 from ..core import transport as tp
 from ..core.params import (ACK_WIRE_BYTES, NetworkSpec, RoCEParams,
                            STrackParams, make_roce_params,
@@ -122,6 +125,7 @@ from .topology import FatTree
 LB_MODES = ("adaptive", "oblivious", "fixed")
 PROTOCOLS = ("strack", "rocev2")
 ACK_PATHS = ("perhop", "folded")
+KERNEL_BACKENDS = ("jnp", "pallas", "pallas_interpret")
 
 
 def ecmp_mix(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
@@ -526,6 +530,19 @@ class FabricConfig:
     # CPU-only hosts test this via
     # ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     shard: int = 0
+    # Kernel backend for the scan body's three hot stages (fused ring
+    # service+enqueue, the sort-free enqueue ranker, per-flow protocol
+    # transitions — see kernels/fabric_kernels.py):
+    #   "jnp"              the stage cores run inline, XLA-fused (default)
+    #   "pallas"           compiled Pallas kernels (real TPU/GPU backends)
+    #   "pallas_interpret" Pallas interpret mode: the kernel path's call
+    #                      structure + bit-exactness on any backend (CPU
+    #                      CI; tests/test_fabric_kernels.py)
+    # Both Pallas modes are bit-exact vs "jnp" (same stage cores, gated
+    # by the differential-fuzz suite).  Single-device only: shard > 1
+    # keeps its inline jnp stages (all_gather exchanges cannot live
+    # inside a kernel body).
+    kernel_backend: str = "jnp"
 
     @property
     def pfc_enabled(self) -> bool:
@@ -760,6 +777,16 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     trace_every = 0 if cfg.time_warp else cfg.trace_every
     DP = int(cfg.shard) if int(cfg.shard) > 1 else 1
     A = int(cfg.active_cap) if cfg.active_cap else 0
+    if cfg.kernel_backend not in KERNEL_BACKENDS:
+        raise ValueError(f"unknown kernel_backend {cfg.kernel_backend!r}; "
+                         f"expected one of {KERNEL_BACKENDS}")
+    use_kernels = cfg.kernel_backend != "jnp"
+    interpret = cfg.kernel_backend == "pallas_interpret"
+    if use_kernels and DP > 1:
+        raise ValueError(
+            f"kernel_backend={cfg.kernel_backend!r} requires shard <= 1: "
+            f"the sharded program's all_gather exchanges cannot run "
+            f"inside a Pallas kernel body")
     if A < 0:
         raise ValueError(f"active_cap must be positive, got {A}")
     if A and trace_every:
@@ -922,6 +949,256 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             group_done_tick=jnp.full((n_groups,), -1, jnp.int32),
             act_overflow=jnp.zeros((), jnp.int32))
 
+        # ---- kernel-backend dispatch ---------------------------------
+        # The hot stages below are *core* functions over explicit
+        # operands, called either inline (kernel_backend="jnp" — XLA
+        # fuses them exactly as before) or through the fused-stage
+        # Pallas kernels, which run the SAME core inside one
+        # pallas_call: one implementation, two execution substrates,
+        # bit-exact by construction (tests/test_fabric_kernels.py + the
+        # fuzz suite's kernel leg).  The sharded program (DP > 1) keeps
+        # its inline jnp stages: its all_gather exchanges cannot live in
+        # a kernel body.
+        if use_kernels:
+            def _trans(core, args):
+                return flow_transition_kernel(core, args,
+                                              interpret=interpret)
+
+            def _serve(core, args):
+                return serve_enqueue_kernel(core, args,
+                                            interpret=interpret)
+        else:
+            def _trans(core, args):
+                return core(*args)
+            _serve = _trans
+
+        def timers_of(fl, now):
+            return jax.vmap(lambda f: proto.on_timer(f, now))(fl)
+
+        def empty_tx(n):
+            return tp.TxPacket(
+                valid=jnp.zeros((n,), bool),
+                psn=jnp.zeros((n,), jnp.int32),
+                entropy=jnp.zeros((n,), jnp.int32),
+                is_rtx=jnp.zeros((n,), bool),
+                is_probe=jnp.zeros((n,), bool))
+
+        def dense_trans_core(flows0, due, sendable, eff_nic, src_, t):
+            """Kernel-3 core, dense variant: due-ACK apply, timer sweep,
+            next-packet offers and NIC round-robin arbitration over all
+            N flow lanes (see flow_transition_kernel)."""
+            now = t.astype(jnp.float32) * tick_us
+            lanes = iota1(N)
+            fl = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
+                flows0, due)
+            # Gated (dependency-pending) flows keep their init-time
+            # timer state — their deadlines effectively start counting
+            # at release, as in the oracle where timers are armed at
+            # add_flow time.
+            fl_t, probe_tx = jax.lax.cond(
+                (t % cfg.timer_every) == 0,
+                lambda f: timers_of(f, now),
+                lambda f: (f, empty_tx(N)), fl)
+            probe_valid = probe_tx.valid & sendable
+            if pfc:
+                # A paused NIC emits nothing.  Withhold the timer-state
+                # commit for flows whose probe was blocked (their probe
+                # deadline and spray state stay put), so the probe is
+                # *delayed* until resume — as in the oracle, where it
+                # waits in the paused NIC queue — not silently lost.
+                blocked = probe_tx.valid & eff_nic[src_]
+                fl = _bwhere(sendable & (~blocked), fl_t, fl)
+                probe_valid = probe_valid & (~blocked)
+            else:
+                fl = _bwhere(sendable, fl_t, fl)
+            fl_sent, tx = jax.vmap(
+                lambda f: proto.next_packet(f, now))(fl)
+            can_tx = tx.valid & sendable
+            score = jnp.where(can_tx, (lanes - t) % NR, NR)
+            best = jax.ops.segment_min(score, src_, num_segments=NH)
+            sel = can_tx & (score == best[src_])
+            if pfc:
+                # a paused NIC injects nothing (state update withheld
+                # too, so the flow re-offers the same packet next tick)
+                sel = sel & (~eff_nic[src_])
+            fl = _bwhere(sel, fl_sent, fl)
+            return fl, tx, probe_tx, probe_valid, sel, can_tx
+
+        def active_trans_core(flows0, pipe_cur, act_idx, eff_nic, src_,
+                              t):
+            """Kernel-3 core, active-set variant: the <= A released
+            not-done lanes are gathered from the [N] flow state, stepped
+            and scattered back inside the core, so the [A]-shaped flow
+            pytrees never materialize outside the kernel call."""
+            now = t.astype(jnp.float32) * tick_us
+            lane_ok = act_idx < N
+            act_clip = jnp.minimum(act_idx, N - 1)
+            lane_src = src_[act_clip]
+            due = _gather_rows(pipe_cur, act_idx, N)
+            rows = _gather_rows(flows0, act_idx, N)
+            rows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
+                rows, due)
+            rows_t, probe_tx = jax.lax.cond(
+                (t % cfg.timer_every) == 0,
+                lambda f: timers_of(f, now),
+                lambda f: (f, empty_tx(A)), rows)
+            probe_valid = probe_tx.valid & lane_ok
+            if pfc:
+                blocked = probe_tx.valid & eff_nic[lane_src]
+                rows = _bwhere(lane_ok & (~blocked), rows_t, rows)
+                probe_valid = probe_valid & (~blocked)
+            else:
+                rows = _bwhere(lane_ok, rows_t, rows)
+            rows_sent, tx = jax.vmap(
+                lambda f: proto.next_packet(f, now))(rows)
+            can_tx = tx.valid & lane_ok
+            score = jnp.where(can_tx, (act_idx - t) % NR, NR)
+            best = jax.ops.segment_min(score, lane_src,
+                                       num_segments=NH)
+            sel = can_tx & (score == best[lane_src])
+            if pfc:
+                sel = sel & (~eff_nic[lane_src])
+            rows = _bwhere(sel, rows_sent, rows)
+            fl = _scatter_rows(flows0, rows,
+                               jnp.where(lane_ok, act_idx, N), N)
+            # non-lane flows cannot change done-ness (only ACK
+            # processing completes a flow, and every released not-done
+            # flow is a lane), so per-lane done bits suffice for the
+            # completion step
+            done_lane = jax.vmap(proto.done)(rows)
+            return (fl, tx, probe_tx, probe_valid, sel, can_tx,
+                    done_lane)
+
+        def serve_enqueue_core(qtree, qhead0, qsize0, paused_row, dst_,
+                               dst_tor_, total_pkts_, tail_b_,
+                               lane_flow, tx_psn, probe_psn, ent_d,
+                               ent_p, sel, probe_valid, inj_q, inj_qp,
+                               t):
+            """Kernel-1 core: fused queue-ring service + two-pass
+            enqueue.  Serve: every unpaused queue pops its head packet
+            once the head's departure-time lane says it has arrived
+            (upstream serialization + link propagation accrued), with
+            occupancy-fraction ECN marking.  Enqueue: fabric advances +
+            NIC data/probe injections rank among same-queue candidates
+            (all-pairs mask when small, the sort-free chunked ranker —
+            kernel 2 — at scale), drop on occupancy and scatter into the
+            flat rings with next-hop departure times (see
+            serve_enqueue_kernel)."""
+            now = t.astype(jnp.float32) * tick_us
+            qrows_ = iota1(Q)
+            is_up = qrows_ < TS
+            spine_row = jnp.where(is_up, qrows_ % S, (qrows_ - TS) // T)
+
+            def wire(flow, psn, probe):
+                """Per-packet wire size: probes are ACK-sized, the final
+                PSN of a message is its odd tail, else a full MTU."""
+                f = jnp.clip(flow, 0, N - 1)
+                tail = psn >= total_pkts_[f] - 1
+                return jnp.where(probe, jnp.float32(ACK_WIRE_BYTES),
+                                 jnp.where(tail, tail_b_[f],
+                                           jnp.float32(net.mtu_bytes)))
+
+            # serve: pop ready heads, ECN-mark on occupancy fraction
+            qs = qsize0[:Q]
+            if pfc:
+                has = (qs > 0) & (~paused_row)
+            else:
+                has = qs > 0
+            hidx = qhead0[:Q] % cap
+            pop = PktQ(*[f[qrows_, hidx] for f in qtree])
+            has = has & (pop.ready <= t)
+            residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
+            frac = jnp.clip((residual - kmin_p)
+                            / jnp.maximum(kmax_p - kmin_p, 1e-9),
+                            0.0, 1.0)
+            dither = jnp.abs(jnp.sin(
+                t.astype(jnp.float32) * 12.9898
+                + qrows_.astype(jnp.float32) * 78.233))
+            mark = has & (~pop.probe) & (frac > dither * 0.999)
+            ecn_out = pop.ecn | mark
+            served = has.astype(jnp.int32)
+            qhead1 = qhead0.at[:Q].add(served)
+            qsize1 = qsize0.at[:Q].add(-served)
+
+            fclip = jnp.clip(pop.flow, 0, N - 1)
+            pop_bytes = wire(pop.flow, pop.psn, pop.probe)
+            # fabric advance targets (tor_up -> spine_down -> host_down)
+            adv_tgt = jnp.where(
+                is_up, TS + spine_row * T + dst_tor_[fclip],
+                2 * TS + dst_[fclip])[:2 * TS]
+            adv_valid = has[:2 * TS]
+
+            # enqueue: fabric advances + data + probes
+            L_ = lane_flow.shape[0]
+            cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
+            cand_valid = jnp.concatenate([adv_valid, sel, probe_valid])
+            now_l = jnp.full((L_,), now, jnp.float32)
+            zb, ob = jnp.zeros((L_,), bool), jnp.ones((L_,), bool)
+            # every enqueue (fabric advance or NIC injection) arrives at
+            # the next stage after 1 tick of serialization + K ticks of
+            # link propagation — the per-hop departure-time lane
+            cand = PktQ(
+                flow=jnp.concatenate(
+                    [pop.flow[:2 * TS], lane_flow, lane_flow]),
+                psn=jnp.concatenate(
+                    [pop.psn[:2 * TS], tx_psn, probe_psn]),
+                ts=jnp.concatenate([pop.ts[:2 * TS], now_l, now_l]),
+                probe=jnp.concatenate([pop.probe[:2 * TS], zb, ob]),
+                ecn=jnp.concatenate([ecn_out[:2 * TS], zb, zb]),
+                ent=jnp.concatenate([pop.ent[:2 * TS], ent_d, ent_p]),
+                ready=jnp.full((2 * TS + 2 * L_,), 0, jnp.int32)
+                + t + 1 + K)
+            # per-candidate wire bytes (PFC accounting is per-packet)
+            cand_bytes = jnp.concatenate([
+                pop_bytes[:2 * TS],
+                wire(lane_flow, tx_psn, zb),
+                wire(lane_flow, probe_psn, ob)])
+            # Two-pass enqueue. Pass 1: drop decision from the occupancy
+            # bound qsize + rank-among-valid (over-counts same-tick
+            # earlier drops by design — the queue is at threshold then
+            # anyway).  Pass 2: ring positions from rank-among-ACCEPTED,
+            # so accepted packets pack the ring contiguously and a drop
+            # never leaves a stale gap slot.  Small candidate counts use
+            # the all-pairs mask (cheaper than the sweep); at scale the
+            # sort-free chunked scatter-add ranker runs in O(M * CHUNK)
+            # flat work.
+            M = 2 * TS + 2 * L_
+            if M <= 256:
+                tril = (jax.lax.broadcasted_iota(jnp.int32, (M, M), 1)
+                        < jax.lax.broadcasted_iota(jnp.int32, (M, M),
+                                                   0))
+                same_q = cand_qid[:, None] == cand_qid[None, :]
+
+                def rank_among(flag):
+                    return jnp.sum(same_q & flag[None, :] & tril,
+                                   axis=1).astype(jnp.int32)
+            elif use_kernels:
+                def rank_among(flag):
+                    return rank_in_queue_core(cand_qid, flag, Q)
+            else:
+                def rank_among(flag):
+                    return _rank_in_queue(cand_qid, flag, Q)
+            rank_v = rank_among(cand_valid)
+            occ = qsize1[cand_qid] + rank_v
+            dropped = cand_valid & (
+                ((~cand.probe) & (occ >= data_drop_pkts))
+                | (occ >= hard_pkts))
+            accept = cand_valid & (~dropped)
+            rank_a = rank_among(accept)
+            pos = (qhead1[cand_qid] + qsize1[cand_qid] + rank_a) % cap
+            flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
+            q1 = PktQ(*[f.reshape(-1).at[flat_idx].set(v)
+                        .reshape(Q + 1, cap)
+                        for f, v in zip(qtree, cand)])
+            added = jax.ops.segment_sum(
+                accept.astype(jnp.int32),
+                jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
+            qsize2 = (qsize1 + added).at[Q].set(0)
+            qhead2 = qhead1.at[Q].set(0)
+            drops_add = jnp.sum(dropped).astype(jnp.int32)
+            return (q1, qhead2, qsize2, pop, has, ecn_out, pop_bytes,
+                    cand_qid, cand_bytes, accept, drops_add)
+
         def tick(st: FabricState, t):
             """One dense tick at tick-index ``t`` -> (new_state, can_any).
 
@@ -929,6 +1206,18 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             this tick — the send half of the idleness test the time-warp
             scan uses (timer/pacing/pipe wakeups are handled by
             ``warp_target``).
+
+            Stage order (reordered from the historical serve-first
+            layout so each hot stage is one kernel call; equivalent
+            because the transport lanes never read this tick's pops, and
+            the return-pipe slot the receivers write, (t + D[flow]) % H
+            with 1 <= D[flow] <= H - 2, is always distinct from the slot
+            t % H the transport stage reads and clears): dependency
+            gate; PFC effective-pause masks; per-flow transport lanes
+            (kernel 3); spray/entropy + ECMP injection targets; fused
+            ring service + enqueue (kernel 1, ranking via kernel 2);
+            deliveries -> receivers + return-pipe writes; PFC
+            accounting; completion.
             """
             now = t.astype(jnp.float32) * tick_us
 
@@ -940,103 +1229,28 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 sendable_msg & (st.msg_release_tick < 0),
                 t.astype(jnp.int32), st.msg_release_tick)
 
-            # ---- 1. serve: every unpaused queue pops its head packet,
-            # once the head's departure-time lane says it has arrived
-            # (upstream serialization + link propagation accrued) ---------
-            qs = st.qsize[:Q]
+            # ---- 0b. PFC effective-pause masks: the decision from PD
+            # ticks ago (pause frames propagate one hop upstream), read
+            # by both the NIC gate (transport) and the serve step -------
             if pfc:
                 if PD > 0:
-                    # effective pause = the decision from PD ticks ago
-                    # (pause frames propagate one hop upstream)
                     eff = st.pfc_line[t % PD]
                     eff_nic = eff[:NH]
                     eff_sd = eff[NH:NH + TS].reshape(S, T)
                     eff_up = eff[NH + TS:].reshape(T, S)
                 else:
-                    eff_nic, eff_sd, eff_up = (st.paused_nic, st.paused_sd,
+                    eff_nic, eff_sd, eff_up = (st.paused_nic,
+                                               st.paused_sd,
                                                st.paused_up)
                 paused_row = jnp.concatenate(
                     [eff_up.reshape(-1), eff_sd.reshape(-1),
                      jnp.zeros((NH,), bool)])
-                has = (qs > 0) & (~paused_row)
             else:
-                has = qs > 0
-            if DP > 1:
-                # the inter-pod hop: each pod pops its own ring rows' heads
-                # and the [~Q x 7 scalar] head fields cross pods in one
-                # all_gather — packets move from the queue's pod to the
-                # destination flow's pod through this exchange
-                qhead_pad = jnp.pad(st.qhead, (0, QR - (Q + 1)))
-                hidx_l = jax.lax.dynamic_slice_in_dim(
-                    qhead_pad, qoff, QRL) % cap
-                pop_l = PktQ(*[f[jnp.arange(QRL), hidx_l] for f in st.q])
-                pop = PktQ(*[a[:Q] for a in gath(pop_l)])
-            else:
-                hidx = st.qhead[:Q] % cap
-                pop = PktQ(*[f[qrows, hidx] for f in st.q])
-            has = has & (pop.ready <= t)
-            residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
-            frac = jnp.clip((residual - kmin_p)
-                            / jnp.maximum(kmax_p - kmin_p, 1e-9), 0.0, 1.0)
-            dither = jnp.abs(jnp.sin(t.astype(jnp.float32) * 12.9898
-                                     + qrows.astype(jnp.float32) * 78.233))
-            mark = has & (~pop.probe) & (frac > dither * 0.999)
-            ecn_out = pop.ecn | mark
-            served = has.astype(jnp.int32)
-            qhead = st.qhead.at[:Q].add(served)
-            qsize = st.qsize.at[:Q].add(-served)
+                # None leaves vanish under pytree flattening, so the
+                # kernel wrappers pass these through untouched
+                eff_nic = paused_row = None
 
-            fclip = jnp.clip(pop.flow, 0, N - 1)
-            # per-packet wire bytes of every popped head (tail-aware)
-            pop_bytes = wire_bytes(pop.flow, pop.psn, pop.probe)
-            # fabric advance targets (tor_up -> spine_down -> host_down)
-            adv_tgt = jnp.where(
-                is_up_row, TS + spine_of_row * T + dst_tor[fclip],
-                2 * TS + dst[fclip])[:2 * TS]
-            adv_valid = has[:2 * TS]
-            # (adv.ready is never read: cand assigns every candidate's
-            # next-hop ready wholesale below)
-            adv = PktQ(flow=pop.flow[:2 * TS], psn=pop.psn[:2 * TS],
-                       ts=pop.ts[:2 * TS], probe=pop.probe[:2 * TS],
-                       ecn=ecn_out[:2 * TS], ent=pop.ent[:2 * TS],
-                       ready=pop.ready[:2 * TS])
-
-            # ---- 2. deliveries -> per-flow receivers (one host = one q) --
-            del_has = has[2 * TS:]
-            del_flow = fclip[2 * TS:]
-            slot_del = (t + dflow[del_flow]) % H
-            if DP > 1:
-                # receiver + return-pipe state live on the flow-owner pod:
-                # every pod walks the global delivery rows but gathers /
-                # commits only the flows it owns (trash row otherwise)
-                own = del_has & (del_flow >= foff) & (del_flow < foff + NL)
-                lrow = jnp.where(own, del_flow - foff, NL)
-                rrows = _gather_rows(st.rcv, lrow, NL)
-                commit, fidx, n_lanes = own, lrow, NL
-            else:
-                rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
-                commit, fidx, n_lanes = del_has, del_flow, N
-            rnew, sack = jax.vmap(
-                lambda r, psn, sz, ecn, ent, ts, pb: proto.on_data(
-                    r, psn, sz, ecn, ent, ts, pb, now))(
-                rrows, pop.psn[2 * TS:], pop_bytes[2 * TS:],
-                ecn_out[2 * TS:], pop.ent[2 * TS:],
-                pop.ts[2 * TS:], pop.probe[2 * TS:])
-            rnew = _bwhere(commit, rnew, rrows)
-            rcv = _scatter_rows(st.rcv, rnew,
-                                jnp.where(commit, fidx, n_lanes), n_lanes)
-            delivered = _scatter_add(
-                st.delivered,
-                jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
-                pop_bytes[2 * TS:], N)
-
-            # write emitted messages into the return pipe at slot
-            # t + D[flow]: each flow's ACK rides its own reverse path
-            sack_valid = sack.valid & commit
-            pipe = _scatter_pipe(st.pipe, sack._replace(valid=sack_valid),
-                                 slot_del, fidx, sack_valid, H, n_lanes)
-
-            # ---- 3.-5. transport lanes: due ACKs, timers, sends ----------
+            # ---- 1. transport lanes: due ACKs, timers, sends (kernel 3)
             # Three equivalent lane formulations of the same per-flow
             # steps (all bit-exact in observables — the fuzz suite pins
             # them against each other):
@@ -1047,29 +1261,22 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             #     ranks, drops and ring layout),
             #   * sharded: this pod's NL flow lanes; NIC offers cross pods
             #     through an all_gather so arbitration stays global.
+            # The transport stage reads + clears return-pipe slot t % H
+            # BEFORE the receivers (stage 3 below) write slot
+            # (t + D[flow]) % H — always a different slot, so this is
+            # order-independent.
             cur = t % H
-
-            def timers(fl):
-                return jax.vmap(lambda f: proto.on_timer(f, now))(fl)
-
-            def empty_tx(n):
-                return tp.TxPacket(
-                    valid=jnp.zeros((n,), bool),
-                    psn=jnp.zeros((n,), jnp.int32),
-                    entropy=jnp.zeros((n,), jnp.int32),
-                    is_rtx=jnp.zeros((n,), bool),
-                    is_probe=jnp.zeros((n,), bool))
-
             overflow = jnp.zeros((), jnp.int32)
             if DP > 1:
-                due = jax.tree.map(lambda a: a[cur], pipe)
+                due = jax.tree.map(lambda a: a[cur], st.pipe)
                 flows_l = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
                     st.flows, due)
-                pipe = pipe._replace(valid=pipe.valid.at[cur].set(
+                pipe = st.pipe._replace(valid=st.pipe.valid.at[cur].set(
                     jnp.zeros((NL,), bool)))
                 flows_t_l, probe_tx_l = jax.lax.cond(
-                    (t % cfg.timer_every) == 0, timers,
-                    lambda fl: (fl, empty_tx(NL)), flows_l)
+                    (t % cfg.timer_every) == 0,
+                    lambda f: timers_of(f, now),
+                    lambda f: (f, empty_tx(NL)), flows_l)
                 probe_tx = gath(probe_tx_l)
                 probe_valid = probe_tx.valid & sendable
                 if pfc:
@@ -1078,7 +1285,8 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                                       flows_t_l, flows_l)
                     probe_valid = probe_valid & (~blocked)
                 else:
-                    flows_l = _bwhere(fslice(sendable), flows_t_l, flows_l)
+                    flows_l = _bwhere(fslice(sendable), flows_t_l,
+                                      flows_l)
                 flows_sent_l, tx_l = jax.vmap(
                     lambda f: proto.next_packet(f, now))(flows_l)
                 tx = gath(tx_l)
@@ -1094,10 +1302,11 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 lane_fix, lane_rr = fixed_ent, st.obl_rr
                 lane_idx, L = iota_n, N
             elif A:
-                # active set: released, not-yet-done flows (ascending flow
-                # index; fill lanes read/write the trash row).  Done flows
-                # are transition-silent (next_packet invalid, timers
-                # gated), so excluding them preserves every observable.
+                # active set: released, not-yet-done flows (ascending
+                # flow index; fill lanes read/write the trash row).  The
+                # compaction + overflow check stay outside the core
+                # (nonzero's static-size fill semantics); the gathered
+                # transitions run inside it.
                 done_prev = jax.vmap(proto.done)(st.flows)
                 act_mask = sendable & (~done_prev)
                 act_idx = jnp.nonzero(
@@ -1105,76 +1314,27 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 lane_ok = act_idx < N
                 act_clip = jnp.minimum(act_idx, N - 1)
                 overflow = (jnp.sum(act_mask) > A).astype(jnp.int32)
-                due = _gather_rows(
-                    jax.tree.map(lambda a: a[cur], pipe), act_idx, N)
-                rows = _gather_rows(st.flows, act_idx, N)
-                rows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
-                    rows, due)
-                pipe = pipe._replace(valid=pipe.valid.at[cur].set(
+                pipe_cur = jax.tree.map(lambda a: a[cur], st.pipe)
+                (flows, tx, probe_tx, probe_valid, sel, can_tx,
+                 done_lane) = _trans(
+                    active_trans_core,
+                    (st.flows, pipe_cur, act_idx, eff_nic, src, t))
+                pipe = st.pipe._replace(valid=st.pipe.valid.at[cur].set(
                     jnp.zeros((N,), bool)))
-                rows_t, probe_tx = jax.lax.cond(
-                    (t % cfg.timer_every) == 0, timers,
-                    lambda fl: (fl, empty_tx(A)), rows)
-                lane_src = src[act_clip]
-                probe_valid = probe_tx.valid & lane_ok
-                if pfc:
-                    blocked = probe_tx.valid & eff_nic[lane_src]
-                    rows = _bwhere(lane_ok & (~blocked), rows_t, rows)
-                    probe_valid = probe_valid & (~blocked)
-                else:
-                    rows = _bwhere(lane_ok, rows_t, rows)
-                rows_sent, tx = jax.vmap(
-                    lambda f: proto.next_packet(f, now))(rows)
-                can_tx = tx.valid & lane_ok
-                score = jnp.where(can_tx, (act_idx - t) % NR, NR)
-                best = jax.ops.segment_min(score, lane_src,
-                                           num_segments=NH)
-                sel = can_tx & (score == best[lane_src])
-                if pfc:
-                    sel = sel & (~eff_nic[lane_src])
-                rows = _bwhere(sel, rows_sent, rows)
-                flows = _scatter_rows(st.flows, rows,
-                                      jnp.where(lane_ok, act_idx, N), N)
-                lane_flow, lane_dst = act_clip, dst[act_clip]
-                lane_same, lane_stor = same_tor[act_clip], src_tor[act_clip]
-                lane_fix, lane_rr = fixed_ent[act_clip], st.obl_rr[act_clip]
+                lane_flow, lane_src = act_clip, src[act_clip]
+                lane_dst = dst[act_clip]
+                lane_same, lane_stor = (same_tor[act_clip],
+                                        src_tor[act_clip])
+                lane_fix, lane_rr = (fixed_ent[act_clip],
+                                     st.obl_rr[act_clip])
                 lane_idx, L = act_idx, A
             else:
-                due = jax.tree.map(lambda a: a[cur], pipe)
-                flows = jax.vmap(lambda f, m: proto.on_ack(f, m, now))(
-                    st.flows, due)
-                pipe = pipe._replace(valid=pipe.valid.at[cur].set(
+                due = jax.tree.map(lambda a: a[cur], st.pipe)
+                flows, tx, probe_tx, probe_valid, sel, can_tx = _trans(
+                    dense_trans_core,
+                    (st.flows, due, sendable, eff_nic, src, t))
+                pipe = st.pipe._replace(valid=st.pipe.valid.at[cur].set(
                     jnp.zeros((N,), bool)))
-                # Gated (dependency-pending) flows keep their init-time
-                # timer state — their deadlines effectively start counting
-                # at release, as in the oracle where timers are armed at
-                # add_flow time.
-                flows_t, probe_tx = jax.lax.cond(
-                    (t % cfg.timer_every) == 0, timers,
-                    lambda fl: (fl, empty_tx(N)), flows)
-                probe_valid = probe_tx.valid & sendable
-                if pfc:
-                    # A paused NIC emits nothing.  Withhold the timer-state
-                    # commit for flows whose probe was blocked (their probe
-                    # deadline and spray state stay put), so the probe is
-                    # *delayed* until resume — as in the oracle, where it
-                    # waits in the paused NIC queue — not silently lost.
-                    blocked = probe_tx.valid & eff_nic[src]
-                    flows = _bwhere(sendable & (~blocked), flows_t, flows)
-                    probe_valid = probe_valid & (~blocked)
-                else:
-                    flows = _bwhere(sendable, flows_t, flows)
-                flows_sent, tx = jax.vmap(
-                    lambda f: proto.next_packet(f, now))(flows)
-                can_tx = tx.valid & sendable
-                score = jnp.where(can_tx, (iota_n - t) % NR, NR)
-                best = jax.ops.segment_min(score, src, num_segments=NH)
-                sel = can_tx & (score == best[src])
-                if pfc:
-                    # a paused NIC injects nothing (state update withheld
-                    # too, so the flow re-offers the same packet next tick)
-                    sel = sel & (~eff_nic[src])
-                flows = _bwhere(sel, flows_sent, flows)
                 lane_flow, lane_src, lane_dst = iota_n, src, dst
                 lane_same, lane_stor = same_tor, src_tor
                 lane_fix, lane_rr = fixed_ent, st.obl_rr
@@ -1210,59 +1370,89 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             inj_qp = jnp.where(lane_same, 2 * TS + lane_dst,
                                lane_stor * S + spine_p)
 
-            # ---- 6. enqueue: fabric advances + data + probes -------------
-            cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
-            cand_valid = jnp.concatenate([adv_valid, sel, probe_valid])
-            now_l = jnp.full((L,), now, jnp.float32)
-            zb, ob = jnp.zeros((L,), bool), jnp.ones((L,), bool)
-            # every enqueue (fabric advance or NIC injection) arrives at
-            # the next stage after 1 tick of serialization + K ticks of
-            # link propagation — the per-hop departure-time lane
-            cand = PktQ(
-                flow=jnp.concatenate([adv.flow, lane_flow, lane_flow]),
-                psn=jnp.concatenate([adv.psn, tx.psn, probe_tx.psn]),
-                ts=jnp.concatenate([adv.ts, now_l, now_l]),
-                probe=jnp.concatenate([adv.probe, zb, ob]),
-                ecn=jnp.concatenate([adv.ecn, zb, zb]),
-                ent=jnp.concatenate([adv.ent, ent, ent_probe]),
-                ready=jnp.full((2 * TS + 2 * L,), 0, jnp.int32) + t + 1 + K)
-            # per-candidate wire bytes (PFC accounting is per-packet)
-            cand_bytes = jnp.concatenate([
-                pop_bytes[:2 * TS],
-                wire_bytes(lane_flow, tx.psn, zb),
-                wire_bytes(lane_flow, probe_tx.psn, ob)])
-            # Two-pass enqueue. Pass 1: drop decision from the occupancy
-            # bound qsize + rank-among-valid (over-counts same-tick earlier
-            # drops by design — the queue is at threshold then anyway).
-            # Pass 2: ring positions from rank-among-ACCEPTED, so accepted
-            # packets pack the ring contiguously and a drop never leaves a
-            # stale gap slot.  Small candidate counts use the all-pairs
-            # mask (cheaper than the scan); at scale the sort-free chunked
-            # scatter-add ranker runs in O(M * CHUNK) flat work.
-            M = 2 * TS + 2 * L
-            if M <= 256:
-                tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
-                same_q = cand_qid[:, None] == cand_qid[None, :]
-
-                def rank_among(flag):
-                    return jnp.sum(same_q & flag[None, :] & tril,
-                                   axis=1).astype(jnp.int32)
-            else:
-                def rank_among(flag):
-                    return _rank_in_queue(cand_qid, flag, Q)
-            rank_v = rank_among(cand_valid)
-            occ = qsize[cand_qid] + rank_v
-            dropped = cand_valid & (((~cand.probe) & (occ >= data_drop_pkts))
-                                    | (occ >= hard_pkts))
-            accept = cand_valid & (~dropped)
-            rank_a = rank_among(accept)
-            pos = (qhead[cand_qid] + qsize[cand_qid] + rank_a) % cap
+            # ---- 2. fused ring service + enqueue (kernels 1 + 2) -------
             if DP > 1:
-                # each pod writes only the ring rows it owns (the accept /
-                # position math above is replicated, so every pod agrees)
-                ownq = accept & (cand_qid >= qoff) & (cand_qid < qoff + QRL)
-                flat_idx = jnp.where(ownq, (cand_qid - qoff) * cap + pos,
-                                     QRL * cap)
+                # Inline jnp: the inter-pod hop — each pod pops its own
+                # ring rows' heads and the [~Q x 7 scalar] head fields
+                # cross pods in one all_gather; on enqueue each pod
+                # writes only the ring rows it owns (the accept /
+                # position math is replicated, so every pod agrees).
+                qs = st.qsize[:Q]
+                if pfc:
+                    has = (qs > 0) & (~paused_row)
+                else:
+                    has = qs > 0
+                qhead_pad = jnp.pad(st.qhead, (0, QR - (Q + 1)))
+                hidx_l = jax.lax.dynamic_slice_in_dim(
+                    qhead_pad, qoff, QRL) % cap
+                pop_l = PktQ(*[f[jnp.arange(QRL), hidx_l]
+                               for f in st.q])
+                pop = PktQ(*[a[:Q] for a in gath(pop_l)])
+                has = has & (pop.ready <= t)
+                residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
+                frac = jnp.clip((residual - kmin_p)
+                                / jnp.maximum(kmax_p - kmin_p, 1e-9),
+                                0.0, 1.0)
+                dither = jnp.abs(jnp.sin(
+                    t.astype(jnp.float32) * 12.9898
+                    + qrows.astype(jnp.float32) * 78.233))
+                mark = has & (~pop.probe) & (frac > dither * 0.999)
+                ecn_out = pop.ecn | mark
+                served = has.astype(jnp.int32)
+                qhead = st.qhead.at[:Q].add(served)
+                qsize = st.qsize.at[:Q].add(-served)
+                fclip = jnp.clip(pop.flow, 0, N - 1)
+                pop_bytes = wire_bytes(pop.flow, pop.psn, pop.probe)
+                adv_tgt = jnp.where(
+                    is_up_row, TS + spine_of_row * T + dst_tor[fclip],
+                    2 * TS + dst[fclip])[:2 * TS]
+                adv_valid = has[:2 * TS]
+                cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
+                cand_valid = jnp.concatenate(
+                    [adv_valid, sel, probe_valid])
+                now_l = jnp.full((L,), now, jnp.float32)
+                zb, ob = jnp.zeros((L,), bool), jnp.ones((L,), bool)
+                cand = PktQ(
+                    flow=jnp.concatenate(
+                        [pop.flow[:2 * TS], lane_flow, lane_flow]),
+                    psn=jnp.concatenate(
+                        [pop.psn[:2 * TS], tx.psn, probe_tx.psn]),
+                    ts=jnp.concatenate(
+                        [pop.ts[:2 * TS], now_l, now_l]),
+                    probe=jnp.concatenate(
+                        [pop.probe[:2 * TS], zb, ob]),
+                    ecn=jnp.concatenate([ecn_out[:2 * TS], zb, zb]),
+                    ent=jnp.concatenate(
+                        [pop.ent[:2 * TS], ent, ent_probe]),
+                    ready=jnp.full((2 * TS + 2 * L,), 0, jnp.int32)
+                    + t + 1 + K)
+                cand_bytes = jnp.concatenate([
+                    pop_bytes[:2 * TS],
+                    wire_bytes(lane_flow, tx.psn, zb),
+                    wire_bytes(lane_flow, probe_tx.psn, ob)])
+                M = 2 * TS + 2 * L
+                if M <= 256:
+                    tril = jnp.tril(jnp.ones((M, M), bool), k=-1)
+                    same_q = cand_qid[:, None] == cand_qid[None, :]
+
+                    def rank_among(flag):
+                        return jnp.sum(same_q & flag[None, :] & tril,
+                                       axis=1).astype(jnp.int32)
+                else:
+                    def rank_among(flag):
+                        return _rank_in_queue(cand_qid, flag, Q)
+                rank_v = rank_among(cand_valid)
+                occ = qsize[cand_qid] + rank_v
+                dropped = cand_valid & (
+                    ((~cand.probe) & (occ >= data_drop_pkts))
+                    | (occ >= hard_pkts))
+                accept = cand_valid & (~dropped)
+                rank_a = rank_among(accept)
+                pos = (qhead[cand_qid] + qsize[cand_qid] + rank_a) % cap
+                ownq = accept & (cand_qid >= qoff) \
+                    & (cand_qid < qoff + QRL)
+                flat_idx = jnp.where(
+                    ownq, (cand_qid - qoff) * cap + pos, QRL * cap)
 
                 def _wrow(f, v):
                     flat = f.reshape(-1)
@@ -1271,17 +1461,62 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                     return out.set(v)[:QRL * cap].reshape(QRL, cap)
 
                 q = PktQ(*[_wrow(f, v) for f, v in zip(st.q, cand)])
+                added = jax.ops.segment_sum(
+                    accept.astype(jnp.int32),
+                    jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
+                qsize = (qsize + added).at[Q].set(0)
+                qhead = qhead.at[Q].set(0)
+                drops = st.drops + jnp.sum(dropped).astype(jnp.int32)
             else:
-                flat_idx = jnp.where(accept, cand_qid * cap + pos, Q * cap)
-                q = PktQ(*[f.reshape(-1).at[flat_idx].set(v)
-                           .reshape(Q + 1, cap)
-                           for f, v in zip(st.q, cand)])
-            added = jax.ops.segment_sum(
-                accept.astype(jnp.int32),
-                jnp.where(accept, cand_qid, Q), num_segments=Q + 1)
-            qsize = (qsize + added).at[Q].set(0)
-            qhead = qhead.at[Q].set(0)
-            drops = st.drops + jnp.sum(dropped).astype(jnp.int32)
+                (q, qhead, qsize, pop, has, ecn_out, pop_bytes,
+                 cand_qid, cand_bytes, accept, drops_add) = _serve(
+                    serve_enqueue_core,
+                    (st.q, st.qhead, st.qsize, paused_row, dst,
+                     dst_tor, total_pkts, tail_b, lane_flow, tx.psn,
+                     probe_tx.psn, ent, ent_probe, sel, probe_valid,
+                     inj_q, inj_qp, t))
+                fclip = jnp.clip(pop.flow, 0, N - 1)
+                drops = st.drops + drops_add
+
+            # ---- 3. deliveries -> per-flow receivers (one host = one q)
+            del_has = has[2 * TS:]
+            del_flow = fclip[2 * TS:]
+            slot_del = (t + dflow[del_flow]) % H
+            if DP > 1:
+                # receiver + return-pipe state live on the flow-owner
+                # pod: every pod walks the global delivery rows but
+                # gathers / commits only the flows it owns (trash row
+                # otherwise)
+                own = del_has & (del_flow >= foff) \
+                    & (del_flow < foff + NL)
+                lrow = jnp.where(own, del_flow - foff, NL)
+                rrows = _gather_rows(st.rcv, lrow, NL)
+                commit, fidx, n_lanes = own, lrow, NL
+            else:
+                rrows = jax.tree.map(lambda a: a[del_flow], st.rcv)
+                commit, fidx, n_lanes = del_has, del_flow, N
+            rnew, sack = jax.vmap(
+                lambda r, psn, sz, ecn, ent_, ts, pb: proto.on_data(
+                    r, psn, sz, ecn, ent_, ts, pb, now))(
+                rrows, pop.psn[2 * TS:], pop_bytes[2 * TS:],
+                ecn_out[2 * TS:], pop.ent[2 * TS:],
+                pop.ts[2 * TS:], pop.probe[2 * TS:])
+            rnew = _bwhere(commit, rnew, rrows)
+            rcv = _scatter_rows(st.rcv, rnew,
+                                jnp.where(commit, fidx, n_lanes),
+                                n_lanes)
+            delivered = _scatter_add(
+                st.delivered,
+                jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
+                pop_bytes[2 * TS:], N)
+
+            # write emitted messages into the return pipe at slot
+            # t + D[flow]: each flow's ACK rides its own reverse path
+            # (never the slot the transport stage cleared this tick:
+            # 1 <= D[flow] <= H - 2)
+            sack_valid = sack.valid & commit
+            pipe = _scatter_pipe(pipe, sack._replace(valid=sack_valid),
+                                 slot_del, fidx, sack_valid, H, n_lanes)
 
             # ---- 6b. PFC: per-ingress accounting + pause/resume masks ----
             # Ingress attribution is derivable per packet: a packet's port
@@ -1388,12 +1623,11 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 done = jax.lax.all_gather(
                     jax.vmap(proto.done)(flows), "pod", tiled=True)
             elif A:
-                # non-lane flows cannot change done-ness this tick (only
-                # ACK processing completes a flow, and every released
-                # not-done flow is a lane); done lanes update in place
+                # done lanes update in place from the core's per-lane
+                # done bits (see active_trans_core)
                 done = _set_rows(
                     done_prev, jnp.where(lane_ok, act_idx, N),
-                    jax.vmap(proto.done)(rows), N)
+                    done_lane, N)
             else:
                 done = jax.vmap(proto.done)(flows)
             done_tick = jnp.where(done & (st.done_tick < 0),

@@ -265,6 +265,7 @@ BACKENDS = ("fabric", "events")
 PROTOCOLS = ("strack", "rocev2")
 LB_MODES = ("adaptive", "oblivious", "fixed")
 ACK_PATHS = ("perhop", "folded")
+KERNEL_BACKENDS = ("jnp", "pallas", "pallas_interpret")
 
 
 @dataclass(frozen=True)
@@ -318,6 +319,13 @@ class RunConfig:
     # force a device mesh with XLA_FLAGS=--xla_force_host_platform_
     # device_count=N.  Bit-exact vs unsharded; requires trace_every=0.
     shard: int = 0
+    # Fabric kernel backend for the scan body's hot stages: "jnp"
+    # (inline, XLA-fused — the default), "pallas" (compiled Pallas
+    # kernels; real TPU/GPU) or "pallas_interpret" (Pallas interpret
+    # mode, runs anywhere incl. CPU CI).  All three are bit-exact
+    # (tests/test_fabric_kernels.py + the fuzz suite's kernel leg);
+    # single-device only (shard <= 1).
+    kernel_backend: str = "jnp"
     seed: int = 1234                 # events-backend rng seed
     until: float = 1e9               # events-backend horizon (us)
 
@@ -342,6 +350,15 @@ class RunConfig:
                 f"active_cap must be positive, got {self.active_cap}")
         if self.shard < 0:
             raise ValueError(f"shard must be >= 0, got {self.shard}")
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r}; "
+                f"expected one of {KERNEL_BACKENDS}")
+        if self.kernel_backend != "jnp" and self.shard > 1:
+            raise ValueError(
+                f"kernel_backend={self.kernel_backend!r} requires "
+                f"shard <= 1 (the sharded program keeps its inline jnp "
+                f"stages)")
         if (self.active_cap or self.shard > 1) and (
                 self.trace_every or self.trace_queues):
             raise ValueError(
@@ -472,7 +489,8 @@ def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
               ack_path=cfg.ack_path, hop_prop_us=cfg.hop_prop_us,
               pfc_delay_ticks=cfg.pfc_delay_ticks,
               time_warp=time_warp, trace_every=trace_every,
-              active_cap=cfg.active_cap, shard=cfg.shard)
+              active_cap=cfg.active_cap, shard=cfg.shard,
+              kernel_backend=cfg.kernel_backend)
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
     return FabricConfig(**kw)

@@ -22,7 +22,13 @@ GOOD = {
                      "ticks_per_s": 18000.0, "warp_trips": 1234,
                      "program_builds": 1},
             "speedup": 16.0, "parity_ok": True, "unfinished": 0,
-            "max_fct_us": 700.5, "program_builds": 2,
+            "max_fct_us": 700.5, "program_builds_total": 2,
+            "kernels": {
+                "pallas_interpret": {
+                    "cold_s": 3.2, "run_s": 0.55, "compile_s": 2.65,
+                    "ticks_per_s": 16363.6, "warp_trips": 1234,
+                    "program_builds": 1, "parity_exact": True},
+            },
         },
         "perm8k": {
             "n_ticks": 4452, "n_hosts": 8192, "n_msgs": 8192,
@@ -30,17 +36,22 @@ GOOD = {
                      "ticks_per_s": 216.0, "warp_trips": 113,
                      "program_builds": 1},
             "warp_only": True, "parity_ok": True, "unfinished": 0,
-            "max_fct_us": 11.06, "program_builds": 1,
+            "max_fct_us": 11.06, "program_builds_total": 1,
             "parity_spotcheck": {"n_hosts": 16, "n_msgs": 16,
                                  "fabric_us": 9.99, "events_us": 9.88,
                                  "ratio": 1.011, "ok": True},
         },
     },
     "scale_axis": [
-        {"n_hosts": 64, "n_ticks": 4452, "ticks_per_s": 9000.0,
-         "compile_s": 5.0, "program_builds": 1, "warp_trips": 100},
-        {"n_hosts": 8192, "n_ticks": 4452, "ticks_per_s": 216.0,
-         "compile_s": 7.0, "program_builds": 1, "warp_trips": 113},
+        {"n_hosts": 64, "n_ticks": 4452, "kernel_backend": "jnp",
+         "ticks_per_s": 9000.0, "compile_s": 5.0, "program_builds": 1,
+         "warp_trips": 100},
+        {"n_hosts": 64, "n_ticks": 4452,
+         "kernel_backend": "pallas_interpret", "ticks_per_s": 8800.0,
+         "compile_s": 5.1, "program_builds": 1, "warp_trips": 100},
+        {"n_hosts": 8192, "n_ticks": 4452, "kernel_backend": "jnp",
+         "ticks_per_s": 216.0, "compile_s": 7.0, "program_builds": 1,
+         "warp_trips": 113},
     ],
 }
 
@@ -77,11 +88,17 @@ def test_schema_violations_are_flagged():
     bad = copy.deepcopy(GOOD)
     del bad["scenarios"]["perm1024"]["speedup"]
     assert any("missing key 'speedup'" in p for p in validate_report(bad))
-    # missing program_builds (the retrace-regression hook is part of the
-    # contract now)
+    # missing scenario-level program_builds_total (the whole-scenario
+    # build-count diagnostic)
     bad = copy.deepcopy(GOOD)
-    del bad["scenarios"]["perm1024"]["program_builds"]
-    assert any("missing key 'program_builds'" in p
+    del bad["scenarios"]["perm1024"]["program_builds_total"]
+    assert any("missing key 'program_builds_total'" in p
+               for p in validate_report(bad))
+    # missing per-mode program_builds (what the retrace-regression hook
+    # actually reads — distinct from the scenario-level total)
+    bad = copy.deepcopy(GOOD)
+    del bad["scenarios"]["perm1024"]["warp"]["program_builds"]
+    assert any("warp: missing key 'program_builds'" in p
                for p in validate_report(bad))
     # wrong type
     bad = copy.deepcopy(GOOD)
@@ -91,6 +108,11 @@ def test_schema_violations_are_flagged():
     bad = copy.deepcopy(GOOD)
     del bad["scale_axis"][0]["compile_s"]
     assert any("scale_axis[0]" in p for p in validate_report(bad))
+    # scale-axis points must carry their kernel_backend tag
+    bad = copy.deepcopy(GOOD)
+    del bad["scale_axis"][1]["kernel_backend"]
+    assert any("scale_axis[1]: missing key 'kernel_backend'" in p
+               for p in validate_report(bad))
     bad = copy.deepcopy(GOOD)
     bad["scale_axis"] = []
     assert any("scale_axis" in p for p in validate_report(bad))
@@ -100,6 +122,45 @@ def test_schema_violations_are_flagged():
                                          "scenarios": {}}))
     # not even a dict
     assert validate_report([1, 2, 3])
+
+
+def test_kernel_rows_are_validated():
+    """The kernels axis: optional, but present rows must be well-formed
+    and bit-exact — parity_exact=False is a gate failure by itself."""
+    # the fixture's kernels row validates (test_valid_report_passes), and
+    # a jnp-only report without one still validates
+    no_kernels = copy.deepcopy(GOOD)
+    del no_kernels["scenarios"]["perm1024"]["kernels"]
+    assert validate_report(no_kernels) == []
+    # parity_exact=False fires the gate naming backend and scenario
+    bad = copy.deepcopy(GOOD)
+    bad["scenarios"]["perm1024"]["kernels"]["pallas_interpret"][
+        "parity_exact"] = False
+    problems = validate_report(bad)
+    assert any("parity_exact is FALSE" in p
+               and "perm1024.kernels.pallas_interpret" in p
+               for p in problems)
+    # missing timing / parity keys inside a kernel row are flagged
+    bad = copy.deepcopy(GOOD)
+    del bad["scenarios"]["perm1024"]["kernels"]["pallas_interpret"][
+        "parity_exact"]
+    assert any("kernels.pallas_interpret: missing key 'parity_exact'" in p
+               for p in validate_report(bad))
+    # an empty kernels object is malformed, not silently fine
+    bad = copy.deepcopy(GOOD)
+    bad["scenarios"]["perm1024"]["kernels"] = {}
+    assert any("kernels" in p for p in validate_report(bad))
+
+
+def test_regression_gate_ignores_kernel_rows():
+    """The throughput gate reads scenarios.<name>.warp.ticks_per_s only;
+    a kernel-backend slowdown (or a removed kernels row) never fires it."""
+    new = copy.deepcopy(GOOD)
+    new["scenarios"]["perm1024"]["kernels"]["pallas_interpret"][
+        "ticks_per_s"] = 1.0
+    assert regression_problems(new, GOOD) == []
+    del new["scenarios"]["perm1024"]["kernels"]
+    assert regression_problems(new, GOOD) == []
 
 
 def test_regression_gate():
@@ -139,7 +200,8 @@ def test_check_report_file_exit_codes(tmp_path):
 def _patch_runners(monkeypatch, parity_ok=True):
     import benchmarks.perf as perf
 
-    def fake_bench_scenario(name, sc, cfg_kw, repeats=2):
+    def fake_bench_scenario(name, sc, cfg_kw, repeats=2,
+                            kernel_backends=()):
         row = copy.deepcopy(GOOD["scenarios"]["perm1024"])
         row["parity_ok"] = parity_ok
         return row
@@ -148,7 +210,8 @@ def _patch_runners(monkeypatch, parity_ok=True):
     monkeypatch.setattr(perf, "canonical_scenarios",
                         lambda: {"fake": (None, {})})
     monkeypatch.setattr(perf, "scale_scenarios", lambda: {})
-    monkeypatch.setattr(perf, "bench_scale_axis", lambda repeats=1:
+    monkeypatch.setattr(perf, "bench_scale_axis",
+                        lambda repeats=1, kernel_backends=():
                         copy.deepcopy(GOOD["scale_axis"]))
     return perf
 

@@ -1,0 +1,200 @@
+"""Kernel-backend parity: the Pallas hot-path kernels vs the jnp stages.
+
+The fabric's three hot stages (fused ring service+enqueue, the sort-free
+enqueue ranker, the per-flow transitions) run either inline
+(``kernel_backend="jnp"``) or as Pallas kernels
+(``"pallas"``/``"pallas_interpret"``) built from the SAME stage cores —
+see ``kernels/fabric_kernels.py``.  These tests pin the interpret-mode
+path (the only one a CPU container can execute) bit-exact against the
+jnp path per kernel and end-to-end:
+
+  * the standalone ranker kernel against ``fabric._rank_in_queue`` and
+    the O(M^2) lower-triangle oracle (the PR 6 contract: rank among
+    flagged same-queue candidates in candidate order, -1 elsewhere),
+  * the ``fused_stage_kernel`` wrapper's pytree/scalar/None round trip,
+  * whole-program parity on a small permutation (warp + dense), a
+    RoCEv2+PFC incast, and an active-set collective — the exact
+    summaries must be BIT-equal, not band-equal,
+  * knob validation and program-cache separation.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import fabric_kernels as fk
+from repro.sim import fabric as F
+from repro.sim.topology import FatTree
+from repro.sim.workloads import (RunConfig, collective_scenario,
+                                 incast_scenario, permutation_scenario,
+                                 run)
+
+pytestmark = [pytest.mark.tier1, pytest.mark.pallas]
+
+SUMMARY_KEYS = ("max_fct", "avg_fct", "drops", "pauses", "unfinished",
+                "max_collective_time")
+
+
+def _assert_bit_equal(a: dict, b: dict, ctx=""):
+    for k in SUMMARY_KEYS:
+        assert a.get(k) == b.get(k), (ctx, k, a.get(k), b.get(k))
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: the ranker
+# ---------------------------------------------------------------------------
+
+def _rank_reference(qid: np.ndarray, flag: np.ndarray) -> np.ndarray:
+    """O(M^2) lower-triangle oracle (same as tests/test_rank_active.py)."""
+    m = qid.shape[0]
+    ref = np.full(m, -1, np.int32)
+    for i in range(m):
+        if flag[i]:
+            ref[i] = int(np.sum(flag[:i] & (qid[:i] == qid[i])))
+    return ref
+
+
+@pytest.mark.parametrize("m", [1, 3, 255, 256, 257, 700, 2600])
+def test_ranker_kernel_matches_jnp_and_oracle(m):
+    rng = np.random.default_rng(m)
+    n_queues = 7
+    qid = rng.integers(0, n_queues, size=m).astype(np.int32)
+    flag = rng.random(m) < 0.6
+    ref = _rank_reference(qid, flag)
+    jnp_rank = np.asarray(F._rank_in_queue(jnp.asarray(qid),
+                                           jnp.asarray(flag), n_queues))
+    core_rank = np.asarray(fk.rank_in_queue_core(jnp.asarray(qid),
+                                                 jnp.asarray(flag),
+                                                 n_queues))
+    kern_rank = np.asarray(fk.rank_in_queue_kernel(jnp.asarray(qid),
+                                                   jnp.asarray(flag),
+                                                   n_queues,
+                                                   interpret=True))
+    assert np.array_equal(jnp_rank, ref)
+    assert np.array_equal(core_rank, ref)
+    assert np.array_equal(kern_rank, ref)
+
+
+def test_ranker_kernel_edge_cases():
+    # none flagged, all flagged, one queue, empty
+    for qid, flag, nq in [
+            ([0, 1, 0, 1], [False] * 4, 2),
+            ([3, 3, 3, 3], [True] * 4, 4),
+            ([0], [True], 1),
+            ([], [], 4)]:
+        qid = np.asarray(qid, np.int32)
+        flag = np.asarray(flag, bool)
+        ref = _rank_reference(qid, flag)
+        got = np.asarray(fk.rank_in_queue_kernel(
+            jnp.asarray(qid.reshape(-1)), jnp.asarray(flag.reshape(-1)),
+            nq, interpret=True))
+        assert np.array_equal(got, ref), (qid, flag, got, ref)
+
+
+def test_ranker_kernel_chunk_boundary_order():
+    # candidates of one queue spanning a chunk boundary must keep global
+    # candidate-index order across blocks (the carried count table)
+    m = fk.RANK_CHUNK * 2 + 5
+    qid = np.zeros(m, np.int32)
+    flag = np.ones(m, bool)
+    got = np.asarray(fk.rank_in_queue_kernel(jnp.asarray(qid),
+                                             jnp.asarray(flag), 1,
+                                             interpret=True))
+    assert np.array_equal(got, np.arange(m, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# The fused-stage wrapper
+# ---------------------------------------------------------------------------
+
+def test_fused_stage_kernel_round_trip():
+    """Pytrees, traced scalars, None args and scalar outputs all survive
+    the ref round trip, inside jit."""
+    def core(tree, scale, nothing, t):
+        assert nothing is None
+        s = tree["a"] * scale + tree["b"]
+        return {"out": s}, jnp.sum(s), t + 1
+
+    args = ({"a": jnp.arange(4.0), "b": jnp.ones((4,))},
+            jnp.float32(2.0), None, jnp.int32(7))
+    direct = core(*args)
+    via = jax.jit(lambda a: fk.fused_stage_kernel(core, a,
+                                                  interpret=True))(args)
+    assert np.array_equal(np.asarray(direct[0]["out"]),
+                          np.asarray(via[0]["out"]))
+    assert np.asarray(direct[1]) == np.asarray(via[1])
+    assert np.asarray(direct[2]) == np.asarray(via[2])
+
+
+# ---------------------------------------------------------------------------
+# Whole-program parity, one scenario per kernel-heavy regime
+# ---------------------------------------------------------------------------
+
+def _topo():
+    return FatTree(n_tor=4, hosts_per_tor=4, n_spine=4)
+
+
+def test_perm_strack_parity_warp_and_dense():
+    sc = permutation_scenario(_topo(), msg_bytes=64e3, seed=0)
+    kw = dict(backend="fabric", n_ticks=4000, protocol="strack")
+    for warp in (True, False):
+        a = run(sc, RunConfig(**kw, time_warp=warp))
+        b = run(sc, RunConfig(**kw, time_warp=warp,
+                              kernel_backend="pallas_interpret"))
+        _assert_bit_equal(a, b, f"perm warp={warp}")
+
+
+def test_incast_roce_pfc_parity():
+    sc = incast_scenario(_topo(), fan_in=8, msg_bytes=32e3, seed=1)
+    kw = dict(backend="fabric", n_ticks=6000, protocol="rocev2",
+              pfc=True)
+    a = run(sc, RunConfig(**kw))
+    b = run(sc, RunConfig(**kw, kernel_backend="pallas_interpret"))
+    _assert_bit_equal(a, b, "incast roce+pfc")
+
+
+def test_active_set_collective_parity():
+    # dependency-gated ring allreduce keeps < active_cap flows live, so
+    # this drives the gathered active-set transition kernel
+    sc = collective_scenario(_topo(), "ring", 1, 8, 32e3)
+    kw = dict(backend="fabric", n_ticks=20000, protocol="strack",
+              active_cap=12)
+    a = run(sc, RunConfig(**kw))
+    b = run(sc, RunConfig(**kw, kernel_backend="pallas_interpret"))
+    _assert_bit_equal(a, b, "active collective")
+    # and the active-set kernel path matches the dense jnp program
+    c = run(sc, RunConfig(backend="fabric", n_ticks=20000,
+                          protocol="strack"))
+    _assert_bit_equal(b, c, "active kernels vs dense jnp")
+
+
+# ---------------------------------------------------------------------------
+# Knob validation + program-cache separation
+# ---------------------------------------------------------------------------
+
+def test_unknown_kernel_backend_rejected():
+    with pytest.raises(ValueError, match="kernel_backend"):
+        RunConfig(backend="fabric", kernel_backend="cuda")
+    with pytest.raises(ValueError, match="kernel_backend"):
+        F._make_program(
+            _topo(), 4, 100,
+            F.FabricConfig(kernel_backend="nope"), F._trivial_dep(range(4)))
+
+
+def test_kernel_backend_excludes_shard():
+    with pytest.raises(ValueError, match="shard"):
+        RunConfig(backend="fabric", kernel_backend="pallas_interpret",
+                  shard=2)
+
+
+def test_kernel_backend_separates_program_cache():
+    F.clear_program_cache()
+    sc = permutation_scenario(_topo(), msg_bytes=16e3, seed=0)
+    kw = dict(backend="fabric", n_ticks=1500, protocol="strack")
+    builds0 = F.program_builds
+    run(sc, RunConfig(**kw))
+    assert F.program_builds == builds0 + 1
+    run(sc, RunConfig(**kw, kernel_backend="pallas_interpret"))
+    assert F.program_builds == builds0 + 2     # distinct cache entry
+    run(sc, RunConfig(**kw, kernel_backend="pallas_interpret"))
+    assert F.program_builds == builds0 + 2     # ... that is then reused

@@ -121,6 +121,17 @@ def check_parity(rng: random.Random) -> dict:
             assert fa["drops"] == fb["drops"]
             assert fa["pauses"] == fb["pauses"]
 
+    # --- kernel-backend leg: the same program with the hot stages run
+    # through the interpret-mode Pallas kernels must be bit-exact (same
+    # stage cores, different execution substrate) ---
+    fk = run(sc, RunConfig(backend="fabric",
+                           kernel_backend="pallas_interpret", **kw))
+    assert fk["max_fct"] == fb["max_fct"], (kw, fk, fb)
+    assert fk["avg_fct"] == fb["avg_fct"]
+    assert fk["drops"] == fb["drops"] and fk["pauses"] == fb["pauses"]
+    if "max_collective_time" in fb:
+        assert fk["max_collective_time"] == fb["max_collective_time"]
+
     # --- sharded leg (auto-on when a device mesh is visible; `make
     # test-fast` forces a 4-device host platform for the shard-marked
     # entry point below) ---
