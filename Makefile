@@ -3,7 +3,8 @@ PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast fabric-smoke collective-smoke bench-smoke \
-	scale-smoke smoke bench benchmarks update-golden profile
+	scale-smoke smoke bench benchmarks update-golden profile soak \
+	soak-smoke serve-metrics
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
@@ -78,3 +79,21 @@ profile:
 # Full paper-figure benchmark sweep (slow).
 benchmarks:
 	$(PP) $(PY) -m benchmarks.run
+
+# Observatory soak: 64-host mixed workload (2 training jobs + an
+# inference burst tenant) for 10 warp epochs, counters carried across
+# epochs; writes BENCH_soak.prom (Prometheus text exposition) and gates
+# on drain, one-program reuse, exposition round-trip and the per-tenant
+# FCT spot check vs the events oracle (benchmarks/soak.py, docs/
+# observatory.md).
+soak:
+	$(PP) $(PY) -m benchmarks.soak --out BENCH_soak.prom
+
+# CI-sized soak: small fleet, 3 epochs of 2000 ticks, same gates.
+soak-smoke:
+	$(PP) $(PY) -m benchmarks.soak --smoke --out BENCH_soak.prom
+
+# Serve the soak's metrics file on http://127.0.0.1:9109/metrics
+# (re-read per scrape, so a running soak shows up live).
+serve-metrics:
+	$(PP) $(PY) -m repro.obs.exporter --file BENCH_soak.prom --port 9109

@@ -11,7 +11,7 @@ import statistics
 
 from repro.core.params import NetworkSpec
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import incast_scenario, run_incast
+from repro.sim.workloads import incast_scenario, run_scenario_on_sim
 
 from .common import make_sim, run_transport, timed
 
@@ -34,8 +34,8 @@ def run_fct(fan_in: int = 8, msg: float = 512 * 2 ** 10, topo_kw=None,
             res, wall = timed(run_transport, tr, sc, backend="fabric")
         else:
             sim = make_sim(tr, topo, net, seed=seed)
-            res, wall = timed(run_incast, sim, fan_in, msg, until=2e6,
-                              seed=seed)
+            sc = incast_scenario(topo, fan_in, msg, net=net, seed=seed)
+            res, wall = timed(run_scenario_on_sim, sim, sc, until=2e6)
         fcts[tr] = res["max_fct"]
         rows.append({"fig": "19", "workload": f"incast_{fan_in}to1",
                      "msg": msg, "transport": tr,
@@ -57,7 +57,8 @@ def run_dynamics(fan_in: int = 16, msg: float = 2 * 2 ** 20, seed: int = 0):
         topo = full_bisection(**topo_kw)
         sim = make_sim(tr, topo, net, seed=seed, log_queues=True)
         sim.rx_bytes_log = []
-        res, wall = timed(run_incast, sim, fan_in, msg, until=4e6, seed=seed)
+        sc = incast_scenario(topo, fan_in, msg, net=net, seed=seed)
+        res, wall = timed(run_scenario_on_sim, sim, sc, until=4e6)
         # convergence: last time the bottleneck queue delay exceeded
         # 3x target (= still violently oscillating)
         qlog = sim.all_queue_delay_logs()
@@ -90,7 +91,8 @@ def run_queue_stability(degrees=(8, 16, 32), msg: float = 1 * 2 ** 20,
         topo = full_bisection(4, max(4, (fan + 3) // 4))
         sim = make_sim("strack", topo, net, seed=seed, log_queues=True,
                        qdelay_log_threshold=0.5)
-        res, wall = timed(run_incast, sim, fan, msg, until=4e6, seed=seed)
+        sc = incast_scenario(topo, fan, msg, net=net, seed=seed)
+        res, wall = timed(run_scenario_on_sim, sim, sc, until=4e6)
         qlog = sim.all_queue_delay_logs()
         # steady state = second half of the run
         t_end = res["max_fct"]
@@ -113,7 +115,8 @@ def run_signals(fan_in: int = 16, msg: float = 1 * 2 ** 20, seed: int = 0):
     topo = full_bisection(4, max(4, fan_in // 2))
     sim = make_sim("strack", topo, net, seed=seed)
     sim.ack_log = []
-    res, _ = timed(run_incast, sim, fan_in, msg, until=2e6, seed=seed)
+    sc = incast_scenario(topo, fan_in, msg, net=net, seed=seed)
+    res, _ = timed(run_scenario_on_sim, sim, sc, until=2e6)
     base = min(r for _, _, _, r in sim.ack_log)
     first_ecn = next((t for t, f, e, r in sim.ack_log if e), None)
     first_rtt = next((t for t, f, e, r in sim.ack_log if r > 1.5 * base),

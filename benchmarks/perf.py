@@ -503,17 +503,39 @@ def check_report_file(path: str) -> int:
     return 0
 
 
+def _load_baseline(path: str):
+    """Read the previously committed report for the regression gate.
+
+    A missing, unreadable, corrupt, or non-object baseline means "no
+    baseline" — logged loudly, never a traceback: a fresh clone or a
+    mangled committed report must not block regenerating the report."""
+    try:
+        with open(path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"bench gate: no baseline at {path} — regression gate "
+              f"skipped for this run", file=sys.stderr)
+        return None
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench gate: baseline {path} unreadable ({e}) — treating "
+              f"as no baseline; regression gate skipped", file=sys.stderr)
+        return None
+    if not isinstance(baseline, dict):
+        print(f"bench gate: baseline {path} is not a JSON object "
+              f"({type(baseline).__name__}) — treating as no baseline",
+              file=sys.stderr)
+        return None
+    return baseline
+
+
 def bench_all(out_path: str = "BENCH_fabric.json",
-              repeats: int = 2, kernel_backends: list = None) -> dict:
+              repeats: int = 2, kernel_backends: list = None,
+              history_path: str = "BENCH_history.jsonl") -> dict:
     if kernel_backends is None:
         kernel_backends = default_kernel_backends()
     # the committed report (if any) is the regression baseline — read it
     # BEFORE overwriting
-    try:
-        with open(out_path) as f:
-            baseline = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        baseline = None
+    baseline = _load_baseline(out_path)
     report = {
         "meta": {
             "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -553,11 +575,15 @@ def bench_all(out_path: str = "BENCH_fabric.json",
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {out_path}")
-    # Loud gates: (1) schema + parity on the report we just wrote, and
-    # (2) warp throughput vs the previously committed report — fail the
-    # process on either, never bury a regression in a report nobody reads.
+    # Loud gates: (1) schema + parity on the report we just wrote,
+    # (2) warp throughput vs the previously committed report, and (3) the
+    # cross-PR trend gate over BENCH_history.jsonl — fail the process on
+    # any of them, never bury a regression in a report nobody reads.
     problems = validate_report(report)
     problems += regression_problems(report, baseline)
+    from repro.obs import trend
+    problems += trend.gate_and_append(history_path, report,
+                                      tol=REGRESSION_TOL)
     if problems:
         for p in problems:
             print(f"bench gate: {p}", file=sys.stderr)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import sys
 
 MIGRATION_TABLE = """\
-old entry point                                -> unified API call
+old entry point (REMOVED in PR 8)              -> unified API call
 ----------------------------------------------------------------------------
 run_on_fabric(sc, protocol=, lb_mode=, ...)    -> run(sc, RunConfig(backend="fabric", protocol=, lb_mode=, ...))
 run_seed_sweep_on_fabric(scs, ...)             -> sweep(scs, RunConfig(...))
@@ -28,6 +28,8 @@ run_incast(sim, fan_in, msg)                   -> run(incast_scenario(topo, fan_
 NetSim(..., roce_params=make_roce_params(net,
        qps_per_conn=4)) [4-QP striping]        -> run(sc, RunConfig(protocol="rocev2", subflows=4))
 
+Prebuilt-sim runs (custom oracle wiring such as queue logs or link
+failures) use run_scenario_on_sim(sim, scenario, until=...).
 See docs/experiments.md for the full guide."""
 
 

@@ -178,17 +178,28 @@ ALGOS = {"ring": ring_allreduce, "dbt": dbt_allreduce, "hd": hd_allreduce,
 
 
 def multi_job(algo: str, n_jobs: int, ranks_per_job: int, n_hosts: int,
-              collective_bytes: float, seed: int = 0, **kw):
+              collective_bytes: float, seed: int = 0, hosts=None, **kw):
     """The paper's multi-job setup: ``n_jobs`` identical collectives,
     each group randomly placed on the cluster. Returns (messages,
     placement) where placement maps global rank-id -> host.
 
+    ``hosts`` pins the placement instead of shuffling: an explicit host
+    list (rank ``j * ranks_per_job + r`` lands on ``hosts[...]``), so a
+    caller can reuse one placement across repeated generations — the
+    multi-tenant traffic generator keeps each job's placement stable
+    across soak epochs this way.
+
     ``workloads.collective_scenario`` wraps this into a backend-agnostic
     :class:`~repro.sim.workloads.Scenario` (hosts resolved, deps kept)."""
     import random
-    rng = random.Random(seed)
-    hosts = list(range(n_hosts))
-    rng.shuffle(hosts)
+    if hosts is None:
+        rng = random.Random(seed)
+        hosts = list(range(n_hosts))
+        rng.shuffle(hosts)
+    else:
+        hosts = list(hosts)
+        assert len(hosts) >= n_jobs * ranks_per_job, \
+            "pinned placement smaller than the job's rank count"
     assert n_jobs * ranks_per_job <= n_hosts
     msgs: list[Message] = []
     placement: dict[int, int] = {}

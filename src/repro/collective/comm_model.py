@@ -40,12 +40,13 @@ def measure_efficiency(transport: str, n_tor: int = 8, hosts_per_tor: int = 8,
     from ..core.params import NetworkSpec
     from ..sim.events import NetSim
     from ..sim.topology import full_bisection
-    from ..sim.workloads import run_permutation
+    from ..sim.workloads import permutation_scenario, run_scenario_on_sim
 
     net = NetworkSpec()
     topo = full_bisection(n_tor, hosts_per_tor)
     sim = NetSim(topo, net, transport=transport, seed=seed, **sim_kw)
-    res = run_permutation(sim, msg_bytes, until=5e5)
+    sc = permutation_scenario(topo, msg_bytes, net=net)
+    res = run_scenario_on_sim(sim, sc, until=5e5)
     ideal = msg_bytes / net.rate_Bpus + net.base_rtt_us
     eff = min(1.0, ideal / res["max_fct"]) if res["max_fct"] else 0.0
     return TransportEfficiency(name=transport, fabric_efficiency=eff,

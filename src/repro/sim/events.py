@@ -401,6 +401,13 @@ class NetSim:
             snd = fl.sender
             if snd.done():
                 continue
+            if fl.start_ts > now + 1e-9:
+                # future-dated flow (an open-loop arrival): a shared
+                # host's pump must not clock it out early; re-arm for
+                # its start time (the dedup in schedule_pump may have
+                # swallowed the pump add_flow armed)
+                self.schedule_pump(fl.start_ts, host)
+                continue
             if self.transport == "strack":
                 if not snd.can_send():
                     continue

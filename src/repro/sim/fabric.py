@@ -200,6 +200,10 @@ class Protocol(NamedTuple):
           being no-ops for this flow (+inf if never) — the per-flow half
           of the event-horizon (time-warp) scan contract: before those
           times, an idle fabric can skip ticks without changing state.
+      stat_retx(flows)                 -> i32 per-flow retransmitted-packet
+          count, derived elementwise from the final flow pytree (works on
+          vmapped [B, N] states too) — observability only, never read
+          inside the scan.
     """
 
     name: str
@@ -213,6 +217,7 @@ class Protocol(NamedTuple):
     done: Callable
     cong_pkts: Callable
     next_event: Callable
+    stat_retx: Callable
 
 
 def _empty_sack_pipe(p: STrackParams, h: int, n: int) -> SackMsg:
@@ -247,6 +252,16 @@ def make_strack_protocol(p: STrackParams) -> Protocol:
         probe = tx.valid & started
         return f2, tx._replace(valid=probe, is_probe=probe)
 
+    def stat_retx(f):
+        # STrack tracks cumulative bytes_sent (first transmissions +
+        # retransmissions); the excess over the message's wire bytes,
+        # rounded to MTUs, is the retransmitted-packet count.
+        wire = ((f.rel.total_pkts - 1).astype(jnp.float32) * p.mtu_bytes
+                + f.rel.tail_bytes)
+        extra = jnp.round((f.rel.bytes_sent - wire) / p.mtu_bytes)
+        return jnp.where(f.rel.total_pkts > 0,
+                         jnp.maximum(extra, 0.0).astype(jnp.int32), 0)
+
     return Protocol(
         name="strack", uses_spray=True, init=init,
         empty_msgs=lambda h, n: _empty_sack_pipe(p, h, n),
@@ -256,7 +271,8 @@ def make_strack_protocol(p: STrackParams) -> Protocol:
         next_packet=lambda f, now: tp.flow_next_packet(f, p, now),
         done=tp.flow_done,
         cong_pkts=lambda f: f.cc.cwnd,
-        next_event=lambda f: tp.flow_next_event(f, p))
+        next_event=lambda f: tp.flow_next_event(f, p),
+        stat_retx=stat_retx)
 
 
 def make_rocev2_protocol(p: RoceFabParams) -> Protocol:
@@ -297,7 +313,8 @@ def make_rocev2_protocol(p: RoceFabParams) -> Protocol:
         next_packet=next_packet,
         done=roce_done,
         cong_pkts=lambda f: f.rate * rtt_us / p.mtu_bytes,
-        next_event=lambda f: roce_next_event(f, p))
+        next_event=lambda f: roce_next_event(f, p),
+        stat_retx=lambda f: f.retransmits)
 
 
 # --------------------------------------------------------------------------- #
@@ -331,6 +348,7 @@ class _FlowMsg(NamedTuple):
     size: float
     deps: tuple = ()
     group: int = 0
+    arrival: int = 0
 
 
 class DepSpec(NamedTuple):
@@ -452,6 +470,9 @@ class FabricState(NamedTuple):
     group_done_tick: jax.Array   # i32[G], -1 until all group msgs complete
     act_overflow: jax.Array      # i32: ticks the live-flow count exceeded
     #                              cfg.active_cap (always 0 when unset)
+    # --- observability counters (never read back inside the scan) ---
+    ecn_marks: jax.Array         # i32: ECN-marked data pkts delivered
+    qdepth_hi: jax.Array         # i32[Q+1]: running per-queue depth max
 
 
 @dataclasses.dataclass(frozen=True)
@@ -864,7 +885,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     spine_of_row = jnp.where(is_up_row, qrows % S, (qrows - TS) // T)
     host_tor = jnp.arange(NH, dtype=jnp.int32) // HPT
 
-    def body(src, dst, total_pkts, tail_b, ent0, lb_code):
+    def body(src, dst, total_pkts, tail_b, ent0, lb_code, arrival):
         # Bump the retrace counter at TRACE time (python side effects fire
         # once per jax trace, not per run) — the job-batching regression
         # hook: bucketed batch sizes must not retrace this body.
@@ -875,6 +896,10 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
         total_pkts = jnp.asarray(total_pkts, jnp.int32)
         tail_b = jnp.asarray(tail_b, jnp.float32)
         lb_code = jnp.asarray(lb_code, jnp.int32)
+        # per-MESSAGE earliest-launch tick (open-loop arrivals); plain
+        # traced data, so one compiled program serves every arrival
+        # pattern — all-zero degenerates to the closed-loop semantics
+        arrival = jnp.asarray(arrival, jnp.int32)
         src_tor = src // HPT
         dst_tor = dst // HPT
         same_tor = src_tor == dst_tor
@@ -947,7 +972,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             msg_release_tick=jnp.full((n_msgs,), -1, jnp.int32),
             msg_done_tick=jnp.full((n_msgs,), -1, jnp.int32),
             group_done_tick=jnp.full((n_groups,), -1, jnp.int32),
-            act_overflow=jnp.zeros((), jnp.int32))
+            act_overflow=jnp.zeros((), jnp.int32),
+            ecn_marks=jnp.zeros((), jnp.int32),
+            qdepth_hi=jnp.zeros((Q + 1,), jnp.int32))
 
         # ---- kernel-backend dispatch ---------------------------------
         # The hot stages below are *core* functions over explicit
@@ -1222,8 +1249,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             now = t.astype(jnp.float32) * tick_us
 
             # ---- 0. dependency gate: a message is sendable the tick its
-            # pending-dep counter reaches zero (deps-free traces: always) --
-            sendable_msg = st.pending <= 0
+            # pending-dep counter reaches zero AND its arrival tick has
+            # come (deps-free, arrival-0 traces: always) ------------------
+            sendable_msg = (st.pending <= 0) & (arrival <= t)
             sendable = sendable_msg[dep.msg_of_flow]
             msg_release_tick = jnp.where(
                 sendable_msg & (st.msg_release_tick < 0),
@@ -1509,6 +1537,12 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 st.delivered,
                 jnp.where(del_has & (~pop.probe[2 * TS:]), del_flow, N),
                 pop_bytes[2 * TS:], N)
+            # ECN observability: marked data packets counted at host
+            # delivery (outside the kernel cores, so identical across
+            # every lane formulation and kernel backend; warp-safe —
+            # skipped ticks deliver nothing)
+            ecn_add = jnp.sum(del_has & ecn_out[2 * TS:]
+                              & (~pop.probe[2 * TS:])).astype(jnp.int32)
 
             # write emitted messages into the return pipe at slot
             # t + D[flow]: each flow's ACK rides its own reverse path
@@ -1668,7 +1702,10 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 msg_release_tick=msg_release_tick,
                 msg_done_tick=msg_done_tick,
                 group_done_tick=group_done_tick,
-                act_overflow=st.act_overflow + overflow)
+                act_overflow=st.act_overflow + overflow,
+                ecn_marks=st.ecn_marks + ecn_add,
+                # post-enqueue depth max; identity on warp-skipped ticks
+                qdepth_hi=jnp.maximum(st.qdepth_hi, qsize))
             return new_st, jnp.any(can_tx)
 
         def snapshot(st: FabricState) -> dict:
@@ -1704,7 +1741,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                     jax.vmap(proto.next_event)(st.flows))
             else:
                 timer_ev, send_ev = jax.vmap(proto.next_event)(st.flows)
-            sendable = (st.pending <= 0)[dep.msg_of_flow]
+            sendable = ((st.pending <= 0) & (arrival <= t))[dep.msg_of_flow]
             inf = jnp.float32(jnp.inf)
             timer_ev = jnp.where(sendable, timer_ev, inf)
             send_ev = jnp.where(sendable, send_ev, inf)
@@ -1755,8 +1792,15 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 pending_q = pending_q & (~dec_row)
             t_queue = jnp.maximum(t + 1, jnp.min(jnp.where(
                 pending_q, rdy, jnp.int32(n_ticks))))
+            # (e) the earliest future open-loop arrival of a dep-met
+            # message (its release tick records at exactly that tick);
+            # empty mask (all-arrival-0 traces) -> n_ticks, a no-op
+            t_arr = jnp.maximum(t + 1, jnp.min(jnp.where(
+                (st.pending <= 0) & (st.msg_release_tick < 0),
+                arrival, jnp.int32(n_ticks))))
             tgt = jnp.minimum(jnp.minimum(t_timer, t_send),
                               jnp.minimum(t_pipe, t_queue))
+            tgt = jnp.minimum(tgt, t_arr)
             return jnp.minimum(tgt, jnp.int32(n_ticks))
 
         if cfg.time_warp:
@@ -1772,7 +1816,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 # still needs its release tick recorded, and the PFC
                 # pause-frame delay line holds no in-flight transition.
                 idle = ((~can_any)
-                        & ~jnp.any((st.pending <= 0)
+                        & ~jnp.any((st.pending <= 0) & (arrival <= t)
                                    & (st.msg_release_tick < 0)))
                 if pfc and PD > 0:
                     dec = jnp.concatenate(
@@ -1834,15 +1878,17 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             qbytes=rep, ing_host=rep, ing_sd=rep, ing_up=rep,
             paused_nic=rep, paused_sd=rep, paused_up=rep, pfc_line=rep,
             pauses=rep, pending=rep, msg_done=rep, msg_release_tick=rep,
-            msg_done_tick=rep, group_done_tick=rep, act_overflow=rep)
+            msg_done_tick=rep, group_done_tick=rep, act_overflow=rep,
+            ecn_marks=rep, qdepth_hi=rep)
         m_spec = ({"warp_trips": rep, "end_tick": rep}
                   if cfg.time_warp else {})
         sharded = compat.shard_map(
-            body, mesh=mesh, in_specs=(rep,) * 6,
+            body, mesh=mesh, in_specs=(rep,) * 7,
             out_specs=(st_spec, m_spec), check_vma=False)
 
-        def program(src, dst, total_pkts, tail_b, ent0, lb_code):
-            return sharded(src, dst, total_pkts, tail_b, ent0, lb_code)
+        def program(src, dst, total_pkts, tail_b, ent0, lb_code, arrival):
+            return sharded(src, dst, total_pkts, tail_b, ent0, lb_code,
+                           arrival)
     else:
         program = body
     program.dims = dict(T=T, S=S, NH=NH, TS=TS, Q=Q, cap=cap, H=H,
@@ -1971,6 +2017,16 @@ def _flow_arrays(flows, cfg: FabricConfig, entropy_seed=_UNSET):
     return src, dst, total_pkts, tail_bytes, ent0
 
 
+def _arrival_array(messages) -> jax.Array:
+    """Per-message earliest-launch ticks (i32[n_msgs], input order).
+
+    ``arrival`` is optional on the message records (``_FlowMsg`` and
+    ``workloads.Message`` both default it to 0), so legacy traces keep
+    the closed-loop all-zero array."""
+    return jnp.asarray([max(0, int(getattr(m, "arrival", 0)))
+                        for m in messages], jnp.int32)
+
+
 def _pad_flow_arrays(arrs, npad: int, n_hosts: int):
     """Pad program input arrays with ``npad`` inert flows.
 
@@ -2022,10 +2078,11 @@ def _slice_fin(fin: dict, n: int, n_msgs: int, n_groups: int) -> dict:
     """Strip shard-pad entries from a :func:`_final_host` dict so the
     metrics layer only ever sees the caller's real flows/messages/groups."""
     out = dict(fin)
-    for k, m in (("done_tick", n), ("delivered", n),
+    for k, m in (("done_tick", n), ("delivered", n), ("retx", n),
                  ("msg_done_tick", n_msgs), ("msg_release_tick", n_msgs),
                  ("group_done_tick", n_groups)):
-        out[k] = fin[k][..., :m]
+        if k in fin:
+            out[k] = fin[k][..., :m]
     return out
 
 
@@ -2034,7 +2091,7 @@ def _slice_fin(fin: dict, n: int, n_msgs: int, n_groups: int) -> dict:
 #: that dominated wall-clock at collective flow counts).
 _FINAL_KEYS = ("done_tick", "msg_done_tick", "msg_release_tick",
                "group_done_tick", "drops", "pauses", "delivered",
-               "act_overflow")
+               "act_overflow", "ecn_marks", "qdepth_hi")
 
 
 def _final_host(finals) -> dict:
@@ -2080,6 +2137,9 @@ def _finish_metrics(metrics: dict, fin: dict, cfg: FabricConfig,
                                     mdt >= 0, tick_us)
     metrics["msg_release_us"] = _us_or_none(mrt, mrt >= 0, tick_us)
     metrics["msg_ids"] = dep.msg_ids
+    # original group id per message (tenant attribution in summarize)
+    gof = np.asarray(dep.group_of_msg)
+    metrics["msg_group_ids"] = tuple(dep.group_ids[g] for g in gof)
     # exact summary counters from the final scan carry (satellite of the
     # event-horizon change: summaries stay exact when the trace is
     # decimated or off entirely)
@@ -2092,6 +2152,12 @@ def _finish_metrics(metrics: dict, fin: dict, cfg: FabricConfig,
             f"— sendable flows beyond the cap would silently stall; raise "
             f"FabricConfig.active_cap (or set it to None)")
     metrics["delivered_final"] = np.asarray(fin["delivered"])
+    # observability counters: exact final-carry scalars/vectors, available
+    # at any trace decimation (incl. off) and under the warp scan
+    metrics["ecn_marks"] = int(np.asarray(fin["ecn_marks"]).reshape(-1)[-1])
+    metrics["qdepth_hi_pkts"] = np.asarray(fin["qdepth_hi"])[:dims["Q"]]
+    if "retx" in fin:
+        metrics["retransmits"] = int(np.sum(np.asarray(fin["retx"])))
     # Collective (group) metrics only for traces that actually carry
     # trace structure (dependency edges or several groups) — the events
     # backend likewise only reports group keys for TraceRunner-scheduled
@@ -2126,16 +2192,22 @@ def run_fabric_trace(topo: FatTree, messages, n_ticks: int,
     flows, dep = expand_messages(messages, cfg.subflows)
     _check_flows(flows, topo.n_hosts)
     arrs = _flow_arrays(flows, cfg)
+    arrival = _arrival_array(messages)
     dep_run, n_real = dep, None
     if int(cfg.shard) > 1:
         arrs, dep_run, n_real = _shard_pad_inputs(
             flows, dep, arrs, cfg, topo.n_hosts)
+        arrival = jnp.concatenate([
+            arrival, jnp.zeros((dep_run.n_msgs - dep.n_msgs,), jnp.int32)])
     src, dst, total_pkts, tails, ent0 = arrs
     prog = _get_program(topo, int(src.shape[0]), n_ticks, cfg, dep_run,
                         n_real=n_real)
     lb = jnp.int32(LB_MODES.index(cfg.lb_mode))
-    final, metrics = prog.jit_single(src, dst, total_pkts, tails, ent0, lb)
+    final, metrics = prog.jit_single(src, dst, total_pkts, tails, ent0, lb,
+                                     arrival)
+    proto, _, _, _ = _make_protocol(cfg)
     fin = _final_host(final)
+    fin["retx"] = jax.device_get(proto.stat_retx(final.flows))
     if n_real is not None:
         fin = _slice_fin(fin, n_real, dep.n_msgs, dep.n_groups)
     metrics = _finish_metrics(dict(metrics), fin, cfg, prog.dims, dep)
@@ -2222,25 +2294,33 @@ def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
                 f"structure than entry 0 — the whole batch runs under "
                 f"entry 0's static DepSpec, so structures must match")
     arrs = []
-    for (flows, _), seed in zip(expanded, entropy_seeds):
+    arrivals = []
+    for (flows, _), seed, msgs in zip(expanded, entropy_seeds,
+                                      messages_batch):
         _check_flows(flows, topo.n_hosts)
         arrs.append(_flow_arrays(flows, cfg, entropy_seed=seed))
+        arrivals.append(_arrival_array(msgs))
     lb_codes = [LB_MODES.index(m) for m in lb_modes]
     BP = _job_bucket(B)
     if BP > B:
         arrs = arrs + [arrs[0]] * (BP - B)
+        arrivals = arrivals + [arrivals[0]] * (BP - B)
         lb_codes = lb_codes + [lb_codes[0]] * (BP - B)
     srcs = jnp.stack([a[0] for a in arrs])
     dsts = jnp.stack([a[1] for a in arrs])
     pkts = jnp.stack([a[2] for a in arrs])
     tails = jnp.stack([a[3] for a in arrs])
     ents = jnp.stack([a[4] for a in arrs])
+    arrv = jnp.stack(arrivals)
     lbs = jnp.asarray(lb_codes, jnp.int32)
     prog = _get_program(topo, int(srcs.shape[1]), n_ticks, cfg, dep)
-    finals, stacked = prog.jit_batch(srcs, dsts, pkts, tails, ents, lbs)
+    finals, stacked = prog.jit_batch(srcs, dsts, pkts, tails, ents, lbs,
+                                     arrv)
     # one transfer for the finals + one for any stacked trace (the old
     # per-entry gather re-pulled the full batch B times)
+    proto, _, _, _ = _make_protocol(cfg)
     fin_all = _final_host(finals)
+    fin_all["retx"] = jax.device_get(proto.stat_retx(finals.flows))
     stacked = jax.device_get(dict(stacked))
     per_entry = []
     for i in range(B):
@@ -2284,6 +2364,17 @@ def summarize(metrics: dict) -> dict:
         "drops": int(np.asarray(metrics["drops"]).reshape(-1)[-1]),
         "pauses": int(np.asarray(metrics["pauses"]).reshape(-1)[-1]),
     }
+    # observatory counters (absent on legacy/partial metrics dicts)
+    if "ecn_marks" in metrics:
+        out["ecn_marks"] = int(metrics["ecn_marks"])
+    if "retransmits" in metrics:
+        out["retransmits"] = int(metrics["retransmits"])
+    qhi = metrics.get("qdepth_hi_pkts")
+    if qhi is not None:
+        qhi = np.asarray(qhi)
+        out["qdepth_max_pkts"] = int(qhi.max()) if qhi.size else 0
+        out["qdepth_p99_pkts"] = (float(np.percentile(qhi, 99))
+                                  if qhi.size else 0.0)
     gd = metrics.get("group_done_us")
     if gd is not None:
         gids = metrics.get("group_ids", tuple(range(len(gd))))
@@ -2293,4 +2384,26 @@ def summarize(metrics: dict) -> dict:
                                       if group_fct else float("nan"))
         out["finished_groups"] = len(group_fct)
         out["total_groups"] = len(gd)
+    # per-tenant (per original group id) FCT attribution: percentiles over
+    # the message-level FCTs of each group
+    mgids = metrics.get("msg_group_ids")
+    if mgids is not None:
+        by_g: dict = {}
+        for g, f in zip(mgids, metrics["fct_us"]):
+            by_g.setdefault(g, []).append(f)
+        tenant = {}
+        for g, fs in by_g.items():
+            done = [f for f in fs if f is not None]
+            row = {"count": len(fs),
+                   "unfinished": len(fs) - len(done)}
+            if done:
+                arr = np.asarray(done, dtype=np.float64)
+                row.update(p50=float(np.percentile(arr, 50)),
+                           p99=float(np.percentile(arr, 99)),
+                           avg=float(arr.mean()), max=float(arr.max()))
+            else:
+                row.update(p50=float("nan"), p99=float("nan"),
+                           avg=float("nan"), max=float("nan"))
+            tenant[g] = row
+        out["tenant_fct"] = tenant
     return out

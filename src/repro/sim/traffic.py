@@ -1,0 +1,359 @@
+"""Multi-tenant traffic generator + soak driver (the observatory's feed).
+
+The paper's headline claims are about *sustained* operation of a shared
+fabric: overlapping training jobs (collectives with dependency chains)
+contending with bursty inference/incast traffic.  This module generates
+that mix as ordinary :class:`~repro.sim.workloads.Message` traces — so
+both backends run it unchanged — and drives long-horizon soaks by
+chaining ``run()`` epochs on the warp fabric.
+
+Determinism: every random draw comes from a counter-based splitmix64
+stream keyed by ``(seed, tenant, epoch, flow, channel)``.  No host
+randomness, no hidden state — the same ``(spec, seed, epoch)`` always
+emits the bit-identical trace, and a different seed reshuffles arrivals
+and placements without touching the trace *structure* (message count,
+dependency edges, groups).  Structure invariance across epochs is what
+lets every soak epoch reuse ONE compiled fabric program: src/dst, sizes
+and arrival ticks are program *data*.
+
+Tenants:
+
+  * :class:`TrainingJob` — ``steps`` chained collective instances
+    (ring / dbt / hd / a2a via ``repro.collective.algorithms``) on a
+    placement that stays fixed across epochs (``multi_job(hosts=...)``
+    reuse), entering the fabric at ``start_tick`` (the ``arrival``
+    field; dependency edges chain step ``s`` on step ``s-1``).
+  * :class:`InferenceTenant` — open-loop incast-style load: ``n_flows``
+    small messages per epoch with Poisson-style interarrival ticks
+    (inverse-CDF exponential on splitmix64 uniforms) into a small set
+    of frontend target hosts.
+
+Each tenant is one ``group``, so the fabric's ``summarize`` attributes
+FCT percentiles per tenant (``tenant_fct``), and :func:`soak` folds the
+per-epoch counters (drops, pauses, ECN marks, retransmits, queue depth)
+into a :class:`~repro.obs.metrics.MetricsRegistry` for the Prometheus
+exporter.  See docs/observatory.md.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.params import NetworkSpec
+from .topology import FatTree
+from .workloads import Message, RunConfig, Scenario, run
+
+# --------------------------------------------------------------------------- #
+# Counter-based PRNG: splitmix64 over a (seed, *counters) key
+# --------------------------------------------------------------------------- #
+
+_MASK64 = (1 << 64) - 1
+_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def splitmix64(x: int) -> int:
+    """One splitmix64 output step (Steele et al.): u64 -> u64."""
+    x = (x + _GOLDEN) & _MASK64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return (z ^ (z >> 31)) & _MASK64
+
+
+def _u64(seed: int, *counters: int) -> int:
+    """Stateless draw: hash the (seed, counters...) key path."""
+    state = splitmix64(seed & _MASK64)
+    for c in counters:
+        state = splitmix64(state ^ ((c & _MASK64) * _GOLDEN & _MASK64))
+    return state
+
+
+def _u01(seed: int, *counters: int) -> float:
+    """Uniform in [0, 1) with 53 usable bits."""
+    return (_u64(seed, *counters) >> 11) / float(1 << 53)
+
+
+def _shuffled(n: int, seed: int, *counters: int) -> List[int]:
+    """Deterministic Fisher-Yates permutation of range(n)."""
+    out = list(range(n))
+    for i in range(n - 1, 0, -1):
+        j = _u64(seed, *counters, i) % (i + 1)
+        out[i], out[j] = out[j], out[i]
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Tenant specs
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class TrainingJob:
+    """One training tenant: ``steps`` chained collectives on a fixed
+    placement.  ``algo_kw`` is a tuple of (key, value) pairs (hashable)
+    passed to the collective generator (e.g. ``(("chunk", 32768),)``).
+    ``hosts`` pins the placement explicitly; None lets the generator
+    carve a disjoint slice of the (seed-shuffled) host list."""
+
+    name: str
+    algo: str = "ring"
+    ranks: int = 8
+    collective_bytes: float = 256 * 2 ** 10
+    steps: int = 1
+    start_tick: int = 0
+    algo_kw: Tuple[Tuple[str, object], ...] = ()
+    hosts: Optional[Tuple[int, ...]] = None
+
+
+@dataclass(frozen=True)
+class InferenceTenant:
+    """Open-loop bursty tenant: ``n_flows`` messages per epoch with
+    exponential (Poisson-process) interarrival ticks into ``n_targets``
+    frontend hosts.  ``size_jitter`` scales each message's size by a
+    uniform factor in [1-j, 1+j]."""
+
+    name: str
+    n_flows: int = 64
+    mean_interarrival_ticks: float = 8.0
+    size_bytes: float = 16 * 2 ** 10
+    size_jitter: float = 0.0
+    n_targets: int = 1
+    targets: Optional[Tuple[int, ...]] = None
+    start_tick: int = 0
+
+
+# --------------------------------------------------------------------------- #
+# The generator
+# --------------------------------------------------------------------------- #
+
+def _job_messages(job: TrainingJob, tenant_idx: int, job_hosts: Sequence[int],
+                  n_hosts: int, mid_base: int) -> List[Message]:
+    from ..collective.algorithms import multi_job  # cycle: algorithms ← sim
+    msgs, placement = multi_job(job.algo, 1, job.ranks, n_hosts,
+                                job.collective_bytes, hosts=list(job_hosts),
+                                **dict(job.algo_kw))
+    per_step = len(msgs)
+    out: List[Message] = []
+    for s in range(job.steps):
+        base = mid_base + s * per_step
+        prev = mid_base + (s - 1) * per_step
+        for m in msgs:
+            deps = tuple(d + base for d in m.deps)
+            if s > 0:
+                # chain the steps: each message also waits for its
+                # same-index message of the previous step
+                deps = deps + (prev + m.mid,)
+            out.append(Message(
+                mid=base + m.mid, src=placement[m.src],
+                dst=placement[m.dst], size=m.size, deps=deps,
+                group=tenant_idx, arrival=job.start_tick))
+    return out
+
+
+def _burst_messages(ten: InferenceTenant, tenant_idx: int,
+                    targets: Sequence[int], n_hosts: int, mid_base: int,
+                    seed: int, epoch: int) -> List[Message]:
+    out: List[Message] = []
+    t = float(ten.start_tick)
+    for k in range(ten.n_flows):
+        u = _u01(seed, tenant_idx, epoch, k, 0)
+        # inverse-CDF exponential, clamped to >= 1 tick so arrivals
+        # strictly advance (an open-loop process, never a thundering herd
+        # at tick 0 unless the mean asks for it)
+        t += max(1.0, round(-ten.mean_interarrival_ticks
+                            * math.log(1.0 - u)))
+        dst = targets[_u64(seed, tenant_idx, epoch, k, 1) % len(targets)]
+        src = _u64(seed, tenant_idx, epoch, k, 2) % n_hosts
+        if src == dst:
+            src = (src + 1) % n_hosts
+        size = ten.size_bytes
+        if ten.size_jitter:
+            j = ten.size_jitter * (2.0 * _u01(seed, tenant_idx, epoch,
+                                              k, 3) - 1.0)
+            size = max(1.0, size * (1.0 + j))
+        out.append(Message(mid=mid_base + k, src=src, dst=dst,
+                           size=float(size), group=tenant_idx,
+                           arrival=int(t)))
+    return out
+
+
+def mixed_scenario(topo: FatTree, jobs: Sequence[TrainingJob],
+                   tenants: Sequence[InferenceTenant],
+                   net: Optional[NetworkSpec] = None, seed: int = 0,
+                   epoch: int = 0) -> Tuple[Scenario, Dict[int, str]]:
+    """One epoch of the multi-tenant mix as a Scenario.
+
+    Returns ``(scenario, tenant_of_group)`` where group ``g`` in the
+    scenario (and in ``summarize()['tenant_fct']``) belongs to tenant
+    ``tenant_of_group[g]``.  Placements and targets depend only on
+    ``seed`` (stable across epochs — the placement-reuse contract);
+    burst arrivals, sources and sizes depend on ``(seed, epoch)``; the
+    trace *structure* (message count, deps, groups) depends on neither,
+    so every epoch of a soak compiles to the same fabric program.
+    """
+    net = net or NetworkSpec()
+    names = [j.name for j in jobs] + [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    # seed-keyed placement pool; jobs take disjoint slices off the front,
+    # burst targets come off the back so frontends avoid the job ranks
+    # when capacity allows
+    pool = _shuffled(topo.n_hosts, seed, 0)
+    cursor = 0
+    messages: List[Message] = []
+    tenant_of_group: Dict[int, str] = {}
+    for g, job in enumerate(jobs):
+        if job.hosts is not None:
+            job_hosts = list(job.hosts)
+        else:
+            if cursor + job.ranks > topo.n_hosts:
+                raise ValueError(f"job {job.name!r}: not enough hosts "
+                                 f"({cursor + job.ranks} needed, "
+                                 f"{topo.n_hosts} available)")
+            job_hosts = pool[cursor:cursor + job.ranks]
+            cursor += job.ranks
+        messages += _job_messages(job, g, job_hosts, topo.n_hosts,
+                                  len(messages))
+        tenant_of_group[g] = job.name
+    back = topo.n_hosts
+    for i, ten in enumerate(tenants):
+        g = len(jobs) + i
+        if ten.targets is not None:
+            targets = list(ten.targets)
+        else:
+            n_t = max(1, min(ten.n_targets, topo.n_hosts))
+            targets = pool[max(cursor, back - n_t):back]
+            targets = targets or pool[-n_t:]
+            back = max(cursor, back - n_t)
+        messages += _burst_messages(ten, g, targets, topo.n_hosts,
+                                    len(messages), seed, epoch)
+        tenant_of_group[g] = ten.name
+    sc = Scenario(name=f"mixed_s{seed}e{epoch}", topo=topo, net=net,
+                  messages=tuple(messages))
+    return sc, tenant_of_group
+
+
+# --------------------------------------------------------------------------- #
+# The soak driver: chained run() epochs, carried counters
+# --------------------------------------------------------------------------- #
+
+_COUNTERS = ("drops", "pauses", "ecn_marks", "retransmits")
+
+
+def record_epoch(reg, res: dict, tenant_of_group: Dict[int, str]) -> None:
+    """Fold one epoch's summary into a MetricsRegistry (strack_* names;
+    catalogue in docs/observatory.md)."""
+    reg.declare("strack_epochs_total", "soak epochs completed", "counter")
+    reg.inc("strack_epochs_total")
+    for key in _COUNTERS:
+        reg.declare(f"strack_{key}_total",
+                    f"fabric {key.replace('_', ' ')} across epochs",
+                    "counter")
+        reg.inc(f"strack_{key}_total", float(res.get(key, 0)))
+    reg.declare("strack_unfinished", "messages unfinished in the last "
+                "epoch (0 = every epoch drained)", "gauge")
+    reg.set("strack_unfinished", float(res.get("unfinished", 0)))
+    reg.declare("strack_qdepth_max_pkts",
+                "deepest switch queue of the last epoch (packets)",
+                "gauge")
+    reg.declare("strack_qdepth_p99_pkts",
+                "p99 over queues of per-queue max depth, last epoch",
+                "gauge")
+    reg.set("strack_qdepth_max_pkts", float(res.get("qdepth_max_pkts", 0)))
+    reg.set("strack_qdepth_p99_pkts", float(res.get("qdepth_p99_pkts", 0)))
+    reg.declare("strack_fct_us", "per-tenant FCT percentiles of the last "
+                "epoch (us)", "gauge")
+    reg.declare("strack_messages_total", "messages finished per tenant",
+                "counter")
+    for g, row in (res.get("tenant_fct") or {}).items():
+        tenant = tenant_of_group.get(g, str(g))
+        for q in ("p50", "p99", "avg", "max"):
+            v = row.get(q, float("nan"))
+            reg.set("strack_fct_us", v, tenant=tenant, quantile=q)
+        reg.inc("strack_messages_total",
+                float(row["count"] - row["unfinished"]), tenant=tenant)
+
+
+def soak(topo: FatTree, jobs: Sequence[TrainingJob],
+         tenants: Sequence[InferenceTenant], epochs: int = 10,
+         net: Optional[NetworkSpec] = None, seed: int = 0,
+         cfg: Optional[RunConfig] = None, n_ticks: Optional[int] = None,
+         registry=None, out_path: Optional[str] = None,
+         verbose: bool = False) -> dict:
+    """Long-horizon mixed-workload soak: ``epochs`` chained ``run()``
+    segments on the warp fabric, counters carried across epochs.
+
+    Every epoch re-samples the open-loop burst arrivals (epoch-keyed
+    PRNG streams) but keeps the trace structure and tick horizon fixed,
+    so the fabric compiles ONE program for the whole soak (asserted by
+    the returned ``program_builds``).  ``registry`` (a
+    :class:`~repro.obs.metrics.MetricsRegistry`) accumulates Prometheus
+    metrics per epoch; ``out_path`` additionally dumps the rendered
+    exposition after every epoch (so an exporter serving the file shows
+    the soak live) and at the end.
+    """
+    from . import fabric
+    net = net or NetworkSpec()
+    cfg = cfg or RunConfig()
+    if cfg.backend != "fabric":
+        raise ValueError("soak() drives the warp fabric; use run() "
+                         "directly for one-shot oracle runs")
+    epochs = int(epochs)
+    if epochs < 1:
+        raise ValueError("epochs must be >= 1")
+    scs = [mixed_scenario(topo, jobs, tenants, net=net, seed=seed, epoch=e)
+           for e in range(epochs)]
+    if n_ticks is None:
+        # one fixed horizon covering every epoch's arrivals + critical
+        # path — a fixed horizon is what keeps the program cacheable
+        n_ticks = max(sc.default_ticks() for sc, _ in scs)
+    cfg = replace(cfg, n_ticks=int(n_ticks))
+    totals = {k: 0 for k in _COUNTERS}
+    totals["unfinished"] = 0
+    totals["messages"] = 0
+    per_tenant: Dict[str, dict] = {}
+    epoch_rows: List[dict] = []
+    builds0 = fabric.program_builds
+    tenant_of_group: Dict[int, str] = {}
+    for e, (sc, tenant_of_group) in enumerate(scs):
+        res = run(sc, cfg)
+        for k in _COUNTERS:
+            totals[k] += int(res.get(k, 0))
+        totals["unfinished"] += int(res["unfinished"])
+        totals["messages"] += len(sc.messages)
+        row = {"epoch": e, "max_fct_us": res["max_fct"],
+               "unfinished": res["unfinished"],
+               **{k: int(res.get(k, 0)) for k in _COUNTERS},
+               "qdepth_max_pkts": res.get("qdepth_max_pkts", 0)}
+        epoch_rows.append(row)
+        for g, trow in (res.get("tenant_fct") or {}).items():
+            name = tenant_of_group.get(g, str(g))
+            agg = per_tenant.setdefault(
+                name, {"count": 0, "unfinished": 0, "p99_worst": 0.0,
+                       "max": 0.0, "p50_last": float("nan")})
+            agg["count"] += trow["count"]
+            agg["unfinished"] += trow["unfinished"]
+            if trow["p99"] == trow["p99"]:          # not NaN
+                agg["p99_worst"] = max(agg["p99_worst"], trow["p99"])
+                agg["max"] = max(agg["max"], trow["max"])
+                agg["p50_last"] = trow["p50"]
+        if registry is not None:
+            record_epoch(registry, res, tenant_of_group)
+            if out_path:
+                from ..obs.metrics import render_prometheus
+                with open(out_path, "w") as f:
+                    f.write(render_prometheus(registry))
+        if verbose:
+            print(f"soak[{e + 1}/{epochs}]: max_fct {res['max_fct']:.1f}us"
+                  f", drops {row['drops']}, pauses {row['pauses']}, ecn "
+                  f"{row['ecn_marks']}, retx {row['retransmits']}, "
+                  f"unfinished {res['unfinished']}")
+    return {
+        "epochs": epochs,
+        "n_ticks": int(n_ticks),
+        "totals": totals,
+        "per_tenant": per_tenant,
+        "tenant_of_group": tenant_of_group,
+        "epoch_rows": epoch_rows,
+        "program_builds": fabric.program_builds - builds0,
+    }

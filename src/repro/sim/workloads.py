@@ -35,11 +35,11 @@ so results are directly comparable — the parity gates in
 ``tests/test_fabric*.py`` and ``tests/test_collective_fabric.py`` rely on
 that.
 
-Legacy entry points (``run_on_fabric`` / ``run_seed_sweep_on_fabric`` /
-``run_on_events`` / ``run_permutation`` / ``run_incast``) remain as thin
-deprecation shims over ``run()``/``sweep()``; see docs/experiments.md for
-the migration table.  :class:`TraceRunner` is the event-backend dependency
-scheduler (also the parity oracle for the fabric's).
+:class:`TraceRunner` is the event-backend dependency scheduler (also the
+parity oracle for the fabric's); ``run_scenario_on_sim`` runs a scenario
+on a prebuilt NetSim when custom oracle wiring (queue logs, link
+failures) is needed.  The PR 3 deprecation shims are gone — see
+docs/experiments.md for the run()/sweep() migration table.
 """
 from __future__ import annotations
 
@@ -80,6 +80,13 @@ class Message:
     complete before this message may launch (paper Section 4.3 trace
     semantics); ``group`` tags which collective instance the message
     belongs to.  A plain flow is a ``Message`` with no deps.
+
+    ``arrival`` is the earliest tick the message may launch even once its
+    deps are met — the open-loop knob the multi-tenant traffic generator
+    (``sim/traffic.py``) uses for staggered job starts and Poisson-style
+    burst arrivals.  0 (the default) preserves the closed-loop semantics.
+    On the events backend it converts to microseconds via the scenario
+    network's ``mtu_serialize_us`` (one fabric tick = one MTU slot).
     """
 
     mid: int
@@ -88,6 +95,7 @@ class Message:
     size: float
     deps: Tuple[int, ...] = ()
     group: int = 0
+    arrival: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "deps", tuple(self.deps))
@@ -178,6 +186,9 @@ class Scenario:
                 visiting.discard(mid)
                 base = max((depth[d] for d in by_mid[mid].deps
                             if d in depth), default=0.0)
+                # an arrival tick can hold a message past its deps: the
+                # critical path through it starts no earlier than that
+                base = max(base, float(by_mid[mid].arrival))
                 depth[mid] = base + pkts[mid] + rtt_ticks
         crit = max(depth.values()) if depth else 1.0
         return int(4 * max(bottleneck, crit) + 30 * rtt_ticks + 1000)
@@ -253,7 +264,8 @@ def collective_scenario(topo: FatTree, algo: str, n_jobs: int,
         topo=topo, net=net,
         messages=tuple(Message(mid=m.mid, src=placement[m.src],
                                dst=placement[m.dst], size=m.size,
-                               deps=tuple(m.deps), group=m.group)
+                               deps=tuple(m.deps), group=m.group,
+                               arrival=m.arrival)
                        for m in msgs))
 
 
@@ -601,8 +613,11 @@ class TraceRunner:
         sim.on_flow_done = self._on_flow_done
 
     def _launch(self, m: Message, now: float):
+        # honour the open-loop arrival tick: one fabric tick = one MTU
+        # serialisation slot, so arrival converts via mtu_serialize_us
+        start = max(now, m.arrival * self.sim.net.mtu_serialize_us)
         fl = self.sim.add_flow(self.placement[m.src], self.placement[m.dst],
-                               m.size, start_ts=now, meta=m.mid)
+                               m.size, start_ts=start, meta=m.mid)
         self.flow_to_msg[fl.id] = m.mid
 
     def _on_flow_done(self, fl, now: float):
@@ -625,6 +640,9 @@ class TraceRunner:
                 self._launch(m, 0.0)
         self.sim.run(until=until)
         finished = len(self.group_done_ts)
+        msg_fct = {mid: fl.fct for fl in self.sim.flows.values()
+                   if (mid := self.flow_to_msg.get(fl.id)) is not None
+                   and fl.fct is not None}
         return {
             "group_fct": dict(self.group_done_ts),
             "max_collective_time": (max(self.group_done_ts.values())
@@ -633,56 +651,13 @@ class TraceRunner:
             "total_groups": len(self.group_msgs) if self.group_msgs else 0,
             "drops": self.sim.total_drops,
             "pauses": len(self.sim.pause_log),
+            "msg_fct": msg_fct,
         }
 
 
 # --------------------------------------------------------------------------- #
-# Deprecated shims — thin wrappers over run()/sweep() (docs/experiments.md)
+# Prebuilt-sim entry point (custom oracle wiring: queue logs, failures)
 # --------------------------------------------------------------------------- #
-
-def run_on_fabric(sc: Scenario, n_ticks: Optional[int] = None,
-                  lb_mode: str = "adaptive", max_paths: int = 64,
-                  protocol: str = "strack", pfc: Optional[bool] = None,
-                  switch_buffer_bytes: Optional[float] = None,
-                  roce_entropy_seed: Optional[int] = None,
-                  trace_queues: bool = False,
-                  qdelay_threshold_us: float = 8.0) -> dict:
-    """Deprecated: use ``run(sc, RunConfig(backend="fabric", ...))``."""
-    return run(sc, RunConfig(
-        backend="fabric", protocol=protocol, lb_mode=lb_mode,
-        max_paths=max_paths, pfc=pfc, n_ticks=n_ticks,
-        switch_buffer_bytes=switch_buffer_bytes,
-        roce_entropy_seed=roce_entropy_seed, trace_queues=trace_queues,
-        qdelay_threshold_us=qdelay_threshold_us))
-
-
-def run_seed_sweep_on_fabric(scenarios: Sequence[Scenario],
-                             n_ticks: Optional[int] = None,
-                             lb_mode: str = "adaptive", max_paths: int = 64,
-                             protocol: str = "strack",
-                             pfc: Optional[bool] = None,
-                             switch_buffer_bytes: Optional[float] = None,
-                             roce_entropy_seed: Optional[int] = None,
-                             trace_queues: bool = False,
-                             qdelay_threshold_us: float = 8.0) -> list:
-    """Deprecated: use ``sweep(scenarios, RunConfig(...))``."""
-    return sweep(scenarios, RunConfig(
-        backend="fabric", protocol=protocol, lb_mode=lb_mode,
-        max_paths=max_paths, pfc=pfc, n_ticks=n_ticks,
-        switch_buffer_bytes=switch_buffer_bytes,
-        roce_entropy_seed=roce_entropy_seed, trace_queues=trace_queues,
-        qdelay_threshold_us=qdelay_threshold_us))
-
-
-def run_on_events(sc: Scenario, transport: str = "strack",
-                  until: float = 1e9, **netsim_kw) -> dict:
-    """Deprecated: use ``run(sc, RunConfig(backend="events", ...))``."""
-    seed = netsim_kw.pop("seed", 1234)
-    cfg = RunConfig(backend="events",
-                    protocol="rocev2" if transport == "roce" else transport,
-                    until=until, seed=seed)
-    return _run_events_backend(sc, cfg, **netsim_kw)
-
 
 def run_scenario_on_sim(sim: NetSim, sc: Scenario,
                         until: float = 1e9) -> dict:
@@ -694,31 +669,11 @@ def run_scenario_on_sim(sim: NetSim, sc: Scenario,
         res = TraceRunner(sim, list(sc.messages), placement).run(until=until)
         out = {**_summarize_sim(sim), **res}
     else:
-        for s, d, b in sc.flows:
-            sim.add_flow(s, d, b)
+        for m in sc.messages:
+            sim.add_flow(m.src, m.dst, m.size,
+                         start_ts=m.arrival * sim.net.mtu_serialize_us)
         sim.run(until=until)
         out = _summarize_sim(sim)
     out["backend"] = "events"
     out["name"] = sc.name
     return out
-
-
-def run_permutation(sim: NetSim, msg_bytes: float, seed: int = 0,
-                    until: float = 1e9) -> dict:
-    """Deprecated legacy NetSim entry point (prebuilt sim)."""
-    pairs = permutation_pairs(sim.topo.n_hosts, seed)
-    for s, d in pairs:
-        sim.add_flow(s, d, msg_bytes)
-    sim.run(until=until)
-    return _summarize_sim(sim)
-
-
-def run_incast(sim: NetSim, fan_in: int, msg_bytes: float, dst: int = 0,
-               until: float = 1e9, seed: int = 0) -> dict:
-    """Deprecated legacy NetSim entry point (prebuilt sim)."""
-    sc = incast_scenario(sim.topo, fan_in, msg_bytes, dst=dst, seed=seed,
-                         net=sim.net)
-    for s, d, b in sc.flows:
-        sim.add_flow(s, d, b)
-    sim.run(until=until)
-    return _summarize_sim(sim)

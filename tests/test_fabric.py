@@ -12,8 +12,8 @@ from repro.sim.fabric import (ArrayTopo, FabricConfig, ecmp_mix, run_fabric,
 
 pytestmark = pytest.mark.tier1
 from repro.sim.topology import FatTree, full_bisection
-from repro.sim.workloads import (incast_scenario, permutation_scenario,
-                                 run_on_events, run_on_fabric)
+from repro.sim.workloads import (RunConfig, incast_scenario,
+                                 permutation_scenario, run)
 
 NET = NetworkSpec(link_gbps=400.0)
 TOPO44 = full_bisection(4, 4)        # 16 hosts, 4 ToRs, 4 spines
@@ -37,8 +37,8 @@ def _fct_ratio(fabric_res, events_res):
 def test_incast_parity_vs_oracle():
     """8->1 incast, 512KB: drops happen on both backends and FCTs agree."""
     sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
-    ev = run_on_events(sc, transport="strack", until=2e6)
-    fb = run_on_fabric(sc)
+    ev = run(sc, RunConfig(backend="events", until=2e6))
+    fb = run(sc, RunConfig())
     assert ev["unfinished"] == 0 and fb["unfinished"] == 0
     r = _fct_ratio(fb, ev)
     assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
@@ -51,8 +51,8 @@ def test_incast_parity_vs_oracle():
 def test_permutation_parity_vs_oracle():
     """16-host permutation, 256KB: full-bisection fabric, no drops."""
     sc = permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET, seed=0)
-    ev = run_on_events(sc, transport="strack", until=1e6)
-    fb = run_on_fabric(sc)
+    ev = run(sc, RunConfig(backend="events", until=1e6))
+    fb = run(sc, RunConfig())
     assert ev["unfinished"] == 0 and fb["unfinished"] == 0
     r = _fct_ratio(fb, ev)
     assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])

@@ -18,8 +18,8 @@ from repro.sim.dcqcn_fab import (RoceMsg, init_roce_flow, init_roce_rcv,
                                  roce_on_data, roce_on_timer)
 from repro.sim.fabric import FabricConfig, pfc_gate, run_fabric, summarize
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import (incast_scenario, permutation_scenario,
-                                 run_on_events, run_on_fabric)
+from repro.sim.workloads import (RunConfig, incast_scenario,
+                                 permutation_scenario, run)
 
 pytestmark = pytest.mark.tier1
 
@@ -49,10 +49,10 @@ def test_incast_roce_parity_vs_oracle():
     """8->1 incast, 512KB, lossless: FCTs agree, zero drops, PFC pauses
     fire on both backends."""
     sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
-    ev = run_on_events(sc, transport="roce", until=2e6, seed=SEED,
-                       switch_buffer_bytes=BUF)
-    fb = run_on_fabric(sc, protocol="rocev2", switch_buffer_bytes=BUF,
-                       roce_entropy_seed=SEED)
+    ev = run(sc, RunConfig(backend="events", protocol="rocev2", until=2e6,
+                           seed=SEED, switch_buffer_bytes=BUF))
+    fb = run(sc, RunConfig(protocol="rocev2", switch_buffer_bytes=BUF,
+                           roce_entropy_seed=SEED))
     assert ev["unfinished"] == 0 and fb["unfinished"] == 0
     r = fb["max_fct"] / ev["max_fct"]
     assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
@@ -66,10 +66,10 @@ def test_permutation_roce_parity_vs_oracle():
     """16-host permutation, 256KB: single-path DCQCN flows collide on the
     same ECMP uplinks on both backends; FCTs agree, nothing dropped."""
     sc = permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET, seed=0)
-    ev = run_on_events(sc, transport="roce", until=1e6, seed=SEED,
-                       switch_buffer_bytes=2e6)
-    fb = run_on_fabric(sc, protocol="rocev2", switch_buffer_bytes=2e6,
-                       roce_entropy_seed=SEED)
+    ev = run(sc, RunConfig(backend="events", protocol="rocev2", until=1e6,
+                           seed=SEED, switch_buffer_bytes=2e6))
+    fb = run(sc, RunConfig(protocol="rocev2", switch_buffer_bytes=2e6,
+                           roce_entropy_seed=SEED))
     assert ev["unfinished"] == 0 and fb["unfinished"] == 0
     r = fb["max_fct"] / ev["max_fct"]
     assert FCT_TOL[0] < r < FCT_TOL[1], (fb["max_fct"], ev["max_fct"])
@@ -80,12 +80,12 @@ def test_summary_contract_reports_real_pauses():
     """summarize() carries the oracle's summary-dict contract, with real
     pause counts from the PFC model (not the old hardcoded 0)."""
     sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
-    fb = run_on_fabric(sc, protocol="rocev2", switch_buffer_bytes=BUF)
+    fb = run(sc, RunConfig(protocol="rocev2", switch_buffer_bytes=BUF))
     assert set(fb) >= {"max_fct", "avg_fct", "unfinished", "drops",
                        "pauses", "backend"}
     assert fb["pauses"] > 0
     # lossy STrack on the same scenario: no PFC, pauses must stay 0
-    st = run_on_fabric(sc)
+    st = run(sc, RunConfig())
     assert st["pauses"] == 0
 
 
@@ -127,10 +127,10 @@ def test_lossy_vs_lossless_rocev2():
     """pfc=False turns the same RoCEv2 run lossy: go-back-N now has to
     recover real drops, which PFC mode never sees."""
     sc = incast_scenario(TOPO44, 8, 512 * 2 ** 10, net=NET)
-    lossless = run_on_fabric(sc, protocol="rocev2",
-                             switch_buffer_bytes=BUF)
-    lossy = run_on_fabric(sc, protocol="rocev2", pfc=False,
-                          n_ticks=30000)
+    lossless = run(sc, RunConfig(protocol="rocev2",
+                                 switch_buffer_bytes=BUF))
+    lossy = run(sc, RunConfig(protocol="rocev2", pfc=False,
+                              n_ticks=30000))
     assert lossless["drops"] == 0 and lossless["unfinished"] == 0
     assert lossy["pauses"] == 0
     assert lossy["drops"] > 0, "8:1 incast into a 5-BDP tail-drop queue " \

@@ -6,7 +6,8 @@ from repro.collective.algorithms import multi_job
 from repro.core.params import NetworkSpec
 from repro.sim.events import NetSim
 from repro.sim.topology import full_bisection, with_link_failures
-from repro.sim.workloads import TraceRunner, run_incast, run_permutation
+from repro.sim.workloads import (TraceRunner, incast_scenario,
+                                 permutation_scenario, run_scenario_on_sim)
 
 
 NET = NetworkSpec(link_gbps=400.0)
@@ -17,7 +18,8 @@ def test_permutation_strack_beats_roce():
     fct = {}
     for tr in ("strack", "roce"):
         sim = NetSim(full_bisection(4, 4), NET, transport=tr, seed=1)
-        fct[tr] = run_permutation(sim, msg, until=1e6)["max_fct"]
+        sc = permutation_scenario(sim.topo, msg, net=NET)
+        fct[tr] = run_scenario_on_sim(sim, sc, until=1e6)["max_fct"]
     assert fct["strack"] < fct["roce"]
 
 
@@ -25,7 +27,8 @@ def test_permutation_all_complete_with_link_failures():
     topo = with_link_failures(full_bisection(4, 4), n_failed=4,
                               n_tors_affected=2, seed=3)
     sim = NetSim(topo, NET, transport="strack", seed=1)
-    res = run_permutation(sim, 512 * 2 ** 10, until=1e6)
+    sc = permutation_scenario(sim.topo, 512 * 2 ** 10, net=NET)
+    res = run_scenario_on_sim(sim, sc, until=1e6)
     assert res["unfinished"] == 0
 
 
@@ -34,7 +37,8 @@ def test_incast_parity_lossy_vs_lossless():
     fct = {}
     for tr in ("strack", "roce"):
         sim = NetSim(full_bisection(4, 4), NET, transport=tr, seed=0)
-        r = run_incast(sim, 8, 2 * 2 ** 20, until=4e6, seed=0)
+        sc = incast_scenario(sim.topo, 8, 2 * 2 ** 20, net=NET, seed=0)
+        r = run_scenario_on_sim(sim, sc, until=4e6)
         assert r["unfinished"] == 0
         fct[tr] = r["max_fct"]
     assert fct["strack"] < 1.5 * fct["roce"], fct
@@ -42,10 +46,11 @@ def test_incast_parity_lossy_vs_lossless():
 
 def test_strack_drops_recovered_roce_lossless():
     sim = NetSim(full_bisection(4, 4), NET, transport="strack", seed=0)
-    r = run_incast(sim, 8, 2 * 2 ** 20, until=4e6, seed=0)
+    sc = incast_scenario(sim.topo, 8, 2 * 2 ** 20, net=NET, seed=0)
+    r = run_scenario_on_sim(sim, sc, until=4e6)
     assert r["drops"] > 0 and r["unfinished"] == 0   # lossy but reliable
     sim = NetSim(full_bisection(4, 4), NET, transport="roce", seed=0)
-    r = run_incast(sim, 8, 2 * 2 ** 20, until=4e6, seed=0)
+    r = run_scenario_on_sim(sim, sc, until=4e6)
     assert r["drops"] == 0                            # PFC keeps it lossless
 
 
@@ -64,7 +69,8 @@ def test_ecn_signal_leads_rtt():
     """Fig 4: the first ECN-marked ACK precedes any measurable RTT rise."""
     sim = NetSim(full_bisection(4, 8), NET, transport="strack", seed=0)
     sim.ack_log = []
-    run_incast(sim, 16, 1 * 2 ** 20, until=2e6, seed=0)
+    run_scenario_on_sim(sim, incast_scenario(sim.topo, 16, 1 * 2 ** 20,
+                                             net=NET, seed=0), until=2e6)
     base = min(r for *_, r in sim.ack_log)
     t_ecn = next(t for t, _, e, _ in sim.ack_log if e)
     t_rtt = next((t for t, _, _, r in sim.ack_log if r > 1.5 * base),

@@ -1,0 +1,203 @@
+"""The observatory's workload generator + soak driver (sim/traffic.py):
+seed determinism, structure invariance across epochs, arrival semantics
+on both backends, per-tenant FCT attribution, and one-program soaks."""
+import numpy as np
+import pytest
+
+from repro.core.params import NetworkSpec
+from repro.sim.topology import full_bisection
+from repro.sim.traffic import (InferenceTenant, TrainingJob, _u01, _u64,
+                               mixed_scenario, soak, splitmix64)
+from repro.sim.workloads import Message, RunConfig, Scenario, run
+
+pytestmark = pytest.mark.tier1
+
+NET = NetworkSpec(link_gbps=400.0)
+TOPO44 = full_bisection(4, 4)        # 16 hosts, 4 ToRs, 4 spines
+
+JOBS = [
+    TrainingJob("job_ring", algo="ring", ranks=4,
+                collective_bytes=64 * 2 ** 10, steps=2),
+    TrainingJob("job_hd", algo="hd", ranks=4,
+                collective_bytes=64 * 2 ** 10, start_tick=50),
+]
+TENANTS = [
+    InferenceTenant("burst", n_flows=16, mean_interarrival_ticks=4.0,
+                    size_bytes=8 * 2 ** 10, size_jitter=0.5, n_targets=2),
+]
+
+
+def _mix(seed=3, epoch=0, jobs=JOBS, tenants=TENANTS, topo=TOPO44):
+    return mixed_scenario(topo, jobs, tenants, net=NET, seed=seed,
+                          epoch=epoch)
+
+
+# --------------------------------------------------------------------------- #
+# the counter PRNG + generator determinism
+# --------------------------------------------------------------------------- #
+
+def test_splitmix64_reference_values():
+    """Known-answer test against the reference splitmix64 stream from
+    seed 0 (Steele et al. / xoshiro.di.unimi.it reference code)."""
+    state, outs = 0, []
+    for _ in range(3):
+        state = (state + 0x9E3779B97F4A7C15) % 2 ** 64
+        outs.append(splitmix64(state - 0x9E3779B97F4A7C15))
+    assert outs == [0xE220A8397B1DCDAF, 0x6E789E6AA1B965F4,
+                    0x06C45D188009454F]
+
+
+def test_counter_prng_is_stateless_and_keyed():
+    assert _u64(1, 2, 3) == _u64(1, 2, 3)
+    assert _u64(1, 2, 3) != _u64(1, 3, 2)
+    assert _u64(1, 2, 3) != _u64(2, 2, 3)
+    us = [_u01(0, i) for i in range(1000)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert 0.4 < sum(us) / len(us) < 0.6
+
+
+def test_same_seed_bit_identical_trace():
+    sc_a, tog_a = _mix(seed=7)
+    sc_b, tog_b = _mix(seed=7)
+    assert sc_a.messages == sc_b.messages
+    assert tog_a == tog_b
+
+
+def test_different_seeds_distinct_arrivals_and_placement():
+    sc_a, _ = _mix(seed=7)
+    sc_b, _ = _mix(seed=8)
+    assert [m.arrival for m in sc_a.messages] != \
+        [m.arrival for m in sc_b.messages]
+    assert [(m.src, m.dst) for m in sc_a.messages] != \
+        [(m.src, m.dst) for m in sc_b.messages]
+
+
+def test_epochs_resample_data_but_not_structure():
+    """Epoch changes burst arrivals/sources/sizes (program data) while
+    the trace structure — the fabric's program-cache key — is frozen."""
+    sc0, _ = _mix(epoch=0)
+    sc1, _ = _mix(epoch=1)
+    assert [(m.mid, m.deps, m.group) for m in sc0.messages] == \
+        [(m.mid, m.deps, m.group) for m in sc1.messages]
+    assert [m.arrival for m in sc0.messages] != \
+        [m.arrival for m in sc1.messages]
+    # job placement (and so every job src/dst) is epoch-invariant
+    n_job_msgs = sum(1 for m in sc0.messages if m.group < len(JOBS))
+    assert [(m.src, m.dst) for m in sc0.messages[:n_job_msgs]] == \
+        [(m.src, m.dst) for m in sc1.messages[:n_job_msgs]]
+
+
+def test_burst_arrivals_are_open_loop():
+    sc, tog = _mix()
+    g = next(g for g, n in tog.items() if n == "burst")
+    arr = [m.arrival for m in sc.messages if m.group == g]
+    assert all(b > a for a, b in zip(arr, arr[1:])), \
+        "burst arrivals must strictly advance"
+    assert all(not m.deps for m in sc.messages if m.group == g)
+
+
+def test_default_ticks_covers_late_arrivals():
+    sc = Scenario(name="late", topo=TOPO44, net=NET, messages=(
+        Message(mid=0, src=0, dst=5, size=64 * 2 ** 10, arrival=50_000),))
+    assert sc.default_ticks() > 50_000
+
+
+# --------------------------------------------------------------------------- #
+# arrival semantics on the fabric: warp == dense, and oracle parity
+# --------------------------------------------------------------------------- #
+
+def test_arrival_warp_vs_dense_bit_exact():
+    sc, _ = _mix(seed=5)
+    dense = run(sc, RunConfig(time_warp=False))
+    warp = run(sc, RunConfig(time_warp=True))
+    for k in ("max_fct", "avg_fct", "unfinished", "drops", "pauses",
+              "max_collective_time", "finished_groups"):
+        assert dense[k] == warp[k] or (
+            dense[k] != dense[k] and warp[k] != warp[k]), (k, dense[k],
+                                                           warp[k])
+
+
+def test_arrival_fabric_vs_events_parity():
+    """A pure open-loop burst trace: both backends honour the arrival
+    schedule, so FCTs agree within the parity band."""
+    sc, _ = mixed_scenario(TOPO44, [], TENANTS, net=NET, seed=2)
+    fb = run(sc, RunConfig())
+    ev = run(sc, RunConfig(backend="events", until=1e7))
+    assert fb["unfinished"] == 0 and ev["unfinished"] == 0
+    r = fb["max_fct"] / ev["max_fct"]
+    assert 0.7 < r < 1.4, (fb["max_fct"], ev["max_fct"])
+
+
+def test_events_backend_reports_msg_fct():
+    sc, _ = _mix(seed=4)
+    ev = run(sc, RunConfig(backend="events", until=1e7))
+    assert set(ev["msg_fct"]) == {m.mid for m in sc.messages}
+    assert all(f > 0 for f in ev["msg_fct"].values())
+
+
+# --------------------------------------------------------------------------- #
+# per-tenant FCT attribution
+# --------------------------------------------------------------------------- #
+
+def test_tenant_fct_matches_solo_runs():
+    """Two single-ToR ring jobs on disjoint hosts never contend (one
+    message per host at a time, no shared queues), so each tenant's FCT
+    percentiles in the mixed run equal its solo run bit-exactly."""
+    job_a = TrainingJob("a", algo="ring", ranks=4,
+                        collective_bytes=64 * 2 ** 10,
+                        hosts=(0, 1, 2, 3))
+    job_b = TrainingJob("b", algo="ring", ranks=4,
+                        collective_bytes=64 * 2 ** 10,
+                        hosts=(4, 5, 6, 7))
+    mixed, tog = mixed_scenario(TOPO44, [job_a, job_b], [], net=NET,
+                                seed=0)
+    n_ticks = mixed.default_ticks()
+    cfg = RunConfig(n_ticks=n_ticks)
+    res = run(mixed, cfg)
+    assert res["unfinished"] == 0
+    for g, name in tog.items():
+        solo_sc, _ = mixed_scenario(
+            TOPO44, [job_a if name == "a" else job_b], [], net=NET, seed=0)
+        solo = run(solo_sc, cfg)
+        mrow, srow = res["tenant_fct"][g], solo["tenant_fct"][0]
+        assert mrow == srow, (name, mrow, srow)
+
+
+def test_tenant_fct_counts_every_message():
+    sc, tog = _mix(seed=9)
+    res = run(sc, RunConfig())
+    assert set(res["tenant_fct"]) == set(tog)
+    assert sum(r["count"] for r in res["tenant_fct"].values()) == \
+        len(sc.messages)
+    for row in res["tenant_fct"].values():
+        assert row["p50"] <= row["p99"] <= row["max"]
+
+
+# --------------------------------------------------------------------------- #
+# the soak driver
+# --------------------------------------------------------------------------- #
+
+def test_soak_reuses_one_program_and_carries_counters(tmp_path):
+    from repro.obs.metrics import MetricsRegistry, parse_prometheus
+    reg = MetricsRegistry()
+    out = tmp_path / "soak.prom"
+    res = soak(TOPO44, JOBS, TENANTS, epochs=2, net=NET, seed=3,
+               registry=reg, out_path=str(out))
+    # <= 1: the program cache is process-global, so an earlier test may
+    # have already compiled the structure-identical warp program
+    assert res["program_builds"] <= 1, \
+        "structure-identical epochs must share one compiled program"
+    assert res["totals"]["unfinished"] == 0
+    assert res["totals"]["messages"] == 2 * len(_mix()[0].messages)
+    assert len(res["epoch_rows"]) == 2
+    assert set(res["per_tenant"]) == {"job_ring", "job_hd", "burst"}
+    parsed = parse_prometheus(out.read_text())
+    assert parsed[("strack_epochs_total", ())] == 2.0
+    assert parsed[("strack_messages_total",
+                   (("tenant", "burst"),))] == 2.0 * TENANTS[0].n_flows
+
+
+def test_soak_rejects_events_backend():
+    with pytest.raises(ValueError):
+        soak(TOPO44, JOBS, TENANTS, epochs=1, net=NET,
+             cfg=RunConfig(backend="events"))
