@@ -3,8 +3,8 @@ PY      := python
 PP      := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast fabric-smoke collective-smoke bench-smoke \
-	scale-smoke smoke bench benchmarks update-golden profile soak \
-	soak-smoke serve-metrics
+	chaos-smoke scale-smoke smoke bench benchmarks update-golden profile \
+	soak soak-smoke serve-metrics
 
 # The tier-1 gate (same command as ROADMAP.md).
 tier1:
@@ -48,8 +48,15 @@ collective-smoke:
 bench-smoke:
 	$(PP) $(PY) -m benchmarks.perf --smoke
 
+# Chaos-path gates (benchmarks/oversub_linkdown.py --chaos-smoke):
+# the degenerate t=0 flap schedule must reproduce native dead-link
+# results bit-exactly, a mid-run flap must drain with recovery-counter
+# activity, and a clean+flapped chaos soak must compile ONE program.
+chaos-smoke:
+	$(PP) $(PY) -m benchmarks.oversub_linkdown --chaos-smoke
+
 # What CI should run on every change.
-smoke: tier1 fabric-smoke collective-smoke bench-smoke
+smoke: tier1 fabric-smoke collective-smoke bench-smoke chaos-smoke
 
 # 512-host warp smoke point: a midsize permutation must clear a warm
 # ticks/sec floor, catching at-scale scan regressions the 16-host

@@ -10,11 +10,27 @@ pinning), the RoCEv2/DCQCN/PFC baseline AND the 4-QP striped RoCEv2
 variant.  The scenario objects are shared, so every leg sees the same
 flows on the same (oversubscribed / dead-link) topology.  Pass
 ``backend="events"`` to fall back to the oracle.
+
+The link-failure legs now run through the chaos subsystem
+(``sim/faults.py``): the static dead-link matrix is expressed as the
+degenerate t=0 flap schedule (``faults_from_dead_links``) on a fully
+alive topology, and a mid-run flap leg (``run_flap``) exercises a link
+going down and RECOVERING while the permutation is in flight.
+``--chaos-smoke`` (the ``make chaos-smoke`` target) gates the chaos
+path: the t=0 schedule must reproduce the native dead-link results
+bit-exactly, the mid-run flap must drain with nonzero recovery
+counters, and a chaos soak must compile exactly one program.
 """
 from __future__ import annotations
 
+import sys
+from dataclasses import replace
+
 from repro.core.params import NetworkSpec
-from repro.sim.workloads import linkdown_scenario, oversub_scenario
+from repro.sim.faults import faults_from_dead_links, link_flap
+from repro.sim.topology import full_bisection, with_link_failures
+from repro.sim.workloads import (linkdown_scenario, oversub_scenario,
+                                 permutation_scenario)
 
 from .common import (FABRIC_TRANSPORTS, QUICK_TOPO, run_events_transport,
                      run_transport, timed)
@@ -56,16 +72,125 @@ def run_oversub(ratio: int = 4, msg: float = 512 * 2 ** 10,
 
 
 def run_linkdown(frac_links_down: float = 0.125,
-                 msg: float = 512 * 2 ** 10, topo_kw=None, seed: int = 0):
+                 msg: float = 512 * 2 ** 10, topo_kw=None, seed: int = 0,
+                 chaos: bool = True):
+    """Figs 14-15 leg.  ``chaos=True`` (default) expresses the dead-link
+    matrix as a t=0 flap schedule on a fully-alive topology — same flows,
+    same live uplinks at every tick, exercised through the time-varying
+    fault path; ``chaos=False`` keeps the native ``dead_links`` route."""
     topo_kw = topo_kw or QUICK_TOPO
     sc = linkdown_scenario(topo_kw, frac_links_down, msg,
                            net=NetworkSpec(), seed=seed)
+    if chaos:
+        sc = replace(sc, topo=full_bisection(**topo_kw),
+                     faults=faults_from_dead_links(sc.topo))
     return _run_matrix(sc, "14-15", sc.name, msg, seed)
 
 
+def run_flap(msg: float = 512 * 2 ** 10, topo_kw=None, seed: int = 0,
+             t0: int = 50, t1: int = 400):
+    """Mid-run flap leg: one uplink of ToR 0 goes down at ``t0`` and
+    RECOVERS at ``t1`` while the permutation is in flight — the loss-
+    recovery path (RTO / SACK / go-back-N) every transport must survive."""
+    topo_kw = topo_kw or QUICK_TOPO
+    sc = permutation_scenario(full_bisection(**topo_kw), msg,
+                              net=NetworkSpec(), seed=seed)
+    sc = replace(sc, name=f"flap_{t0}_{t1}",
+                 faults=link_flap(0, 0, t0, t1))
+    rows = _run_matrix(sc, "14-15*", sc.name, msg, seed)
+    for r in rows:
+        res = run_transport(r["transport"], sc, backend="fabric")
+        r["rto_fires"] = res["rto_fires"]
+        r["sack_recoveries"] = res["sack_recoveries"]
+        r["gbn_rewinds"] = res["gbn_rewinds"]
+        r["blackholed_pkts"] = res["blackholed_pkts"]
+    return rows
+
+
+def chaos_smoke(msg: float = 128 * 2 ** 10, seed: int = 0) -> int:
+    """CI gate for the chaos path (``make chaos-smoke``).  Checks:
+
+    1. the degenerate t=0 flap schedule reproduces the native dead-link
+       results bit-exactly (same flows, same routing, same FCTs);
+    2. the mid-run flap leg drains on every transport with nonzero
+       blackholes and nonzero recovery activity;
+    3. a chaos soak (clean + flapped epochs) compiles exactly ONE
+       program and reports per-tenant degradation.
+    """
+    problems = []
+    topo_kw = QUICK_TOPO
+    # -- gate 1: static dead links == t=0 chaos schedule, bit-exact ------ #
+    sc_nat = linkdown_scenario(topo_kw, 0.25, msg, net=NetworkSpec(),
+                               seed=seed)
+    sc_cha = replace(sc_nat, topo=full_bisection(**topo_kw),
+                     faults=faults_from_dead_links(sc_nat.topo))
+    for tr in ("strack", "roce"):
+        nat = run_transport(tr, sc_nat, backend="fabric")
+        cha = run_transport(tr, sc_cha, backend="fabric")
+        for k in ("max_fct", "avg_fct", "unfinished", "drops", "pauses"):
+            if nat[k] != cha[k]:
+                problems.append(
+                    f"gate1[{tr}]: {k} native={nat[k]} chaos={cha[k]} "
+                    f"(t=0 schedule must be bit-exact vs dead_links)")
+        if cha["blackholed_pkts"] != 0:
+            problems.append(
+                f"gate1[{tr}]: {cha['blackholed_pkts']} blackholed pkts "
+                f"(ECMP must steer off down links, not feed them)")
+        print(f"chaos-smoke gate1[{tr}]: native max_fct {nat['max_fct']:.2f}"
+              f"us == chaos {cha['max_fct']:.2f}us")
+    # -- gate 2: mid-run flap drains with recovery activity -------------- #
+    # Drain is per-transport; loss/recovery is aggregate — ECMP leaves the
+    # flapped uplink the tick it goes down, so a single-path transport can
+    # legitimately lose only what was already queued on it (possibly 0).
+    tot_bh = tot_recov = 0
+    for r in run_flap(msg=msg, topo_kw=topo_kw, seed=seed):
+        tr = r["transport"]
+        if r["unfinished"]:
+            problems.append(f"gate2[{tr}]: {r['unfinished']} unfinished "
+                            f"flows under a mid-run flap")
+        recov = r["rto_fires"] + r["sack_recoveries"] + r["gbn_rewinds"]
+        tot_bh += r["blackholed_pkts"]
+        tot_recov += recov
+        print(f"chaos-smoke gate2[{tr}]: max_fct {r['max_fct_us']:.2f}us, "
+              f"blackholed {r['blackholed_pkts']}, recoveries {recov}")
+    if tot_bh == 0:
+        problems.append("gate2: flap overlapped live flows but no "
+                        "transport blackholed a single pkt")
+    if tot_recov == 0:
+        problems.append("gate2: flap lost pkts but no recovery counter "
+                        "fired on any transport")
+    # -- gate 3: chaos soak compiles one program ------------------------- #
+    from repro.sim.traffic import InferenceTenant, TrainingJob, soak
+    topo = full_bisection(**topo_kw)
+    res = soak(topo,
+               [TrainingJob(name="train0", algo="ring", ranks=8,
+                            collective_bytes=64 * 2 ** 10, steps=2)],
+               [InferenceTenant(name="infer0", n_flows=16)],
+               epochs=3, seed=seed,
+               chaos=[None, link_flap(0, 0, 10, 120), None])
+    if res["program_builds"] > 1:
+        problems.append(f"gate3: chaos soak compiled "
+                        f"{res['program_builds']} programs, expected 1")
+    if res["totals"]["unfinished"]:
+        problems.append(f"gate3: chaos soak left "
+                        f"{res['totals']['unfinished']} messages unfinished")
+    degr = {k: v.get("degradation_p99") for k, v in
+            res["per_tenant"].items()}
+    if not any(d == d and d > 0 for d in degr.values()):
+        problems.append(f"gate3: no per-tenant degradation ratio computed "
+                        f"({degr})")
+    print(f"chaos-smoke gate3: program_builds {res['program_builds']}, "
+          f"degradation {dict((k, round(v, 2)) for k, v in degr.items())}")
+    for p in problems:
+        print(f"CHAOS-SMOKE FAIL: {p}")
+    return 1 if problems else 0
+
+
 def main():
+    if "--chaos-smoke" in sys.argv:
+        raise SystemExit(chaos_smoke())
     for r in run_oversub(4) + run_oversub(8) + run_linkdown(0.0625) \
-            + run_linkdown(0.25):
+            + run_linkdown(0.25) + run_flap():
         print(r)
 
 

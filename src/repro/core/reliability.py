@@ -146,6 +146,8 @@ class RelState(NamedTuple):
     probe_deadline: jax.Array  # f32
     rto_deadline: jax.Array    # f32
     done_ts: jax.Array         # f32, -1 until done
+    rto_fires: jax.Array       # i32: RTO expirations (recovery observability)
+    recoveries: jax.Array      # i32: SACK-triggered recovery entries
 
 
 def init_rel(p: STrackParams, total_pkts, now: float = 0.0,
@@ -169,6 +171,8 @@ def init_rel(p: STrackParams, total_pkts, now: float = 0.0,
                                 jnp.float32),
         rto_deadline=jnp.full((), now + p.rto_us, jnp.float32),
         done_ts=jnp.full((), -1.0, jnp.float32),
+        rto_fires=jnp.zeros((), jnp.int32),
+        recoveries=jnp.zeros((), jnp.int32),
     )
 
 
@@ -276,7 +280,10 @@ def rel_on_sack(rel: RelState, p: STrackParams, sack: SackMsg,
     enter = ooo_loss | probe_loss
     high = jnp.where(probe_loss, rel.psn_next,
                      jnp.where(any_sacked, high_sacked, epsn))
+    fresh_entry = enter & (~rel.in_recovery)
     rel = _enter_recovery(rel, p, high, enter)
+    rel = rel._replace(
+        recoveries=rel.recoveries + fresh_entry.astype(jnp.int32))
 
     # --- recovery exit ---
     exit_rec = rel.in_recovery & (rel.epsn >= rel.recover_high)
@@ -320,7 +327,8 @@ def rel_on_timer(rel: RelState, p: STrackParams, now: jax.Array,
     rto = active & (now >= rel.rto_deadline)
     rel = _enter_recovery(rel, p, rel.psn_next, rto)
     rel = rel._replace(
-        rto_deadline=jnp.where(rto, now + p.rto_us, rel.rto_deadline))
+        rto_deadline=jnp.where(rto, now + p.rto_us, rel.rto_deadline),
+        rto_fires=rel.rto_fires + rto.astype(jnp.int32))
     probe = active & (~rto) & (now >= rel.probe_deadline)
     rel = rel._replace(
         probe_deadline=jnp.where(

@@ -80,6 +80,9 @@ class RoceFlow(NamedTuple):
     entropy: jax.Array        # i32: fixed path (one QP)
     retransmits: jax.Array    # i32
     tail_bytes: jax.Array     # f32: wire size of the final PSN (odd tail)
+    max_psn: jax.Array        # i32: highest PSN ever sent + 1 (rtx detect)
+    rto_fires: jax.Array      # i32: RTO expirations
+    gbn_rewinds: jax.Array    # i32: NACK-triggered go-back-N rewinds
 
 
 class RoceRcv(NamedTuple):
@@ -120,7 +123,8 @@ def init_roce_flow(p: RoceFabParams, total_pkts, entropy,
         alpha=f(1.0), t_stage=i(0), b_stage=i(0), bytes_ctr=f(0.0),
         last_rate_ts=f(now), last_alpha_ts=f(now), next_send_ts=f(now),
         rto_deadline=f(now + p.rto_us), entropy=i(entropy),
-        retransmits=i(0), tail_bytes=jnp.asarray(tail_bytes, jnp.float32))
+        retransmits=i(0), tail_bytes=jnp.asarray(tail_bytes, jnp.float32),
+        max_psn=i(0), rto_fires=i(0), gbn_rewinds=i(0))
 
 
 def init_roce_rcv(total_pkts) -> RoceRcv:
@@ -169,7 +173,9 @@ def roce_next_packet(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
         & (now + 0.5 * p.tick_us >= fs.next_send_ts) \
         & ((fs.psn_next - fs.snd_una).astype(jnp.float32) < p.window_pkts)
     psn = fs.psn_next
-    is_rtx = can & (psn < fs.snd_una)  # never true: kept for TxPacket shape
+    # a PSN below the high-water mark is a go-back-N resend (rewinds pull
+    # psn_next back below max_psn; impossible without loss)
+    is_rtx = can & (psn < fs.max_psn)
     # full MTU except the message's odd tail packet (ref.pkt_size)
     size = jnp.where(psn >= fs.total_pkts - 1, fs.tail_bytes,
                      jnp.float32(p.mtu_bytes))
@@ -187,6 +193,7 @@ def roce_next_packet(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
     next_send_ts = now + size / jnp.maximum(rate, 1e-9)
     new = fs._replace(
         psn_next=psn + 1,
+        max_psn=jnp.maximum(fs.max_psn, psn + 1),
         rate=rate, target=target,
         b_stage=b_stage, bytes_ctr=bytes_ctr,
         next_send_ts=next_send_ts)
@@ -221,6 +228,8 @@ def roce_on_ack(fs: RoceFlow, p: RoceFabParams, msg: RoceMsg,
     rewind_to = jnp.maximum(snd_una, msg.epsn)
     retransmits = fs.retransmits + jnp.where(
         nack, jnp.maximum(fs.psn_next - msg.epsn, 0), 0)
+    gbn_rewinds = fs.gbn_rewinds + (
+        nack & (fs.psn_next > rewind_to)).astype(jnp.int32)
     psn_next = jnp.where(nack, rewind_to, fs.psn_next)
     rto_deadline = jnp.where(adv | nack, now + p.rto_us, fs.rto_deadline)
 
@@ -229,7 +238,8 @@ def roce_on_ack(fs: RoceFlow, p: RoceFabParams, msg: RoceMsg,
         rate=rate, target=target, alpha=alpha,
         t_stage=t_stage, b_stage=b_stage, bytes_ctr=bytes_ctr,
         last_rate_ts=last_rate_ts, last_alpha_ts=last_alpha_ts,
-        rto_deadline=rto_deadline, retransmits=retransmits)
+        rto_deadline=rto_deadline, retransmits=retransmits,
+        gbn_rewinds=gbn_rewinds)
 
 
 def roce_on_timer(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
@@ -257,12 +267,18 @@ def roce_on_timer(fs: RoceFlow, p: RoceFabParams, now: jax.Array):
     rto = active & (now >= fs.rto_deadline)
     psn_next = jnp.where(rto, fs.snd_una, fs.psn_next)
     rto_deadline = jnp.where(rto, now + p.rto_us, fs.rto_deadline)
+    # a rewind re-sends [snd_una, psn_next): attribute those to retransmits
+    # the same way the NACK path does
+    retransmits = fs.retransmits + jnp.where(
+        rto, jnp.maximum(fs.psn_next - fs.snd_una, 0), 0)
 
     return fs._replace(
         alpha=alpha, last_alpha_ts=last_alpha_ts,
         rate=rate, target=target, t_stage=t_stage,
         last_rate_ts=last_rate_ts,
-        psn_next=psn_next, rto_deadline=rto_deadline), jnp.zeros((), bool)
+        psn_next=psn_next, rto_deadline=rto_deadline,
+        retransmits=retransmits,
+        rto_fires=fs.rto_fires + rto.astype(jnp.int32)), jnp.zeros((), bool)
 
 
 def roce_next_event(fs: RoceFlow, p: RoceFabParams,

@@ -36,7 +36,8 @@ from typing import Callable, Optional
 from ..core import ref
 from ..core.params import (NetworkSpec, RoCEParams, STrackParams,
                            make_roce_params, make_strack_params)
-from .topology import FatTree
+from .faults import FaultSpec, fault_u01_py, validate_faults
+from .topology import FatTree, _mix
 
 #: Legacy default per-link propagation delay (us).  Since the per-hop
 #: latency model landed, NetSim derives its propagation from
@@ -52,7 +53,8 @@ class Queue:
 
     __slots__ = ("name", "rate", "prop", "fifo", "occ", "busy", "paused",
                  "ecn_kmin", "ecn_kmax", "drop_bytes", "switch",
-                 "drops", "max_occ", "delay_log", "sim", "drain_host")
+                 "drops", "max_occ", "delay_log", "sim", "drain_host",
+                 "flap_wins", "degrade", "cor_wins", "fault_row")
 
     def __init__(self, sim, name, rate, prop, ecn_kmin=None, ecn_kmax=None,
                  drop_bytes=None, switch=None, drain_host=None):
@@ -72,6 +74,11 @@ class Queue:
         self.drops = 0
         self.max_occ = 0.0
         self.delay_log: Optional[list] = None
+        # chaos schedule (sim/faults.py), windows in us:
+        self.flap_wins: tuple = ()   # (t0, t1): link down, blackhole
+        self.degrade: tuple = ()     # (t0, t1, credit): scaled service rate
+        self.cor_wins: tuple = ()    # (t0, t1, p): seeded corruption drop
+        self.fault_row = -1          # fabric queue-row id (PRNG keying)
 
     def enqueue(self, pkt, next_hop, now):
         sim = self.sim
@@ -88,7 +95,17 @@ class Queue:
             self.switch.on_enqueue(pkt, self, now)
         if not self.busy and not self.paused:
             self.busy = True
-            sim.schedule(now + pkt.size / self.rate, "deq", self)
+            sim.schedule(now + pkt.size / self._rate_at(now), "deq", self)
+
+    def _rate_at(self, now):
+        """Service rate honouring any active degrade window (fractional
+        service credit — the oracle's analogue of the fabric's duty
+        gating)."""
+        r = self.rate
+        for a, b, c in self.degrade:
+            if a <= now < b:
+                r = self.rate * c
+        return r
 
     def service(self, now):
         """Dequeue-completion event: head packet finished serializing."""
@@ -109,9 +126,29 @@ class Queue:
                     pkt.ecn = True
         if self.switch is not None:
             self.switch.on_dequeue(pkt, self, now)
-        self.sim.schedule(now + self.prop, "hop", (pkt, next_hop))
+        # Chaos schedule: a down link blackholes everything it serves (the
+        # packet really left the buffer — PFC accounting above already ran
+        # — it just never arrives); corruption drops DATA only, drawn from
+        # the same counter-based PRNG the fabric uses, keyed by
+        # (seed, queue-row, serve tick, psn).
+        lost = False
+        if self.flap_wins and any(a <= now < b for a, b in self.flap_wins):
+            self.sim.blackholed_pkts += 1
+            lost = True
+        elif self.cor_wins and pkt.kind == ref.DATA:
+            p = max((p_ for a, b, p_ in self.cor_wins if a <= now < b),
+                    default=0.0)
+            if p > 0.0:
+                tick = int(now / self.sim.net.mtu_serialize_us)
+                u = fault_u01_py(self.sim.fault_seed, self.fault_row,
+                                 tick, pkt.psn)
+                if u < p:
+                    self.sim.corrupt_drops += 1
+                    lost = True
+        if not lost:
+            self.sim.schedule(now + self.prop, "hop", (pkt, next_hop))
         if self.fifo and not self.paused:
-            self.sim.schedule(now + self.fifo[0][0].size / self.rate,
+            self.sim.schedule(now + self.fifo[0][0].size / self._rate_at(now),
                               "deq", self)
         else:
             self.busy = False
@@ -127,8 +164,8 @@ class Queue:
             self.paused = False
             if self.fifo and not self.busy:
                 self.busy = True
-                self.sim.schedule(now + self.fifo[0][0].size / self.rate,
-                                  "deq", self)
+                self.sim.schedule(now + self.fifo[0][0].size
+                                  / self._rate_at(now), "deq", self)
 
 
 class Switch:
@@ -231,6 +268,7 @@ class NetSim:
                  switch_buffer_bytes: float = 64e6,
                  qdelay_log_threshold: float = 8.0,
                  log_queues: bool = False,
+                 faults: Optional[FaultSpec] = None,
                  seed: int = 1234):
         import random
         self.rng = random.Random(seed)
@@ -307,6 +345,50 @@ class NetSim:
                                               self.spine_down[s][t])
                 self.spines[s].register_ingress(("t", t), self.tor_up[t][s])
 
+        # Chaos schedule (sim/faults.py): attach per-queue fault windows.
+        # Window ticks convert to us via mtu_serialize_us (one fabric tick
+        # = one MTU serialization slot); queue-row ids mirror the fabric's
+        # layout so corruption PRNG keying matches across backends.
+        self.faults = faults
+        self.fault_seed = faults.seed32 if faults is not None else 0
+        self.blackholed_pkts = 0
+        self.corrupt_drops = 0
+        self._flap_up: dict[int, list] = {}   # tor -> [(spine, t0us, t1us)]
+        self._nic_flap: dict[int, list] = {}  # host -> [(t0us, t1us)]
+        T, S = topo.n_tor, topo.n_spine
+        for t in range(T):
+            for s in range(S):
+                self.tor_up[t][s].fault_row = t * S + s
+                self.spine_down[s][t].fault_row = T * S + s * T + t
+        for h in range(topo.n_hosts):
+            self.host_down[h].fault_row = 2 * T * S + h
+        if faults is not None:
+            validate_faults(faults, topo)
+            tick = net.mtu_serialize_us
+            for (t, s, a, b) in faults.link_flaps:
+                win = (a * tick, b * tick)
+                self.tor_up[t][s].flap_wins += (win,)
+                self.spine_down[s][t].flap_wins += (win,)
+                self._flap_up.setdefault(t, []).append((s, *win))
+            for (t, s, a, b) in faults.uplink_flaps:
+                # up direction only (time-varying dead_links semantics)
+                win = (a * tick, b * tick)
+                self.tor_up[t][s].flap_wins += (win,)
+                self._flap_up.setdefault(t, []).append((s, *win))
+            for (h, a, b) in faults.host_flaps:
+                self.host_down[h].flap_wins += ((a * tick, b * tick),)
+                self._nic_flap.setdefault(h, []).append((a * tick, b * tick))
+            for (t, s, a, b, c) in faults.link_degrade:
+                win = (a * tick, b * tick, c)
+                self.tor_up[t][s].degrade += (win,)
+                self.spine_down[s][t].degrade += (win,)
+            for (t, s, a, b, p) in faults.link_corrupt:
+                win = (a * tick, b * tick, p)
+                self.tor_up[t][s].cor_wins += (win,)
+                self.spine_down[s][t].cor_wins += (win,)
+            for (h, a, b, p) in faults.host_corrupt:
+                self.host_down[h].cor_wins += ((a * tick, b * tick, p),)
+
     # ------------------------------------------------------------------ #
     def schedule(self, t, kind, payload):
         heapq.heappush(self.evq, (t, next(self.seq), kind, payload))
@@ -374,14 +456,38 @@ class NetSim:
         if st == dt:
             hops.append((self.host_down[dst], ("h", src)))
         else:
-            s = topo.ecmp_spine(src, dst, pkt.entropy)
+            s = self._pick_spine(src, dst, pkt.entropy)
             hops.append((self.tor_up[st][s], ("h", src)))
             hops.append((self.spine_down[s][dt], ("t", st)))
             hops.append((self.host_down[dst], ("s", s)))
         return hops
 
+    def _pick_spine(self, src, dst, entropy):
+        """ECMP over the uplinks live *now*: flapped uplinks leave the
+        candidate set while their window is active (routing reconverges —
+        the fabric's time-varying live mask does the same), and rejoin
+        when the window closes."""
+        topo = self.topo
+        st = topo.tor_of(src)
+        flaps = self._flap_up.get(st)
+        if flaps:
+            now = self.now
+            down = {s for (s, a, b) in flaps if a <= now < b}
+            if down:
+                live = [s for s in topo.live_up[st] if s not in down]
+                if live:
+                    return live[_mix(src, dst, entropy) % len(live)]
+        return topo.ecmp_spine(src, dst, entropy)
+
     def _launch(self, pkt, now):
         """Send pkt from its src host NIC through the fabric to pkt.dst."""
+        if self._nic_flap and pkt.kind in (ref.DATA, ref.PROBE):
+            # flapped host NIC: the sender committed its send state but
+            # the packet never reaches the wire (RTO recovers it)
+            wins = self._nic_flap.get(pkt.src)
+            if wins and any(a <= now < b for a, b in wins):
+                self.blackholed_pkts += 1
+                return
         pkt._route = self._route(pkt, pkt.src, pkt.dst)
         pkt._hop = 0
         self.nic_q[pkt.src].enqueue(pkt, ("fabric", pkt), now)

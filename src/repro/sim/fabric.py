@@ -116,6 +116,8 @@ from ..core.params import (ACK_WIRE_BYTES, NetworkSpec, RoCEParams,
                            STrackParams, make_roce_params,
                            make_strack_params)
 from ..core.reliability import SackMsg
+from .faults import (FaultSpec, build_fault_data, duty_open, fault_u01,
+                     validate_faults)
 from .dcqcn_fab import (RoceFabParams, empty_roce_msgs, init_roce_flow,
                         init_roce_rcv, make_roce_fab_params, roce_done,
                         roce_next_event, roce_next_packet, roce_on_ack,
@@ -204,6 +206,11 @@ class Protocol(NamedTuple):
           count, derived elementwise from the final flow pytree (works on
           vmapped [B, N] states too) — observability only, never read
           inside the scan.
+      stat_recovery(flows)             -> dict of i32 per-flow recovery
+          counters with the UNIFORM keys ``rto_fires`` /
+          ``sack_recoveries`` / ``gbn_rewinds`` — zero-filled where a
+          protocol has no such mechanism, so summaries and dashboards
+          never KeyError across protocols.
     """
 
     name: str
@@ -218,6 +225,7 @@ class Protocol(NamedTuple):
     cong_pkts: Callable
     next_event: Callable
     stat_retx: Callable
+    stat_recovery: Callable
 
 
 def _empty_sack_pipe(p: STrackParams, h: int, n: int) -> SackMsg:
@@ -272,7 +280,11 @@ def make_strack_protocol(p: STrackParams) -> Protocol:
         done=tp.flow_done,
         cong_pkts=lambda f: f.cc.cwnd,
         next_event=lambda f: tp.flow_next_event(f, p),
-        stat_retx=stat_retx)
+        stat_retx=stat_retx,
+        stat_recovery=lambda f: {
+            "rto_fires": f.rel.rto_fires,
+            "sack_recoveries": f.rel.recoveries,
+            "gbn_rewinds": jnp.zeros_like(f.rel.rto_fires)})
 
 
 def make_rocev2_protocol(p: RoceFabParams) -> Protocol:
@@ -314,7 +326,11 @@ def make_rocev2_protocol(p: RoceFabParams) -> Protocol:
         done=roce_done,
         cong_pkts=lambda f: f.rate * rtt_us / p.mtu_bytes,
         next_event=lambda f: roce_next_event(f, p),
-        stat_retx=lambda f: f.retransmits)
+        stat_retx=lambda f: f.retransmits,
+        stat_recovery=lambda f: {
+            "rto_fires": f.rto_fires,
+            "sack_recoveries": jnp.zeros_like(f.rto_fires),
+            "gbn_rewinds": f.gbn_rewinds})
 
 
 # --------------------------------------------------------------------------- #
@@ -438,6 +454,11 @@ class PktQ(NamedTuple):
     ready: jax.Array   # i32 (departure-time lane: earliest service tick —
     #                    arrival at this hop after upstream serialization
     #                    plus the link's propagation delay)
+    spine: jax.Array   # i32 (spine chosen at injection; 0 for same-ToR —
+    #                    PFC ingress accounting reads it at the host-down
+    #                    dequeue instead of re-deriving ECMP, which would
+    #                    diverge once fault schedules make masks
+    #                    time-varying)
 
 
 class FabricState(NamedTuple):
@@ -473,6 +494,13 @@ class FabricState(NamedTuple):
     # --- observability counters (never read back inside the scan) ---
     ecn_marks: jax.Array         # i32: ECN-marked data pkts delivered
     qdepth_hi: jax.Array         # i32[Q+1]: running per-queue depth max
+    # --- chaos counters (static zeros when cfg.faults is None) ---
+    blackholed: jax.Array        # i32: pkts lost to a down link
+    corrupt_drops: jax.Array     # i32: pkts lost to corruption draws
+    tx_rows: jax.Array           # i32[Q+1]: accepted data injections per
+    #                              target row (entropy-shift observability)
+    win_retx: jax.Array          # i32[FW]: retx attempts attributed to
+    #                              each flap window (+2 RTO of afterglow)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -564,6 +592,13 @@ class FabricConfig:
     # keeps its inline jnp stages (all_gather exchanges cannot live
     # inside a kernel body).
     kernel_backend: str = "jnp"
+    # Time-varying fault schedule (sim/faults.py): scheduled link/host
+    # flaps, fractional-credit degrades and seeded per-link corruption.
+    # Entry COUNTS are static (program cache key); every time/probability
+    # value and the PRNG seed ride in as traced data, so one compiled
+    # program serves any schedule of the same shape.  None = no faults
+    # (and the fault stages vanish from the program entirely).
+    faults: Optional[FaultSpec] = None
 
     @property
     def pfc_enabled(self) -> bool:
@@ -764,6 +799,15 @@ def _make_protocol(cfg: FabricConfig):
     return proto, kmin_p, kmax_p, target_qdelay_us
 
 
+def _rto_us(cfg: "FabricConfig") -> float:
+    """The resolved protocol's retransmission timeout (us) — the unit the
+    chaos recovery gates and per-flap-window attribution derive from."""
+    if cfg.protocol == "strack":
+        return make_strack_params(cfg.net, max_paths=cfg.max_paths).rto_us
+    rp = cfg.roce or make_roce_params(cfg.net)
+    return make_roce_fab_params(cfg.net, rp).rto_us
+
+
 def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                   cfg: FabricConfig, dep: Optional[DepSpec] = None,
                   n_real: Optional[int] = None):
@@ -830,6 +874,23 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     net = cfg.net
     proto, kmin_p, kmax_p, _ = _make_protocol(cfg)
     pfc = cfg.pfc_enabled
+    # Static fault-shape gates (sim/faults.py): entry COUNTS decide which
+    # chaos code paths exist in the trace — when a class is absent its
+    # entire path vanishes, so fault-free programs stay bit-identical to
+    # the pre-chaos fabric.  The VALUES (times, probabilities, seed) ride
+    # in as the traced FaultData argument.
+    faults = cfg.faults if cfg.faults is not None else FaultSpec()
+    F_ROW = (2 * len(faults.link_flaps) + len(faults.uplink_flaps)
+             + len(faults.host_flaps))
+    F_NIC = len(faults.host_flaps)
+    F_UP = len(faults.link_flaps) + len(faults.uplink_flaps)
+    F_DEG = 2 * len(faults.link_degrade)
+    F_COR = 2 * len(faults.link_corrupt) + len(faults.host_corrupt)
+    FW = faults.n_flap_windows
+    HAS_FAULTS = faults.total_entries > 0
+    # per-flap-window retransmit attribution covers the flap plus two
+    # RTOs of recovery afterglow
+    rto_ticks = int(math.ceil(_rto_us(cfg) / net.mtu_serialize_us))
     at = ArrayTopo.from_fat_tree(topo)
     T, S, NH = at.n_tor, at.n_spine, at.n_hosts
     HPT = at.hosts_per_tor
@@ -885,7 +946,7 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
     spine_of_row = jnp.where(is_up_row, qrows % S, (qrows - TS) // T)
     host_tor = jnp.arange(NH, dtype=jnp.int32) // HPT
 
-    def body(src, dst, total_pkts, tail_b, ent0, lb_code, arrival):
+    def body(src, dst, total_pkts, tail_b, ent0, lb_code, arrival, fd):
         # Bump the retrace counter at TRACE time (python side effects fire
         # once per jax trace, not per run) — the job-batching regression
         # hook: bucketed batch sizes must not retrace this body.
@@ -948,7 +1009,8 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                   probe=jnp.zeros((q_rows, cap), bool),
                   ecn=jnp.zeros((q_rows, cap), bool),
                   ent=jnp.zeros((q_rows, cap), jnp.int32),
-                  ready=jnp.zeros((q_rows, cap), jnp.int32))
+                  ready=jnp.zeros((q_rows, cap), jnp.int32),
+                  spine=jnp.zeros((q_rows, cap), jnp.int32))
         st0 = FabricState(
             flows=fl0, rcv=rcv0, q=q0,
             qhead=jnp.zeros((Q + 1,), jnp.int32),
@@ -974,7 +1036,11 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             group_done_tick=jnp.full((n_groups,), -1, jnp.int32),
             act_overflow=jnp.zeros((), jnp.int32),
             ecn_marks=jnp.zeros((), jnp.int32),
-            qdepth_hi=jnp.zeros((Q + 1,), jnp.int32))
+            qdepth_hi=jnp.zeros((Q + 1,), jnp.int32),
+            blackholed=jnp.zeros((), jnp.int32),
+            corrupt_drops=jnp.zeros((), jnp.int32),
+            tx_rows=jnp.zeros((Q + 1,), jnp.int32),
+            win_retx=jnp.zeros((FW,), jnp.int32))
 
         # ---- kernel-backend dispatch ---------------------------------
         # The hot stages below are *core* functions over explicit
@@ -1099,8 +1165,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
         def serve_enqueue_core(qtree, qhead0, qsize0, paused_row, dst_,
                                dst_tor_, total_pkts_, tail_b_,
                                lane_flow, tx_psn, probe_psn, ent_d,
-                               ent_p, sel, probe_valid, inj_q, inj_qp,
-                               t):
+                               ent_p, inj_sp, inj_spp, sel, probe_valid,
+                               inj_q, inj_qp, row_down, row_duty,
+                               row_cor_p, fseed, t):
             """Kernel-1 core: fused queue-ring service + two-pass
             enqueue.  Serve: every unpaused queue pops its head packet
             once the head's departure-time lane says it has arrived
@@ -1134,6 +1201,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             hidx = qhead0[:Q] % cap
             pop = PktQ(*[f[qrows_, hidx] for f in qtree])
             has = has & (pop.ready <= t)
+            if row_duty is not None:
+                # degraded rows serve only on duty-cycle-open ticks
+                has = has & row_duty
             residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
             frac = jnp.clip((residual - kmin_p)
                             / jnp.maximum(kmax_p - kmin_p, 1e-9),
@@ -1147,13 +1217,31 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             qhead1 = qhead0.at[:Q].add(served)
             qsize1 = qsize0.at[:Q].add(-served)
 
+            # chaos: a down link still serves (its buffer drains) but
+            # everything it pops is blackholed; corruption drops data
+            # packets on a counter-keyed u01 draw.  Both remove the
+            # packet from the advance/delivery candidate set; PFC
+            # dequeue accounting keeps the original ``has`` (the packet
+            # really left the buffer).
+            surv = has
+            bh_add = jnp.zeros((), jnp.int32)
+            cor_add = jnp.zeros((), jnp.int32)
+            if row_down is not None:
+                bh_add = jnp.sum(has & row_down).astype(jnp.int32)
+                surv = surv & (~row_down)
+            if row_cor_p is not None:
+                u = fault_u01(fseed, qrows_, t, pop.psn)
+                corrupt = surv & (~pop.probe) & (u < row_cor_p)
+                cor_add = jnp.sum(corrupt).astype(jnp.int32)
+                surv = surv & (~corrupt)
+
             fclip = jnp.clip(pop.flow, 0, N - 1)
             pop_bytes = wire(pop.flow, pop.psn, pop.probe)
             # fabric advance targets (tor_up -> spine_down -> host_down)
             adv_tgt = jnp.where(
                 is_up, TS + spine_row * T + dst_tor_[fclip],
                 2 * TS + dst_[fclip])[:2 * TS]
-            adv_valid = has[:2 * TS]
+            adv_valid = surv[:2 * TS]
 
             # enqueue: fabric advances + data + probes
             L_ = lane_flow.shape[0]
@@ -1174,7 +1262,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 ecn=jnp.concatenate([ecn_out[:2 * TS], zb, zb]),
                 ent=jnp.concatenate([pop.ent[:2 * TS], ent_d, ent_p]),
                 ready=jnp.full((2 * TS + 2 * L_,), 0, jnp.int32)
-                + t + 1 + K)
+                + t + 1 + K,
+                spine=jnp.concatenate(
+                    [pop.spine[:2 * TS], inj_sp, inj_spp]))
             # per-candidate wire bytes (PFC accounting is per-packet)
             cand_bytes = jnp.concatenate([
                 pop_bytes[:2 * TS],
@@ -1223,8 +1313,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             qsize2 = (qsize1 + added).at[Q].set(0)
             qhead2 = qhead1.at[Q].set(0)
             drops_add = jnp.sum(dropped).astype(jnp.int32)
-            return (q1, qhead2, qsize2, pop, has, ecn_out, pop_bytes,
-                    cand_qid, cand_bytes, accept, drops_add)
+            return (q1, qhead2, qsize2, pop, has, surv, ecn_out,
+                    pop_bytes, cand_qid, cand_bytes, accept, drops_add,
+                    bh_add, cor_add)
 
         def tick(st: FabricState, t):
             """One dense tick at tick-index ``t`` -> (new_state, can_any).
@@ -1277,6 +1368,62 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 # None leaves vanish under pytree flattening, so the
                 # kernel wrappers pass these through untouched
                 eff_nic = paused_row = None
+
+            # ---- 0c. chaos masks: per-tick link state from the traced
+            # fault schedule (sim/faults.py).  Entry counts are static,
+            # so every branch below vanishes from fault-free programs;
+            # inactive windows (t outside [t0, t1)) scatter into the
+            # trash row, so inert entries are exact no-ops.
+            ti = t.astype(jnp.int32)
+            if F_ROW > 0:
+                f_act = (fd.flap_row_t0 <= ti) & (ti < fd.flap_row_t1)
+                row_down = jnp.zeros((Q + 1,), bool).at[
+                    jnp.where(f_act, fd.flap_row, Q)].set(True)[:Q]
+            else:
+                row_down = None
+            if F_NIC > 0:
+                n_act = (fd.flap_nic_t0 <= ti) & (ti < fd.flap_nic_t1)
+                nic_down = jnp.zeros((NH + 1,), bool).at[
+                    jnp.where(n_act, fd.flap_nic, NH)].set(True)[:NH]
+            else:
+                nic_down = None
+            if F_DEG > 0:
+                d_act = (fd.deg_t0 <= ti) & (ti < fd.deg_t1)
+                d_closed = d_act & (~duty_open(ti, fd.deg_num))
+                row_duty = jnp.ones((Q + 1,), bool).at[
+                    jnp.where(d_closed, fd.deg_row, Q)].set(False)[:Q]
+            else:
+                row_duty = None
+            if F_COR > 0:
+                c_act = (fd.cor_t0 <= ti) & (ti < fd.cor_t1)
+                row_cor_p = jnp.zeros((Q + 1,), jnp.float32).at[
+                    jnp.where(c_act, fd.cor_row, Q)].max(fd.cor_p)[:Q]
+                fseed = fd.seed
+            else:
+                row_cor_p = None
+                fseed = None
+            if F_UP > 0:
+                # flapped uplinks leave the ECMP candidate set for the
+                # flap window.  Live spines in ascending order via a
+                # stable argsort on the down-mask — exactly the static
+                # live_list construction, so with no flap active this is
+                # bit-identical to at.ecmp_spine.
+                u_act = (fd.flap_up_t0 <= ti) & (ti < fd.flap_up_t1)
+                up_down = jnp.zeros((TS + 1,), bool).at[
+                    jnp.where(u_act, fd.flap_up, TS)].set(
+                    True)[:TS].reshape(T, S)
+                live_now = at.live_mask & (~up_down)
+                n_live_now = jnp.maximum(
+                    jnp.sum(live_now, axis=1).astype(jnp.int32), 1)
+                live_order = jnp.argsort(~live_now, axis=1,
+                                         stable=True).astype(jnp.int32)
+
+                def pick_spine(s_, d_, e_):
+                    tor_ = s_ // HPT
+                    k_ = ecmp_mix(s_, d_, e_) % n_live_now[tor_]
+                    return live_order[tor_, k_]
+            else:
+                pick_spine = at.ecmp_spine
 
             # ---- 1. transport lanes: due ACKs, timers, sends (kernel 3)
             # Three equivalent lane formulations of the same per-flow
@@ -1391,12 +1538,30 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 else:
                     obl_rr = jnp.where(is_obl & sel, ent_obl, st.obl_rr)
 
-            spine = at.ecmp_spine(lane_src, lane_dst, ent)
+            spine = pick_spine(lane_src, lane_dst, ent)
             inj_q = jnp.where(lane_same, 2 * TS + lane_dst,
                               lane_stor * S + spine)
-            spine_p = at.ecmp_spine(lane_src, lane_dst, ent_probe)
+            spine_p = pick_spine(lane_src, lane_dst, ent_probe)
             inj_qp = jnp.where(lane_same, 2 * TS + lane_dst,
                                lane_stor * S + spine_p)
+
+            # retransmit attempts COMMITTED this tick (before any NIC
+            # blackhole: the attempt happened even into a dead cable) —
+            # attributed to active flap windows below
+            if FW > 0:
+                rtx_n = jnp.sum(sel & tx.is_rtx).astype(jnp.int32)
+            bh_nic = jnp.zeros((), jnp.int32)
+            if nic_down is not None:
+                # host->ToR uplink down: the flow commits its send state
+                # (the NIC transmitted into a dead cable) but the packet
+                # never becomes an enqueue candidate — the sender learns
+                # via silence, then RTO / SACK / go-back-N
+                ln_down = nic_down[lane_src]
+                bh_nic = (jnp.sum(sel & ln_down)
+                          + jnp.sum(probe_valid & ln_down)
+                          ).astype(jnp.int32)
+                sel = sel & (~ln_down)
+                probe_valid = probe_valid & (~ln_down)
 
             # ---- 2. fused ring service + enqueue (kernels 1 + 2) -------
             if DP > 1:
@@ -1417,6 +1582,8 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                                for f in st.q])
                 pop = PktQ(*[a[:Q] for a in gath(pop_l)])
                 has = has & (pop.ready <= t)
+                if row_duty is not None:
+                    has = has & row_duty
                 residual = jnp.maximum(qs - 1, 0).astype(jnp.float32)
                 frac = jnp.clip((residual - kmin_p)
                                 / jnp.maximum(kmax_p - kmin_p, 1e-9),
@@ -1429,12 +1596,25 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 served = has.astype(jnp.int32)
                 qhead = st.qhead.at[:Q].add(served)
                 qsize = st.qsize.at[:Q].add(-served)
+                # chaos blackhole/corruption — replicated math, identical
+                # on every pod (see serve_enqueue_core for semantics)
+                surv = has
+                bh_add = jnp.zeros((), jnp.int32)
+                cor_add = jnp.zeros((), jnp.int32)
+                if row_down is not None:
+                    bh_add = jnp.sum(has & row_down).astype(jnp.int32)
+                    surv = surv & (~row_down)
+                if row_cor_p is not None:
+                    u = fault_u01(fseed, qrows, ti, pop.psn)
+                    corrupt = surv & (~pop.probe) & (u < row_cor_p)
+                    cor_add = jnp.sum(corrupt).astype(jnp.int32)
+                    surv = surv & (~corrupt)
                 fclip = jnp.clip(pop.flow, 0, N - 1)
                 pop_bytes = wire_bytes(pop.flow, pop.psn, pop.probe)
                 adv_tgt = jnp.where(
                     is_up_row, TS + spine_of_row * T + dst_tor[fclip],
                     2 * TS + dst[fclip])[:2 * TS]
-                adv_valid = has[:2 * TS]
+                adv_valid = surv[:2 * TS]
                 cand_qid = jnp.concatenate([adv_tgt, inj_q, inj_qp])
                 cand_valid = jnp.concatenate(
                     [adv_valid, sel, probe_valid])
@@ -1453,7 +1633,9 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                     ent=jnp.concatenate(
                         [pop.ent[:2 * TS], ent, ent_probe]),
                     ready=jnp.full((2 * TS + 2 * L,), 0, jnp.int32)
-                    + t + 1 + K)
+                    + t + 1 + K,
+                    spine=jnp.concatenate(
+                        [pop.spine[:2 * TS], spine, spine_p]))
                 cand_bytes = jnp.concatenate([
                     pop_bytes[:2 * TS],
                     wire_bytes(lane_flow, tx.psn, zb),
@@ -1496,18 +1678,22 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 qhead = qhead.at[Q].set(0)
                 drops = st.drops + jnp.sum(dropped).astype(jnp.int32)
             else:
-                (q, qhead, qsize, pop, has, ecn_out, pop_bytes,
-                 cand_qid, cand_bytes, accept, drops_add) = _serve(
+                (q, qhead, qsize, pop, has, surv, ecn_out, pop_bytes,
+                 cand_qid, cand_bytes, accept, drops_add, bh_add,
+                 cor_add) = _serve(
                     serve_enqueue_core,
                     (st.q, st.qhead, st.qsize, paused_row, dst,
                      dst_tor, total_pkts, tail_b, lane_flow, tx.psn,
-                     probe_tx.psn, ent, ent_probe, sel, probe_valid,
-                     inj_q, inj_qp, t))
+                     probe_tx.psn, ent, ent_probe, spine, spine_p, sel,
+                     probe_valid, inj_q, inj_qp, row_down, row_duty,
+                     row_cor_p, fseed, t))
                 fclip = jnp.clip(pop.flow, 0, N - 1)
                 drops = st.drops + drops_add
 
             # ---- 3. deliveries -> per-flow receivers (one host = one q)
-            del_has = has[2 * TS:]
+            # (surv, not has: blackholed/corrupted packets left their
+            # buffer but never arrive)
+            del_has = surv[2 * TS:]
             del_flow = fclip[2 * TS:]
             slot_del = (t + dflow[del_flow]) % H
             if DP > 1:
@@ -1573,8 +1759,11 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                     up_flat,
                     jnp.where(has[TS:2 * TS], src_tor[f_sd] * S + sd_s, TS),
                     -pop_bytes[TS:2 * TS], TS)
-                pkt_spine = at.ecmp_spine(src[f_hd], dst[f_hd],
-                                          pop.ent[2 * TS:])
+                # the spine that handed the packet down is the ring's
+                # injection-time spine lane — re-deriving it from ECMP
+                # would diverge once fault schedules make the candidate
+                # masks time-varying
+                pkt_spine = pop.spine[2 * TS:]
                 hd_same = same_tor[f_hd]
                 served_hd = has[2 * TS:]
                 ing_host = _scatter_add(
@@ -1691,6 +1880,20 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 (g_undone == 0) & (st.group_done_tick < 0),
                 t.astype(jnp.int32), st.group_done_tick)
 
+            # chaos observability: accepted data injections per target
+            # row (the entropy-shift gates read this) + per-flap-window
+            # retransmit attribution.  Both are exact on warp runs:
+            # skipped ticks inject nothing.
+            acc_data_l = accept[2 * TS:2 * TS + L]
+            tx_rows = st.tx_rows.at[
+                jnp.where(acc_data_l, inj_q, Q)].add(1)
+            if FW > 0:
+                in_win = (fd.win_t0 <= ti) \
+                    & (ti < fd.win_t1 + 2 * rto_ticks)
+                win_retx = st.win_retx + jnp.where(in_win, rtx_n, 0)
+            else:
+                win_retx = st.win_retx
+
             new_st = FabricState(
                 flows=flows, rcv=rcv, q=q, qhead=qhead, qsize=qsize,
                 pipe=pipe, obl_rr=obl_rr, drops=drops, delivered=delivered,
@@ -1705,7 +1908,10 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
                 act_overflow=st.act_overflow + overflow,
                 ecn_marks=st.ecn_marks + ecn_add,
                 # post-enqueue depth max; identity on warp-skipped ticks
-                qdepth_hi=jnp.maximum(st.qdepth_hi, qsize))
+                qdepth_hi=jnp.maximum(st.qdepth_hi, qsize),
+                blackholed=st.blackholed + bh_add + bh_nic,
+                corrupt_drops=st.corrupt_drops + cor_add,
+                tx_rows=tx_rows, win_retx=win_retx)
             return new_st, jnp.any(can_tx)
 
         def snapshot(st: FabricState) -> dict:
@@ -1801,6 +2007,14 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             tgt = jnp.minimum(jnp.minimum(t_timer, t_send),
                               jnp.minimum(t_pipe, t_queue))
             tgt = jnp.minimum(tgt, t_arr)
+            if HAS_FAULTS:
+                # (f) fault-schedule transitions are first-class wake
+                # sources: a warp trip can never jump over a flap /
+                # degrade / corruption boundary, so link state is
+                # re-evaluated at every edge (docs/robustness.md)
+                t_fault = jnp.maximum(t + 1, jnp.min(jnp.where(
+                    fd.edges > t, fd.edges, jnp.int32(n_ticks))))
+                tgt = jnp.minimum(tgt, t_fault)
             return jnp.minimum(tgt, jnp.int32(n_ticks))
 
         if cfg.time_warp:
@@ -1879,16 +2093,18 @@ def _make_program(topo: FatTree, n_flows: int, n_ticks: int,
             paused_nic=rep, paused_sd=rep, paused_up=rep, pfc_line=rep,
             pauses=rep, pending=rep, msg_done=rep, msg_release_tick=rep,
             msg_done_tick=rep, group_done_tick=rep, act_overflow=rep,
-            ecn_marks=rep, qdepth_hi=rep)
+            ecn_marks=rep, qdepth_hi=rep, blackholed=rep,
+            corrupt_drops=rep, tx_rows=rep, win_retx=rep)
         m_spec = ({"warp_trips": rep, "end_tick": rep}
                   if cfg.time_warp else {})
         sharded = compat.shard_map(
-            body, mesh=mesh, in_specs=(rep,) * 7,
+            body, mesh=mesh, in_specs=(rep,) * 8,
             out_specs=(st_spec, m_spec), check_vma=False)
 
-        def program(src, dst, total_pkts, tail_b, ent0, lb_code, arrival):
+        def program(src, dst, total_pkts, tail_b, ent0, lb_code, arrival,
+                    fd):
             return sharded(src, dst, total_pkts, tail_b, ent0, lb_code,
-                           arrival)
+                           arrival, fd)
     else:
         program = body
     program.dims = dict(T=T, S=S, NH=NH, TS=TS, Q=Q, cap=cap, H=H,
@@ -1936,9 +2152,15 @@ def _program_key(topo: FatTree, n_flows: int, n_ticks: int,
     captured by the flow count + DepSpec, so all three are normalized out —
     sweeping them reuses one compiled program.
     """
+    # The fault schedule is program DATA except for its entry counts:
+    # shape_key is the static part (and an empty spec is the same program
+    # as no spec at all), so same-shape chaos schedules share one compile.
+    fkey = (cfg.faults.shape_key if cfg.faults is not None
+            else (0, 0, 0, 0, 0, 0))
     norm = dataclasses.replace(
         cfg, lb_mode="adaptive", roce_entropy_seed=None, subflows=1,
-        trace_every=0 if cfg.time_warp else cfg.trace_every)
+        trace_every=0 if cfg.time_warp else cfg.trace_every,
+        faults=None)
     dep_key = (dep.n_msgs, dep.n_groups,
                np.asarray(dep.msg_of_flow).tobytes(),
                np.asarray(dep.group_of_msg).tobytes(),
@@ -1946,7 +2168,7 @@ def _program_key(topo: FatTree, n_flows: int, n_ticks: int,
                np.asarray(dep.edge_parent).tobytes(),
                np.asarray(dep.edge_child).tobytes())
     return ((topo.n_tor, topo.hosts_per_tor, topo.n_spine, topo.dead_links),
-            n_flows, n_ticks, norm, dep_key)
+            n_flows, n_ticks, norm, dep_key, fkey)
 
 
 def _get_program(topo: FatTree, n_flows: int, n_ticks: int,
@@ -1960,8 +2182,12 @@ def _get_program(topo: FatTree, n_flows: int, n_ticks: int,
     if prog is None:
         program = _make_program(topo, n_flows, n_ticks, cfg, dep,
                                 n_real=n_real)
+        # the batch axis vmaps the flow-array inputs; the fault schedule
+        # is shared across the whole batch (in_axes=None broadcasts it)
         prog = _Program(program=program, jit_single=jax.jit(program),
-                        jit_batch=jax.jit(jax.vmap(program)),
+                        jit_batch=jax.jit(jax.vmap(
+                            program,
+                            in_axes=(0, 0, 0, 0, 0, 0, 0, None))),
                         dims=program.dims)
         _PROGRAM_CACHE[key] = prog
         while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
@@ -2079,6 +2305,8 @@ def _slice_fin(fin: dict, n: int, n_msgs: int, n_groups: int) -> dict:
     metrics layer only ever sees the caller's real flows/messages/groups."""
     out = dict(fin)
     for k, m in (("done_tick", n), ("delivered", n), ("retx", n),
+                 ("rto_fires", n), ("sack_recoveries", n),
+                 ("gbn_rewinds", n),
                  ("msg_done_tick", n_msgs), ("msg_release_tick", n_msgs),
                  ("group_done_tick", n_groups)):
         if k in fin:
@@ -2091,7 +2319,8 @@ def _slice_fin(fin: dict, n: int, n_msgs: int, n_groups: int) -> dict:
 #: that dominated wall-clock at collective flow counts).
 _FINAL_KEYS = ("done_tick", "msg_done_tick", "msg_release_tick",
                "group_done_tick", "drops", "pauses", "delivered",
-               "act_overflow", "ecn_marks", "qdepth_hi")
+               "act_overflow", "ecn_marks", "qdepth_hi", "blackholed",
+               "corrupt_drops", "tx_rows", "win_retx")
 
 
 def _final_host(finals) -> dict:
@@ -2156,8 +2385,23 @@ def _finish_metrics(metrics: dict, fin: dict, cfg: FabricConfig,
     # at any trace decimation (incl. off) and under the warp scan
     metrics["ecn_marks"] = int(np.asarray(fin["ecn_marks"]).reshape(-1)[-1])
     metrics["qdepth_hi_pkts"] = np.asarray(fin["qdepth_hi"])[:dims["Q"]]
-    if "retx" in fin:
-        metrics["retransmits"] = int(np.sum(np.asarray(fin["retx"])))
+    # recovery + chaos counters: UNIFORM keys, zero-filled where a
+    # protocol or backend lacks the underlying counter, so dashboards and
+    # the bench schema never KeyError (docs/robustness.md)
+    metrics["retransmits"] = (int(np.sum(np.asarray(fin["retx"])))
+                              if "retx" in fin else 0)
+    for k in ("rto_fires", "sack_recoveries", "gbn_rewinds"):
+        metrics[k] = int(np.sum(np.asarray(fin[k]))) if k in fin else 0
+    for k_out, k_in in (("blackholed_pkts", "blackholed"),
+                        ("corrupt_drops", "corrupt_drops")):
+        metrics[k_out] = (int(np.asarray(fin[k_in]).reshape(-1)[-1])
+                          if k_in in fin else 0)
+    if "tx_rows" in fin:
+        # accepted data injections per queue row (entropy-shift gates)
+        metrics["tx_rows_pkts"] = np.asarray(fin["tx_rows"])[:dims["Q"]]
+    if "win_retx" in fin:
+        # retransmit attempts attributed to each flap window (+2 RTO)
+        metrics["win_retx"] = np.asarray(fin["win_retx"])
     # Collective (group) metrics only for traces that actually carry
     # trace structure (dependency edges or several groups) — the events
     # backend likewise only reports group keys for TraceRunner-scheduled
@@ -2191,6 +2435,10 @@ def run_fabric_trace(topo: FatTree, messages, n_ticks: int,
     """
     flows, dep = expand_messages(messages, cfg.subflows)
     _check_flows(flows, topo.n_hosts)
+    if cfg.faults is not None:
+        validate_faults(cfg.faults, topo)
+    fd = build_fault_data(cfg.faults, topo.n_tor, topo.n_spine,
+                          topo.hosts_per_tor)
     arrs = _flow_arrays(flows, cfg)
     arrival = _arrival_array(messages)
     dep_run, n_real = dep, None
@@ -2204,10 +2452,11 @@ def run_fabric_trace(topo: FatTree, messages, n_ticks: int,
                         n_real=n_real)
     lb = jnp.int32(LB_MODES.index(cfg.lb_mode))
     final, metrics = prog.jit_single(src, dst, total_pkts, tails, ent0, lb,
-                                     arrival)
+                                     arrival, fd)
     proto, _, _, _ = _make_protocol(cfg)
     fin = _final_host(final)
     fin["retx"] = jax.device_get(proto.stat_retx(final.flows))
+    fin.update(jax.device_get(proto.stat_recovery(final.flows)))
     if n_real is not None:
         fin = _slice_fin(fin, n_real, dep.n_msgs, dep.n_groups)
     metrics = _finish_metrics(dict(metrics), fin, cfg, prog.dims, dep)
@@ -2293,6 +2542,10 @@ def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
                 f"batch entry {i} has a different dependency/group "
                 f"structure than entry 0 — the whole batch runs under "
                 f"entry 0's static DepSpec, so structures must match")
+    if cfg.faults is not None:
+        validate_faults(cfg.faults, topo)
+    fd = build_fault_data(cfg.faults, topo.n_tor, topo.n_spine,
+                          topo.hosts_per_tor)
     arrs = []
     arrivals = []
     for (flows, _), seed, msgs in zip(expanded, entropy_seeds,
@@ -2315,12 +2568,13 @@ def run_fabric_trace_batch(topo: FatTree, messages_batch, n_ticks: int,
     lbs = jnp.asarray(lb_codes, jnp.int32)
     prog = _get_program(topo, int(srcs.shape[1]), n_ticks, cfg, dep)
     finals, stacked = prog.jit_batch(srcs, dsts, pkts, tails, ents, lbs,
-                                     arrv)
+                                     arrv, fd)
     # one transfer for the finals + one for any stacked trace (the old
     # per-entry gather re-pulled the full batch B times)
     proto, _, _, _ = _make_protocol(cfg)
     fin_all = _final_host(finals)
     fin_all["retx"] = jax.device_get(proto.stat_retx(finals.flows))
+    fin_all.update(jax.device_get(proto.stat_recovery(finals.flows)))
     stacked = jax.device_get(dict(stacked))
     per_entry = []
     for i in range(B):
@@ -2367,8 +2621,23 @@ def summarize(metrics: dict) -> dict:
     # observatory counters (absent on legacy/partial metrics dicts)
     if "ecn_marks" in metrics:
         out["ecn_marks"] = int(metrics["ecn_marks"])
-    if "retransmits" in metrics:
-        out["retransmits"] = int(metrics["retransmits"])
+    # recovery + chaos counters: uniformly present and zero-filled across
+    # both protocols and backends — never a KeyError downstream
+    for k in ("retransmits", "rto_fires", "sack_recoveries",
+              "gbn_rewinds", "blackholed_pkts", "corrupt_drops"):
+        out[k] = int(metrics.get(k, 0))
+    # chaos attribution vectors (fabric backend only): accepted data
+    # injections per queue row (entropy-shift gates) and retransmit
+    # attempts attributed to each flap window (+2 RTO).  Tuples, not
+    # arrays: summary dicts must stay ==-comparable and JSON-friendly.
+    txr = metrics.get("tx_rows_pkts")
+    if txr is not None:
+        out["tx_rows_pkts"] = tuple(int(v)
+                                    for v in np.asarray(txr).reshape(-1))
+    wr = metrics.get("win_retx")
+    if wr is not None and np.asarray(wr).size:
+        out["win_retx"] = tuple(int(v)
+                                for v in np.asarray(wr).reshape(-1))
     qhi = metrics.get("qdepth_hi_pkts")
     if qhi is not None:
         qhi = np.asarray(qhi)

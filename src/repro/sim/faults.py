@@ -1,0 +1,456 @@
+"""Time-varying fault injection for the fabric and the events oracle.
+
+The chaos subsystem (docs/robustness.md) models three fault classes as
+*fixed-shape program data* — entry counts are static (they reach the
+program cache key), every time/probability value is traced, so one
+compiled program replays any schedule of the same shape:
+
+* **flaps** — a link is down for ticks ``[t0, t1)``.  Packets served by
+  a down link are blackholed (they left the buffer and never arrive);
+  NIC injection onto a down host uplink is blackholed after the flow
+  commits its send state, so senders discover the loss the same way
+  real hardware does: silence, then RTO / SACK / go-back-N.
+* **degrades** — a ToR↔spine link serves at a fractional credit
+  ``c ∈ (0, 1]``: inside the window the queue may pop its head only on
+  ticks where ``floor((t+1)·c·256)/256`` advances — a deterministic
+  duty cycle realising the fractional rate with no extra state.
+* **corruption** — each packet served by the link is dropped with
+  probability ``p``, drawn from the same counter-based splitmix64
+  generator as ``sim/traffic.py`` keyed by ``(seed, link-row, tick,
+  psn)`` — replayable and backend-independent (the events oracle draws
+  the identical u01 for the identical key).
+
+Links are named by topology coordinates: a ToR↔spine link ``(tor,
+spine)`` covers BOTH directions (the ``tor_up`` and ``spine_down``
+queue rows), a host link ``host`` covers the NIC uplink and the
+``host_down`` row.  ECMP/spray candidate masks follow flaps: while
+``(tor, spine)`` is down the spine leaves ``tor``'s uplink candidate
+set, bit-exactly mirroring the static ``dead_links`` path when the
+schedule is inert.
+
+The fabric consumes a :class:`FaultSpec` through
+``RunConfig(faults=...)`` / ``FabricConfig.faults``; only
+:meth:`FaultSpec.shape_key` enters the program cache key.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .topology import FatTree
+
+__all__ = [
+    "FaultSpec", "FaultData", "build_fault_data", "validate_faults",
+    "fault_u01", "fault_u01_py", "link_flap", "uplink_flap", "host_flap",
+    "link_degrade", "link_corrupt", "host_corrupt",
+    "faults_from_dead_links", "NEVER",
+]
+
+#: Sentinel window end for permanent faults ("down from t0, forever").
+#: ``last_edge`` treats windows ending here as open-ended so the default
+#: tick horizon is not stretched to the end of time.
+NEVER = 2 ** 30
+
+
+# --------------------------------------------------------------------------- #
+# The spec: hashable tuples in, static shape out
+# --------------------------------------------------------------------------- #
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """A complete time-varying fault schedule (all times in fabric ticks).
+
+    Every field is a tuple of fixed-arity entries so the spec is hashable
+    and its *entry counts* form the static shape signature
+    (:attr:`shape_key`); the values themselves ride into the compiled
+    program as traced arrays (:func:`build_fault_data`).
+
+    * ``link_flaps``:   ``(tor, spine, t0, t1)`` — link down in [t0, t1)
+      (BOTH directions: the ``tor_up`` and ``spine_down`` rows blackhole)
+    * ``uplink_flaps``: ``(tor, spine, t0, t1)`` — only the ``tor_up``
+      direction dies and leaves the ECMP candidate set; the down
+      direction keeps serving.  This is exactly the repo's static
+      ``dead_links`` semantics made time-varying —
+      :func:`faults_from_dead_links` emits these so the degenerate t=0
+      schedule is bit-exact against a natively-failed topology.
+    * ``host_flaps``:   ``(host, t0, t1)`` — host↔ToR link down in [t0, t1)
+    * ``link_degrade``: ``(tor, spine, t0, t1, credit)`` — fractional
+      service credit in (0, 1] while the window is active
+    * ``link_corrupt``: ``(tor, spine, t0, t1, prob)`` — per-packet drop
+      probability in [0, 1] while active
+    * ``host_corrupt``: ``(host, t0, t1, prob)`` — same, on the
+      host-down (last-hop) link
+    * ``seed``: corruption PRNG seed (program data, not shape)
+    """
+
+    link_flaps: Tuple[Tuple[int, int, int, int], ...] = ()
+    uplink_flaps: Tuple[Tuple[int, int, int, int], ...] = ()
+    host_flaps: Tuple[Tuple[int, int, int], ...] = ()
+    link_degrade: Tuple[Tuple[int, int, int, int, float], ...] = ()
+    link_corrupt: Tuple[Tuple[int, int, int, int, float], ...] = ()
+    host_corrupt: Tuple[Tuple[int, int, int, float], ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "link_flaps",
+                           tuple(tuple(int(v) for v in e)
+                                 for e in self.link_flaps))
+        object.__setattr__(self, "uplink_flaps",
+                           tuple(tuple(int(v) for v in e)
+                                 for e in self.uplink_flaps))
+        object.__setattr__(self, "host_flaps",
+                           tuple(tuple(int(v) for v in e)
+                                 for e in self.host_flaps))
+        object.__setattr__(
+            self, "link_degrade",
+            tuple((int(t), int(s), int(a), int(b), float(c))
+                  for (t, s, a, b, c) in self.link_degrade))
+        object.__setattr__(
+            self, "link_corrupt",
+            tuple((int(t), int(s), int(a), int(b), float(p))
+                  for (t, s, a, b, p) in self.link_corrupt))
+        object.__setattr__(
+            self, "host_corrupt",
+            tuple((int(h), int(a), int(b), float(p))
+                  for (h, a, b, p) in self.host_corrupt))
+
+    # -- static shape --------------------------------------------------- #
+
+    @property
+    def seed32(self) -> int:
+        """The seed as both backends key it (31 bits: jnp carries it as a
+        non-negative i32 scalar; the host mirror masks to match)."""
+        return self.seed & 0x7FFFFFFF
+
+    @property
+    def shape_key(self) -> tuple:
+        """Entry counts only — what the program cache key sees."""
+        return (len(self.link_flaps), len(self.uplink_flaps),
+                len(self.host_flaps), len(self.link_degrade),
+                len(self.link_corrupt), len(self.host_corrupt))
+
+    @property
+    def total_entries(self) -> int:
+        return sum(self.shape_key)
+
+    @property
+    def n_flap_windows(self) -> int:
+        """Windows that get per-window retransmit attribution (order:
+        link_flaps, then uplink_flaps, then host_flaps)."""
+        return (len(self.link_flaps) + len(self.uplink_flaps)
+                + len(self.host_flaps))
+
+    @property
+    def last_edge(self) -> int:
+        """Latest schedule boundary (0 when the spec is empty) — used to
+        extend the default tick horizon so recovery has room to drain.
+        Windows ending at/after :data:`NEVER` (permanent faults, e.g.
+        :func:`faults_from_dead_links`) count their *start* instead: the
+        horizon must reach the transition, not the end of time."""
+        def _end(t0, t1):
+            return t0 if t1 >= NEVER else t1
+        edges = [0]
+        edges += [_end(a, b) for (_t, _s, a, b) in self.link_flaps]
+        edges += [_end(a, b) for (_t, _s, a, b) in self.uplink_flaps]
+        edges += [_end(a, b) for (_h, a, b) in self.host_flaps]
+        edges += [_end(a, b) for (_t, _s, a, b, _c) in self.link_degrade]
+        edges += [_end(a, b) for (_t, _s, a, b, _p) in self.link_corrupt]
+        edges += [_end(a, b) for (_h, a, b, _p) in self.host_corrupt]
+        return max(edges)
+
+
+# convenience single-entry constructors ------------------------------------- #
+
+def link_flap(tor: int, spine: int, t0: int, t1: int, **kw) -> FaultSpec:
+    return FaultSpec(link_flaps=((tor, spine, t0, t1),), **kw)
+
+
+def uplink_flap(tor: int, spine: int, t0: int, t1: int, **kw) -> FaultSpec:
+    return FaultSpec(uplink_flaps=((tor, spine, t0, t1),), **kw)
+
+
+def host_flap(host: int, t0: int, t1: int, **kw) -> FaultSpec:
+    return FaultSpec(host_flaps=((host, t0, t1),), **kw)
+
+
+def link_degrade(tor: int, spine: int, t0: int, t1: int,
+                 credit: float, **kw) -> FaultSpec:
+    return FaultSpec(link_degrade=((tor, spine, t0, t1, credit),), **kw)
+
+
+def link_corrupt(tor: int, spine: int, t0: int, t1: int,
+                 prob: float, seed: int = 0, **kw) -> FaultSpec:
+    return FaultSpec(link_corrupt=((tor, spine, t0, t1, prob),),
+                     seed=seed, **kw)
+
+
+def host_corrupt(host: int, t0: int, t1: int, prob: float,
+                 seed: int = 0, **kw) -> FaultSpec:
+    return FaultSpec(host_corrupt=((host, t0, t1, prob),), seed=seed, **kw)
+
+
+def faults_from_dead_links(topo: FatTree, t1: int = NEVER) -> FaultSpec:
+    """The degenerate t=0 schedule: every static ``dead_links`` entry
+    becomes a flap down from tick 0 that never recovers.  (Benchmarks use
+    it to express the paper's static link-failure matrix through the
+    time-varying subsystem; note the fabric still honours ``dead_links``
+    natively, so this is for apples-to-apples chaos-path runs on a
+    fully-alive topology.)"""
+    return FaultSpec(uplink_flaps=tuple(
+        (t, s, 0, t1) for (t, s) in sorted(topo.dead_links)))
+
+
+# --------------------------------------------------------------------------- #
+# Validation (host-side, at run entry)
+# --------------------------------------------------------------------------- #
+
+def validate_faults(spec: FaultSpec, topo: FatTree) -> None:
+    """Range/sanity checks + the no-total-partition rule: at no tick may a
+    ToR lose its last live uplink (static dead links + simultaneous flaps),
+    because a fully-disconnected ToR can never drain."""
+    T, S, NH = topo.n_tor, topo.n_spine, topo.n_hosts
+
+    def _ck_link(tor, spine, what):
+        if not (0 <= tor < T and 0 <= spine < S):
+            raise ValueError(f"{what}: link ({tor},{spine}) out of range "
+                             f"for {T} ToRs x {S} spines")
+
+    def _ck_win(t0, t1, what):
+        # an EMPTY window (t0 == t1) is legal: it is the inert entry chaos
+        # soaks use to run clean epochs through the same compiled program
+        if not (0 <= t0 <= t1):
+            raise ValueError(f"{what}: window [{t0},{t1}) is negative")
+
+    for (t, s, a, b) in spec.link_flaps:
+        _ck_link(t, s, "link_flap"); _ck_win(a, b, "link_flap")
+        if (t, s) in topo.dead_links:
+            raise ValueError(f"link_flap ({t},{s}): link is already in "
+                             f"topo.dead_links")
+    for (t, s, a, b) in spec.uplink_flaps:
+        _ck_link(t, s, "uplink_flap"); _ck_win(a, b, "uplink_flap")
+        if (t, s) in topo.dead_links:
+            raise ValueError(f"uplink_flap ({t},{s}): link is already in "
+                             f"topo.dead_links")
+    for (h, a, b) in spec.host_flaps:
+        if not 0 <= h < NH:
+            raise ValueError(f"host_flap: host {h} out of range")
+        _ck_win(a, b, "host_flap")
+    for (t, s, a, b, c) in spec.link_degrade:
+        _ck_link(t, s, "link_degrade"); _ck_win(a, b, "link_degrade")
+        if not 0.0 < c <= 1.0:
+            raise ValueError(f"link_degrade credit {c} not in (0, 1]")
+    for (t, s, a, b, p) in spec.link_corrupt:
+        _ck_link(t, s, "link_corrupt"); _ck_win(a, b, "link_corrupt")
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"link_corrupt prob {p} not in [0, 1]")
+    for (h, a, b, p) in spec.host_corrupt:
+        if not 0 <= h < NH:
+            raise ValueError(f"host_corrupt: host {h} out of range")
+        _ck_win(int(a), int(b), "host_corrupt")
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(f"host_corrupt prob {p} not in [0, 1]")
+    # no ToR may lose every uplink at once: sweep the flap boundary set
+    all_flaps = spec.link_flaps + spec.uplink_flaps
+    if all_flaps:
+        edges = sorted({e for (_, _, a, b) in all_flaps
+                        for e in (a, b)})
+        for t in range(T):
+            live = set(topo.live_up[t])
+            flaps = [(s, a, b) for (tt, s, a, b) in all_flaps
+                     if tt == t]
+            for e in edges:
+                down = {s for (s, a, b) in flaps if a <= e < b}
+                if live and not (live - down):
+                    raise ValueError(
+                        f"link_flaps fully disconnect ToR {t} at tick {e};"
+                        f" a partitioned ToR can never drain")
+
+
+# --------------------------------------------------------------------------- #
+# FaultData: the traced program argument (queue-row resolved)
+# --------------------------------------------------------------------------- #
+
+class FaultData(NamedTuple):
+    """Schedule arrays as the fabric consumes them.  Shapes depend only on
+    ``FaultSpec.shape_key``; the queue-row resolution matches fabric.py's
+    layout (tor_up ``t*S+s`` | spine_down ``TS+s*T+t`` | host_down
+    ``2*TS+h``)."""
+
+    seed: jax.Array        # i32[] corruption PRNG seed
+    flap_row: jax.Array    # i32[FR] queue rows down in [t0, t1)
+    flap_row_t0: jax.Array
+    flap_row_t1: jax.Array
+    flap_nic: jax.Array    # i32[FH] hosts whose NIC uplink is down
+    flap_nic_t0: jax.Array
+    flap_nic_t1: jax.Array
+    flap_up: jax.Array     # i32[FL] flat t*S+s uplinks out of ECMP while down
+    flap_up_t0: jax.Array
+    flap_up_t1: jax.Array
+    deg_row: jax.Array     # i32[DR] degraded rows
+    deg_t0: jax.Array
+    deg_t1: jax.Array
+    deg_num: jax.Array     # i32[DR] credit numerator out of 256
+    cor_row: jax.Array     # i32[CR] corrupting rows
+    cor_t0: jax.Array
+    cor_t1: jax.Array
+    cor_p: jax.Array       # f32[CR]
+    edges: jax.Array       # i32[E] every t0/t1 (warp wake sources)
+    win_t0: jax.Array      # i32[W] flap windows (retx attribution)
+    win_t1: jax.Array
+
+
+def _i32(xs) -> jnp.ndarray:
+    return jnp.asarray(np.asarray(xs, dtype=np.int32))
+
+
+def build_fault_data(spec: Optional[FaultSpec], n_tor: int, n_spine: int,
+                     hosts_per_tor: int) -> FaultData:
+    """Expand a spec to queue-row-resolved arrays (empty spec -> zero-length
+    arrays; the program signature is identical either way)."""
+    spec = spec or FaultSpec()
+    T, S = n_tor, n_spine
+    TS = T * S
+    rows, r0, r1 = [], [], []
+    ups, u0, u1 = [], [], []
+    for (t, s, a, b) in spec.link_flaps:
+        rows += [t * S + s, TS + s * T + t]     # both directions die
+        r0 += [a, a]; r1 += [b, b]
+        ups.append(t * S + s); u0.append(a); u1.append(b)
+    for (t, s, a, b) in spec.uplink_flaps:
+        rows.append(t * S + s)                  # up direction only
+        r0.append(a); r1.append(b)
+        ups.append(t * S + s); u0.append(a); u1.append(b)
+    nics, n0, n1 = [], [], []
+    for (h, a, b) in spec.host_flaps:
+        rows.append(2 * TS + h); r0.append(a); r1.append(b)
+        nics.append(h); n0.append(a); n1.append(b)
+    dr, d0, d1, dn = [], [], [], []
+    for (t, s, a, b, c) in spec.link_degrade:
+        num = max(1, min(256, int(round(c * 256))))
+        dr += [t * S + s, TS + s * T + t]
+        d0 += [a, a]; d1 += [b, b]; dn += [num, num]
+    cr, c0, c1, cp = [], [], [], []
+    for (t, s, a, b, p) in spec.link_corrupt:
+        cr += [t * S + s, TS + s * T + t]
+        c0 += [a, a]; c1 += [b, b]; cp += [p, p]
+    for (h, a, b, p) in spec.host_corrupt:
+        cr.append(2 * TS + h); c0.append(int(a)); c1.append(int(b))
+        cp.append(p)
+    # NOT deduplicated: the edge-array length must follow from shape_key
+    # alone (dedup would make the traced shape value-dependent and break
+    # one-compile chaos epochs); duplicate wake sources are harmless mins
+    edges = r0 + r1 + d0 + d1 + c0 + c1
+    wt0 = [a for (_, _, a, _) in spec.link_flaps] \
+        + [a for (_, _, a, _) in spec.uplink_flaps] \
+        + [a for (_, a, _) in spec.host_flaps]
+    wt1 = [b for (_, _, _, b) in spec.link_flaps] \
+        + [b for (_, _, _, b) in spec.uplink_flaps] \
+        + [b for (_, _, b) in spec.host_flaps]
+    return FaultData(
+        seed=jnp.int32(spec.seed32),
+        flap_row=_i32(rows), flap_row_t0=_i32(r0), flap_row_t1=_i32(r1),
+        flap_nic=_i32(nics), flap_nic_t0=_i32(n0), flap_nic_t1=_i32(n1),
+        flap_up=_i32(ups), flap_up_t0=_i32(u0), flap_up_t1=_i32(u1),
+        deg_row=_i32(dr), deg_t0=_i32(d0), deg_t1=_i32(d1),
+        deg_num=_i32(dn),
+        cor_row=_i32(cr), cor_t0=_i32(c0), cor_t1=_i32(c1),
+        cor_p=jnp.asarray(np.asarray(cp, dtype=np.float32)),
+        edges=_i32(edges), win_t0=_i32(wt0), win_t1=_i32(wt1))
+
+
+def duty_open(t: jax.Array, num: jax.Array) -> jax.Array:
+    """True on ticks where a ``num/256`` duty cycle grants a service slot
+    (deterministic, stateless: the credit integral crosses an integer)."""
+    return ((t + 1) * num) // 256 > (t * num) // 256
+
+
+def duty_open_py(t: int, num: int) -> bool:
+    return ((t + 1) * num) // 256 > (t * num) // 256
+
+
+# --------------------------------------------------------------------------- #
+# Counter-based splitmix64 on 2x uint32 limbs (f32-safe, no x64 needed)
+# --------------------------------------------------------------------------- #
+
+_GOLDEN = (0x9E3779B9, 0x7F4A7C15)
+_C1 = (0xBF58476D, 0x1CE4E5B9)
+_C2 = (0x94D049BB, 0x133111EB)
+
+
+def _mul64(ah, al, bh, bl):
+    """(ah<<32|al) * (bh<<32|bl) mod 2^64, on uint32 limbs (16-bit
+    partial products keep every intermediate inside uint32)."""
+    mask16 = jnp.uint32(0xFFFF)
+    a0, a1 = al & mask16, al >> 16
+    b0, b1 = bl & mask16, bl >> 16
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    mid = (p00 >> 16) + (p01 & mask16) + (p10 & mask16)
+    lo = (p00 & mask16) | ((mid & mask16) << 16)
+    hi = (mid >> 16) + (p01 >> 16) + (p10 >> 16) + a1 * b1 \
+        + al * bh + ah * bl                      # uint32 wraps = mod 2^32
+    return hi, lo
+
+
+def _add64(ah, al, bh, bl):
+    lo = al + bl
+    carry = (lo < al).astype(jnp.uint32)
+    return ah + bh + carry, lo
+
+
+def _xorshift64(h, l, k: int):
+    """x ^= x >> k for 0 < k < 32 (the splitmix64 shifts: 30, 27, 31)."""
+    sh = h >> k
+    sl = (l >> k) | (h << (32 - k))
+    return h ^ sh, l ^ sl
+
+
+def _splitmix_state(h, l):
+    """One splitmix64 output step from state (h, l) — already advanced."""
+    zh, zl = _xorshift64(h, l, 30)
+    zh, zl = _mul64(zh, zl, jnp.uint32(_C1[0]), jnp.uint32(_C1[1]))
+    zh, zl = _xorshift64(zh, zl, 27)
+    zh, zl = _mul64(zh, zl, jnp.uint32(_C2[0]), jnp.uint32(_C2[1]))
+    return _xorshift64(zh, zl, 31)
+
+
+def _splitmix64_jnp(h, l):
+    h, l = _add64(h, l, jnp.uint32(_GOLDEN[0]), jnp.uint32(_GOLDEN[1]))
+    return (h, l), _splitmix_state(h, l)
+
+
+def _u64_jnp(seed, *counters):
+    """jnp mirror of ``traffic._u64``: seed is an i32 scalar, counters are
+    non-negative i32 arrays/scalars; returns the output as uint32 limbs."""
+    sh = jnp.uint32(0)
+    sl = seed.astype(jnp.uint32) if hasattr(seed, "astype") \
+        else jnp.uint32(seed)
+    (sh, sl), (oh, ol) = _splitmix64_jnp(sh, sl)
+    for c in counters:
+        ch = jnp.uint32(0)
+        cl = jnp.asarray(c).astype(jnp.uint32)
+        ch, cl = _mul64(ch, cl, jnp.uint32(_GOLDEN[0]),
+                        jnp.uint32(_GOLDEN[1]))
+        sh, sl = oh ^ ch, ol ^ cl
+        (sh, sl), (oh, ol) = _splitmix64_jnp(sh, sl)
+    return oh, ol
+
+
+def fault_u01(seed, *counters) -> jax.Array:
+    """f32 in [0, 1) from the top 24 bits of the keyed splitmix64 stream —
+    exactly representable in f32, so every jnp backend draws the same
+    value; :func:`fault_u01_py` is the bit-identical host mirror."""
+    oh, _ = _u64_jnp(seed, *counters)
+    return (oh >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def fault_u01_py(seed: int, *counters: int) -> float:
+    """Host mirror of :func:`fault_u01` (the events oracle's draw)."""
+    from .traffic import _u64  # function-level: traffic imports workloads
+    return float(_u64(seed, *counters) >> 40) * (1.0 / (1 << 24))

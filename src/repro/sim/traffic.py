@@ -41,6 +41,7 @@ from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.params import NetworkSpec
+from .faults import FaultSpec
 from .topology import FatTree
 from .workloads import Message, RunConfig, Scenario, run
 
@@ -237,7 +238,27 @@ def mixed_scenario(topo: FatTree, jobs: Sequence[TrainingJob],
 # The soak driver: chained run() epochs, carried counters
 # --------------------------------------------------------------------------- #
 
-_COUNTERS = ("drops", "pauses", "ecn_marks", "retransmits")
+_COUNTERS = ("drops", "pauses", "ecn_marks", "retransmits", "rto_fires",
+             "sack_recoveries", "gbn_rewinds", "blackholed_pkts",
+             "corrupt_drops")
+
+
+def inert_faults_like(fs: FaultSpec) -> FaultSpec:
+    """A FaultSpec with every window collapsed to [0, 0) — same
+    ``shape_key`` (so the same compiled program serves it), zero effect.
+    Chaos soaks use it to run clean epochs through the faulted program."""
+    return FaultSpec(
+        link_flaps=tuple((t, s, 0, 0) for (t, s, _a, _b) in fs.link_flaps),
+        uplink_flaps=tuple((t, s, 0, 0)
+                           for (t, s, _a, _b) in fs.uplink_flaps),
+        host_flaps=tuple((h, 0, 0) for (h, _a, _b) in fs.host_flaps),
+        link_degrade=tuple((t, s, 0, 0, c)
+                           for (t, s, _a, _b, c) in fs.link_degrade),
+        link_corrupt=tuple((t, s, 0, 0, p)
+                           for (t, s, _a, _b, p) in fs.link_corrupt),
+        host_corrupt=tuple((h, 0, 0, p)
+                           for (h, _a, _b, p) in fs.host_corrupt),
+        seed=fs.seed)
 
 
 def record_epoch(reg, res: dict, tenant_of_group: Dict[int, str]) -> None:
@@ -279,7 +300,7 @@ def soak(topo: FatTree, jobs: Sequence[TrainingJob],
          net: Optional[NetworkSpec] = None, seed: int = 0,
          cfg: Optional[RunConfig] = None, n_ticks: Optional[int] = None,
          registry=None, out_path: Optional[str] = None,
-         verbose: bool = False) -> dict:
+         chaos=None, verbose: bool = False) -> dict:
     """Long-horizon mixed-workload soak: ``epochs`` chained ``run()``
     segments on the warp fabric, counters carried across epochs.
 
@@ -291,6 +312,16 @@ def soak(topo: FatTree, jobs: Sequence[TrainingJob],
     metrics per epoch; ``out_path`` additionally dumps the rendered
     exposition after every epoch (so an exporter serving the file shows
     the soak live) and at the end.
+
+    ``chaos`` turns on chaos epochs: a single :class:`FaultSpec` (every
+    epoch faulted) or a per-epoch sequence where ``None`` entries mean a
+    clean epoch.  Fault *values* are program data, so every entry must
+    share one ``shape_key`` — clean epochs run the same compiled program
+    through an inert schedule (:func:`inert_faults_like`) and the soak
+    still compiles exactly one program.  Per-tenant p99 FCT from chaos
+    epochs is ratioed against clean epochs into the
+    ``strack_fct_degradation_ratio`` gauge (and the returned
+    ``per_tenant[...]["degradation_p99"]``).
     """
     from . import fabric
     net = net or NetworkSpec()
@@ -301,28 +332,66 @@ def soak(topo: FatTree, jobs: Sequence[TrainingJob],
     epochs = int(epochs)
     if epochs < 1:
         raise ValueError("epochs must be >= 1")
+    # normalize the chaos schedule to one FaultSpec per epoch (None when
+    # chaos is off entirely); clean epochs get an inert same-shape spec
+    chaos_flags = [False] * epochs
+    epoch_faults: List[Optional[FaultSpec]] = [None] * epochs
+    if chaos is not None:
+        specs = ([chaos] * epochs if isinstance(chaos, FaultSpec)
+                 else list(chaos))
+        if len(specs) != epochs:
+            raise ValueError(f"chaos schedule has {len(specs)} entries "
+                             f"for {epochs} epochs")
+        proto = next((fs for fs in specs if fs is not None), None)
+        if proto is None:
+            raise ValueError("chaos schedule is all-None; pass chaos=None "
+                             "for a clean soak")
+        inert = inert_faults_like(proto)
+        for e, fs in enumerate(specs):
+            if fs is None:
+                epoch_faults[e] = inert
+            else:
+                if fs.shape_key != proto.shape_key:
+                    raise ValueError(
+                        f"chaos epoch {e} has shape_key {fs.shape_key}, "
+                        f"expected {proto.shape_key}: every epoch must "
+                        f"share one fault shape so ONE program serves "
+                        f"the soak")
+                epoch_faults[e] = fs
+                chaos_flags[e] = fs.last_edge > 0
     scs = [mixed_scenario(topo, jobs, tenants, net=net, seed=seed, epoch=e)
            for e in range(epochs)]
     if n_ticks is None:
         # one fixed horizon covering every epoch's arrivals + critical
-        # path — a fixed horizon is what keeps the program cacheable
+        # path — a fixed horizon is what keeps the program cacheable.
+        # Chaos epochs extend it past the last fault edge so recovery
+        # completes inside the same horizon.
         n_ticks = max(sc.default_ticks() for sc, _ in scs)
+        last = max((fs.last_edge for fs in epoch_faults
+                    if fs is not None), default=0)
+        if last > 0:
+            n_ticks = max(n_ticks, last + max(
+                sc.default_ticks() for sc, _ in scs))
     cfg = replace(cfg, n_ticks=int(n_ticks))
     totals = {k: 0 for k in _COUNTERS}
     totals["unfinished"] = 0
     totals["messages"] = 0
     per_tenant: Dict[str, dict] = {}
     epoch_rows: List[dict] = []
+    clean_p99: Dict[str, float] = {}
+    chaos_p99: Dict[str, float] = {}
     builds0 = fabric.program_builds
     tenant_of_group: Dict[int, str] = {}
     for e, (sc, tenant_of_group) in enumerate(scs):
-        res = run(sc, cfg)
+        ecfg = (replace(cfg, faults=epoch_faults[e])
+                if epoch_faults[e] is not None else cfg)
+        res = run(sc, ecfg)
         for k in _COUNTERS:
             totals[k] += int(res.get(k, 0))
         totals["unfinished"] += int(res["unfinished"])
         totals["messages"] += len(sc.messages)
         row = {"epoch": e, "max_fct_us": res["max_fct"],
-               "unfinished": res["unfinished"],
+               "unfinished": res["unfinished"], "chaos": chaos_flags[e],
                **{k: int(res.get(k, 0)) for k in _COUNTERS},
                "qdepth_max_pkts": res.get("qdepth_max_pkts", 0)}
         epoch_rows.append(row)
@@ -337,8 +406,20 @@ def soak(topo: FatTree, jobs: Sequence[TrainingJob],
                 agg["p99_worst"] = max(agg["p99_worst"], trow["p99"])
                 agg["max"] = max(agg["max"], trow["max"])
                 agg["p50_last"] = trow["p50"]
+                bucket = chaos_p99 if chaos_flags[e] else clean_p99
+                bucket[name] = max(bucket.get(name, 0.0), trow["p99"])
         if registry is not None:
             record_epoch(registry, res, tenant_of_group)
+            if chaos is not None:
+                registry.declare(
+                    "strack_fct_degradation_ratio",
+                    "per-tenant worst-p99 FCT, chaos epochs over clean "
+                    "epochs (1.0 = no degradation)", "gauge")
+                for name in sorted(set(chaos_p99) & set(clean_p99)):
+                    base = clean_p99[name]
+                    if base > 0:
+                        registry.set("strack_fct_degradation_ratio",
+                                     chaos_p99[name] / base, tenant=name)
             if out_path:
                 from ..obs.metrics import render_prometheus
                 with open(out_path, "w") as f:
@@ -348,6 +429,12 @@ def soak(topo: FatTree, jobs: Sequence[TrainingJob],
                   f", drops {row['drops']}, pauses {row['pauses']}, ecn "
                   f"{row['ecn_marks']}, retx {row['retransmits']}, "
                   f"unfinished {res['unfinished']}")
+    if chaos is not None:
+        for name, agg in per_tenant.items():
+            base = clean_p99.get(name, 0.0)
+            ch = chaos_p99.get(name, 0.0)
+            agg["degradation_p99"] = (ch / base if base > 0 and ch > 0
+                                      else float("nan"))
     return {
         "epochs": epochs,
         "n_ticks": int(n_ticks),

@@ -52,8 +52,9 @@ import numpy as np
 
 from ..core.params import NetworkSpec, make_roce_params
 from .events import NetSim
-from .fabric import (FabricConfig, run_fabric_trace, run_fabric_trace_batch,
-                     summarize)
+from .fabric import (FabricConfig, _rto_us, run_fabric_trace,
+                     run_fabric_trace_batch, summarize)
+from .faults import FaultSpec
 from .topology import FatTree, full_bisection, oversubscribed, \
     with_link_failures
 
@@ -114,6 +115,10 @@ class Scenario:
     topo: FatTree
     net: NetworkSpec
     messages: Tuple[Message, ...]
+    #: Optional chaos schedule (sim/faults.py): scheduled link/NIC flaps,
+    #: degraded links and seeded corruption, honoured by BOTH backends.
+    #: ``RunConfig.faults`` overrides this when set.
+    faults: Optional[FaultSpec] = None
 
     @classmethod
     def from_flows(cls, name: str, topo: FatTree, net: NetworkSpec,
@@ -338,6 +343,13 @@ class RunConfig:
     # (tests/test_fabric_kernels.py + the fuzz suite's kernel leg);
     # single-device only (shard <= 1).
     kernel_backend: str = "jnp"
+    # Chaos schedule (sim/faults.py): time-varying link/NIC flaps,
+    # degraded links, seeded corruption.  Overrides ``Scenario.faults``
+    # when set; faults are program *data* on the fabric backend (one
+    # compiled program serves every schedule of the same shape).  When
+    # ``n_ticks`` is None the default horizon is extended past the last
+    # fault edge so recovery has room to complete.
+    faults: Optional[FaultSpec] = None
     seed: int = 1234                 # events-backend rng seed
     until: float = 1e9               # events-backend horizon (us)
 
@@ -471,7 +483,7 @@ def sweep(scenarios: Sequence[Scenario],
     for idxs in groups.values():
         rc0 = cfgs[idxs[0]]
         fcfg0 = _fabric_cfg(scenarios[idxs[0]], rc0)
-        ticks = rc0.n_ticks or max(scenarios[i].default_ticks()
+        ticks = rc0.n_ticks or max(_scenario_ticks(scenarios[i], cfgs[i])
                                    for i in idxs)
         _, per_entry = run_fabric_trace_batch(
             scenarios[idxs[0]].topo,
@@ -486,6 +498,29 @@ def sweep(scenarios: Sequence[Scenario],
 # --------------------------------------------------------------------------- #
 # Backend plumbing
 # --------------------------------------------------------------------------- #
+
+def _effective_faults(sc: Scenario, cfg: RunConfig) -> Optional[FaultSpec]:
+    """RunConfig.faults wins over Scenario.faults (config says HOW)."""
+    return cfg.faults if cfg.faults is not None else sc.faults
+
+
+def _scenario_ticks(sc: Scenario, cfg: RunConfig) -> int:
+    """Fabric horizon: explicit n_ticks, else default_ticks() extended by
+    the fault schedule — a flap that outlives the clean-run horizon needs
+    the window itself, a few RTOs of loss recovery (go-back-N may need a
+    full timeout per loss burst) and the clean drain budget after the
+    last edge.  Time-warp makes the generous margin nearly free: dead
+    tick intervals collapse in one scan trip."""
+    if cfg.n_ticks is not None:
+        return cfg.n_ticks
+    ticks = sc.default_ticks()
+    fs = _effective_faults(sc, cfg)
+    if fs is not None and fs.last_edge > 0:
+        rto_ticks = math.ceil(_rto_us(_fabric_cfg(sc, cfg))
+                              / sc.net.mtu_serialize_us)
+        ticks = max(ticks, fs.last_edge + 4 * rto_ticks + ticks)
+    return ticks
+
 
 def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
     time_warp, trace_every = cfg.time_warp, cfg.trace_every
@@ -502,7 +537,8 @@ def _fabric_cfg(sc: Scenario, cfg: RunConfig) -> FabricConfig:
               pfc_delay_ticks=cfg.pfc_delay_ticks,
               time_warp=time_warp, trace_every=trace_every,
               active_cap=cfg.active_cap, shard=cfg.shard,
-              kernel_backend=cfg.kernel_backend)
+              kernel_backend=cfg.kernel_backend,
+              faults=_effective_faults(sc, cfg))
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
     return FabricConfig(**kw)
@@ -540,7 +576,7 @@ def _fabric_summary(sc: Scenario, cfg: RunConfig, metrics: dict) -> dict:
 def _run_fabric_backend(sc: Scenario, cfg: RunConfig) -> dict:
     fcfg = _fabric_cfg(sc, cfg)
     _, metrics = run_fabric_trace(sc.topo, sc.messages,
-                                  cfg.n_ticks or sc.default_ticks(), fcfg)
+                                  _scenario_ticks(sc, cfg), fcfg)
     return _fabric_summary(sc, cfg, metrics)
 
 
@@ -552,6 +588,9 @@ def _events_sim(sc: Scenario, cfg: RunConfig, **netsim_kw) -> NetSim:
     kw = dict(seed=cfg.seed)
     if cfg.switch_buffer_bytes is not None:
         kw["switch_buffer_bytes"] = cfg.switch_buffer_bytes
+    fs = _effective_faults(sc, cfg)
+    if fs is not None:
+        kw["faults"] = fs
     kw.update(netsim_kw)
     if cfg.protocol == "strack":
         if cfg.lb_mode == "fixed":
@@ -580,6 +619,15 @@ def _summarize_sim(sim: NetSim) -> dict:
         "unfinished": sum(1 for fl in sim.flows.values() if fl.fct is None),
         "drops": sim.total_drops,
         "pauses": len(sim.pause_log),
+        # uniform recovery/fault schema (same keys as fabric summarize()):
+        # the oracle counts fault losses directly; per-protocol recovery
+        # counters live inside the ref engines and are reported as 0 here
+        "retransmits": 0,
+        "rto_fires": 0,
+        "sack_recoveries": 0,
+        "gbn_rewinds": 0,
+        "blackholed_pkts": getattr(sim, "blackholed_pkts", 0),
+        "corrupt_drops": getattr(sim, "corrupt_drops", 0),
     }
 
 

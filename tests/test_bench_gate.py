@@ -221,8 +221,9 @@ def test_bench_all_exits_nonzero_on_parity_failure(monkeypatch, tmp_path):
     dense/warp parity gate fails."""
     perf = _patch_runners(monkeypatch, parity_ok=False)
     out = tmp_path / "BENCH_fabric.json"
+    hist = tmp_path / "BENCH_history.jsonl"     # NOT the repo's trend file
     with pytest.raises(SystemExit) as exc:
-        perf.bench_all(str(out), repeats=1)
+        perf.bench_all(str(out), repeats=1, history_path=str(hist))
     assert exc.value.code == 1
     # the report is still written for post-mortem, then the gate fires
     assert json.loads(out.read_text())["scenarios"]["fake"]["parity_ok"] \
@@ -235,17 +236,18 @@ def test_bench_all_exits_nonzero_on_throughput_regression(monkeypatch,
     on a >20% warp ticks/sec drop at any shared scenario."""
     perf = _patch_runners(monkeypatch, parity_ok=True)
     out = tmp_path / "BENCH_fabric.json"
+    hist = tmp_path / "BENCH_history.jsonl"     # NOT the repo's trend file
     baseline = {"scenarios": {"fake": {
         "warp": {"ticks_per_s":
                  GOOD["scenarios"]["perm1024"]["warp"]["ticks_per_s"]
                  * 10.0}}}}
     out.write_text(json.dumps(baseline))
     with pytest.raises(SystemExit) as exc:
-        perf.bench_all(str(out), repeats=1)
+        perf.bench_all(str(out), repeats=1, history_path=str(hist))
     assert exc.value.code == 1
     # a matching baseline passes (fresh report replaces it)
     out.write_text(json.dumps({"scenarios": {"fake": {
         "warp": {"ticks_per_s":
                  GOOD["scenarios"]["perm1024"]["warp"]["ticks_per_s"]}}}}))
-    report = perf.bench_all(str(out), repeats=1)
+    report = perf.bench_all(str(out), repeats=1, history_path=str(hist))
     assert report["scenarios"]["fake"]["parity_ok"] is True

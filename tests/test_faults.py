@@ -1,0 +1,404 @@
+"""Chaos fabric gates: time-varying fault injection + graceful degradation.
+
+The fault subsystem (``sim/faults.py``, docs/robustness.md) turns link
+flaps, degrades and seeded corruption into *fixed-shape program data*,
+so one compiled program replays any schedule of the same shape.  This
+suite pins the contracts the rest of the repo leans on:
+
+* the corruption PRNG is replayable and backend-independent — the jnp
+  draw, the host mirror and the raw ``traffic._u64`` stream agree bit
+  for bit on every key;
+* ``validate_faults`` rejects partitions, dead-link overlaps and
+  malformed windows (and accepts the inert [0, 0) windows chaos soaks
+  run clean epochs through);
+* the degenerate t=0 uplink schedule is bit-exact against a natively
+  dead-linked topology (same routing, same FCTs, zero blackholes);
+* schedules of one shape share ONE compiled program (values are traced);
+* ECMP/spray candidate masks are time-varying — a flapped uplink stops
+  carrying traffic, and adaptive spray shifts entropy off a *degraded*
+  uplink (ECN pressure) where oblivious spray cannot;
+* every faulted scenario drains, losses show up in the recovery
+  counters, and recovery lands within an RTO-derived bound;
+* warp / dense / pallas-kernel / active-cap / shard executions stay
+  bit-exact under a mixed fault schedule, recovery counters included;
+* chaos soaks compile exactly one program and report per-tenant FCT
+  degradation through the Prometheus registry.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.params import NetworkSpec
+from repro.sim import fabric
+from repro.sim.fabric import _rto_us
+from repro.sim.faults import (NEVER, FaultSpec, fault_u01, fault_u01_py,
+                              faults_from_dead_links, host_flap, link_corrupt,
+                              link_degrade, link_flap, uplink_flap,
+                              validate_faults)
+from repro.sim.topology import full_bisection, with_link_failures
+from repro.sim.workloads import (RunConfig, _fabric_cfg, permutation_scenario,
+                                 run)
+
+pytestmark = pytest.mark.tier1
+
+NET = NetworkSpec(link_gbps=400.0)
+TOPO = full_bisection(4, 4)
+S = TOPO.n_spine
+TICK = NET.mtu_serialize_us
+PERM = permutation_scenario(TOPO, 128 * 2 ** 10, net=NET, seed=0)
+
+#: Summary keys that must agree bit-for-bit across execution variants.
+EXACT_KEYS = ("max_fct", "avg_fct", "unfinished", "drops", "pauses",
+              "retransmits", "rto_fires", "sack_recoveries", "gbn_rewinds",
+              "blackholed_pkts", "corrupt_drops", "ecn_marks")
+
+#: The uniform recovery/chaos counter schema every summary must carry.
+COUNTER_KEYS = ("retransmits", "rto_fires", "sack_recoveries",
+                "gbn_rewinds", "blackholed_pkts", "corrupt_drops")
+
+#: One entry of every fault class, all windows bounded (keeps the dense
+#: scan horizon short) — the shape the bit-exactness legs share.
+MIXED = FaultSpec(link_flaps=((0, 0, 10, 60),),
+                  host_flaps=((5, 30, 80),),
+                  link_degrade=((1, 1, 0, 200, 0.5),),
+                  link_corrupt=((2, 2, 0, 300, 0.05),),
+                  seed=3)
+
+
+def _rto_of(sc, cfg: RunConfig) -> float:
+    return _rto_us(_fabric_cfg(sc, cfg))
+
+
+def _tor0_share(res) -> float:
+    """Fraction of ToR 0's accepted uplink injections that rode spine 0."""
+    tor0 = np.asarray(res["tx_rows_pkts"], dtype=float)[0:S]
+    return float(tor0[0] / max(1.0, tor0.sum()))
+
+
+# --------------------------------------------------------------------------- #
+# PRNG: replayable, backend-independent
+# --------------------------------------------------------------------------- #
+
+def test_fault_prng_known_answer():
+    """jnp draw == host mirror == the raw traffic._u64 stream, every key."""
+    from repro.sim.traffic import _u64
+    keys = [(0, 0, 0, 0), (1, 7, 123, 45), (2 ** 31 - 1, 95, 10 ** 6, 4095),
+            (12345, 3, 999999, 1), (7, 0, 1, 0)]
+    for (seed, row, tick, psn) in keys:
+        dev = float(fault_u01(jnp.int32(seed), jnp.int32(row),
+                              jnp.int32(tick), jnp.int32(psn)))
+        host = fault_u01_py(seed, row, tick, psn)
+        raw = float(_u64(seed, row, tick, psn) >> 40) / (1 << 24)
+        assert dev == host == raw, (seed, row, tick, psn, dev, host, raw)
+        assert 0.0 <= dev < 1.0
+
+
+def test_fault_prng_vectorized_matches_host():
+    """The in-scan vector draw equals elementwise host draws."""
+    rows = jnp.arange(8, dtype=jnp.int32)
+    psns = jnp.arange(8, dtype=jnp.int32) * 17 + 3
+    dev = np.asarray(fault_u01(jnp.int32(42), rows, jnp.int32(77), psns))
+    host = [fault_u01_py(42, int(r), 77, int(p))
+            for r, p in zip(rows, psns)]
+    np.testing.assert_array_equal(dev, np.asarray(host, dtype=np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# Spec hygiene: shapes, horizons, validation
+# --------------------------------------------------------------------------- #
+
+def test_shape_key_counts_only():
+    a = link_flap(0, 0, 10, 60)
+    b = link_flap(3, 2, 500, 900, seed=77)
+    assert a.shape_key == b.shape_key == (1, 0, 0, 0, 0, 0)
+    assert MIXED.shape_key == (1, 0, 1, 1, 1, 0)
+    assert MIXED.n_flap_windows == 2          # link + host flap windows
+
+
+def test_last_edge_never_sentinel():
+    """Permanent (NEVER-ended) windows count their start, so the default
+    horizon extension stays finite for dead-link-style schedules."""
+    assert FaultSpec().last_edge == 0
+    assert link_flap(0, 0, 50, 400).last_edge == 400
+    assert link_flap(0, 0, 50, NEVER).last_edge == 50
+    dead = with_link_failures(TOPO, 2, 2, seed=0)
+    assert faults_from_dead_links(dead).last_edge == 0
+
+
+def test_validate_faults_rejects_malformed():
+    with pytest.raises(ValueError, match="negative"):
+        validate_faults(link_flap(0, 0, 5, 3), TOPO)
+    with pytest.raises(ValueError, match="out of range"):
+        validate_faults(link_flap(7, 0, 0, 10), TOPO)
+    with pytest.raises(ValueError, match="out of range"):
+        validate_faults(host_flap(99, 0, 10), TOPO)
+    with pytest.raises(ValueError, match="credit"):
+        validate_faults(FaultSpec(link_degrade=((0, 0, 0, 10, 0.0),)), TOPO)
+    with pytest.raises(ValueError, match="prob"):
+        validate_faults(link_corrupt(0, 0, 0, 10, 1.5), TOPO)
+    # flapping a link that is already statically dead double-counts it
+    dead = with_link_failures(TOPO, 1, 1, seed=0)
+    (dt, ds) = sorted(dead.dead_links)[0]
+    with pytest.raises(ValueError, match="dead_links"):
+        validate_faults(uplink_flap(dt, ds, 0, 10), dead)
+    # inert (empty) windows are legal: chaos soaks run clean epochs on them
+    validate_faults(link_flap(0, 0, 0, 0), TOPO)
+
+
+def test_validate_faults_rejects_partition():
+    """No tick may leave a ToR with zero live uplinks."""
+    cut = FaultSpec(link_flaps=tuple((0, s, 10, 50) for s in range(S)))
+    with pytest.raises(ValueError, match="disconnect"):
+        validate_faults(cut, TOPO)
+    # staggered windows that never fully overlap are fine
+    ok = FaultSpec(link_flaps=tuple((0, s, 10 + 50 * s, 40 + 50 * s)
+                                    for s in range(S)))
+    validate_faults(ok, TOPO)
+
+
+# --------------------------------------------------------------------------- #
+# t=0 schedule vs native dead links: bit-exact
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("protocol", ["strack", "rocev2"])
+def test_dead_links_native_vs_chaos_bitexact(protocol):
+    """``faults_from_dead_links`` on an alive topology reproduces the
+    natively dead-linked run bit for bit: ECMP steers off the flapped
+    uplinks from tick 0, so nothing is ever blackholed."""
+    dead = with_link_failures(TOPO, 2, 2, seed=0)
+    sc_nat = permutation_scenario(dead, 64 * 2 ** 10, net=NET, seed=0)
+    sc_cha = permutation_scenario(TOPO, 64 * 2 ** 10, net=NET, seed=0)
+    cha_cfg = RunConfig(backend="fabric", protocol=protocol,
+                        faults=faults_from_dead_links(dead))
+    nat = run(sc_nat, RunConfig(backend="fabric", protocol=protocol))
+    cha = run(sc_cha, cha_cfg)
+    for k in EXACT_KEYS:
+        assert nat[k] == cha[k], (protocol, k, nat[k], cha[k])
+    assert cha["blackholed_pkts"] == 0
+    assert cha["unfinished"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# One shape, one program
+# --------------------------------------------------------------------------- #
+
+def test_same_shape_schedules_share_one_program():
+    """Fault values (windows, seeds) are traced data: re-running with a
+    different schedule of the same shape must not rebuild the program."""
+    cfg = dict(backend="fabric", protocol="strack", n_ticks=4000)
+    run(PERM, RunConfig(faults=link_flap(0, 0, 10, 60), **cfg))     # warm
+    builds = fabric.program_builds
+    res = run(PERM, RunConfig(faults=link_flap(2, 3, 100, 250, seed=9),
+                              **cfg))
+    assert fabric.program_builds == builds, \
+        "same-shape fault schedule retraced the fabric program"
+    assert res["unfinished"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# Entropy shifts: flapped uplinks leave the mask, degraded ones get
+# avoided by adaptive spray only
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("lb_mode", ["adaptive", "oblivious"])
+def test_flap_removes_uplink_from_spray_mask(lb_mode):
+    """While (0,0) is down, both spray modes stop feeding it: only the
+    packets injected before t0 (plus their retransmits) ever ride row 0,
+    so its traffic share collapses vs the clean run."""
+    base = RunConfig(backend="fabric", protocol="strack", lb_mode=lb_mode)
+    clean = run(PERM, base)
+    flap = run(PERM, RunConfig(backend="fabric", protocol="strack",
+                               lb_mode=lb_mode,
+                               faults=link_flap(0, 0, 10, NEVER)))
+    assert flap["unfinished"] == 0
+    assert flap["blackholed_pkts"] > 0      # in-flight pkts at t0 died
+    assert _tor0_share(flap) < 0.5 * _tor0_share(clean), \
+        (lb_mode, _tor0_share(clean), _tor0_share(flap))
+
+
+def test_adaptive_shifts_entropy_off_degraded_uplink():
+    """A degraded link stays in the ECMP mask (it still serves), so only
+    ADAPTIVE spray can move traffic off it — the queue builds, ECN fires,
+    and per-path weights steer away; oblivious spray keeps hashing onto
+    it and pays the FCT."""
+    sc = permutation_scenario(TOPO, 2 * 2 ** 20, net=NET, seed=0)
+    deg = link_degrade(0, 0, 0, NEVER, 0.25)
+    res = {}
+    for lb in ("adaptive", "oblivious"):
+        res[lb] = run(sc, RunConfig(backend="fabric", protocol="strack",
+                                    lb_mode=lb, faults=deg, n_ticks=6000))
+        assert res[lb]["unfinished"] == 0, lb
+    ad, ob = _tor0_share(res["adaptive"]), _tor0_share(res["oblivious"])
+    assert ad < ob - 0.02, (ad, ob)
+    assert res["adaptive"]["max_fct"] < res["oblivious"]["max_fct"]
+
+
+# --------------------------------------------------------------------------- #
+# Loss recovery: drains, counters fire, bounded delay, attributed retx
+# --------------------------------------------------------------------------- #
+
+def test_flap_recovery_drains_within_rto_bound():
+    """A mid-run flap must drain on every transport; losses appear in the
+    recovery counters, retransmits are attributed to the flap window, and
+    the completion slip is bounded by the outage plus a few RTOs."""
+    flap = link_flap(0, 0, 50, 400)
+    tot_bh = tot_recov = 0
+    for kw in (dict(protocol="strack"),
+               dict(protocol="strack", lb_mode="oblivious"),
+               dict(protocol="rocev2"),
+               dict(protocol="rocev2", subflows=4)):
+        cfg = RunConfig(backend="fabric", faults=flap, **kw)
+        clean = run(PERM, RunConfig(backend="fabric", **kw))
+        res = run(PERM, cfg)
+        tag = (kw["protocol"], kw.get("subflows", 1), kw.get("lb_mode"))
+        assert res["unfinished"] == 0, (tag, res["max_fct"])
+        bound = clean["max_fct"] + (400 - 50) * TICK \
+            + 4 * _rto_of(PERM, cfg) + 8 * TICK
+        assert res["max_fct"] <= bound, (tag, res["max_fct"], bound)
+        recov = (res["rto_fires"] + res["sack_recoveries"]
+                 + res["gbn_rewinds"])
+        if res["blackholed_pkts"] > 0:
+            # lost pkts must be re-sent, attributed to this flap window
+            assert res["retransmits"] > 0, tag
+            assert int(np.sum(res["win_retx"])) > 0, tag
+        tot_bh += res["blackholed_pkts"]
+        tot_recov += recov
+    # loss/recovery is gated in aggregate: ECMP leaves the flapped uplink
+    # the tick it goes down, so a single-path transport may legitimately
+    # lose only what was already queued on it (possibly nothing)
+    assert tot_bh > 0, "flap overlapped live flows but nothing was lost"
+    assert tot_recov > 0, "packets were lost but no recovery path fired"
+
+
+def test_corruption_replayable_and_recovered():
+    """Same (schedule, seed) => bit-identical run; the seed is program
+    data (same shape), and corrupt drops are recovered, not stranded."""
+    cor = link_corrupt(0, 0, 0, NEVER, 0.2, seed=7)
+    a = run(PERM, RunConfig(backend="fabric", faults=cor))
+    b = run(PERM, RunConfig(backend="fabric", faults=cor))
+    for k in EXACT_KEYS:
+        assert a[k] == b[k], (k, a[k], b[k])
+    assert a["corrupt_drops"] > 0
+    assert a["unfinished"] == 0
+    assert a["retransmits"] > 0
+    # a different seed rides through the SAME program (values only)
+    builds = fabric.program_builds
+    c = run(PERM, RunConfig(backend="fabric",
+                            faults=link_corrupt(0, 0, 0, NEVER, 0.2,
+                                                seed=8)))
+    assert fabric.program_builds == builds
+    assert c["unfinished"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# Bit-exactness across execution variants under a mixed schedule
+# --------------------------------------------------------------------------- #
+
+def _mixed_runs(kw, legs):
+    base = run(PERM, RunConfig(backend="fabric", faults=MIXED,
+                               n_ticks=6000, **kw))
+    assert base["unfinished"] == 0
+    assert base["blackholed_pkts"] > 0 or base["corrupt_drops"] > 0
+    for tag, okw in legs:
+        r = run(PERM, RunConfig(backend="fabric", faults=MIXED,
+                                n_ticks=6000, **kw, **okw))
+        for k in EXACT_KEYS:
+            assert r[k] == base[k], (kw, tag, k, r[k], base[k])
+        np.testing.assert_array_equal(
+            np.asarray(r["tx_rows_pkts"]),
+            np.asarray(base["tx_rows_pkts"]), err_msg=str((kw, tag)))
+        np.testing.assert_array_equal(
+            np.asarray(r["win_retx"]),
+            np.asarray(base["win_retx"]), err_msg=str((kw, tag)))
+    return base
+
+
+def test_mixed_faults_bitexact_strack():
+    """Warp, dense, pallas-interpret kernels and the capped active set
+    must replay the identical faulted run (counters included)."""
+    _mixed_runs(dict(protocol="strack"),
+                [("dense", dict(time_warp=False)),
+                 ("pallas", dict(kernel_backend="pallas_interpret")),
+                 ("cap", dict(active_cap=len(PERM.messages)))])
+
+
+def test_mixed_faults_bitexact_roce():
+    """Same invariant on the go-back-N/RTO recovery path."""
+    _mixed_runs(dict(protocol="rocev2", subflows=4),
+                [("dense", dict(time_warp=False))])
+
+
+@pytest.mark.shard
+def test_mixed_faults_bitexact_sharded():
+    """shard=2 under the mixed schedule (forced multi-device pass)."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices (force with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    _mixed_runs(dict(protocol="strack"), [("shard", dict(shard=2))])
+
+
+# --------------------------------------------------------------------------- #
+# Events oracle honours the same spec
+# --------------------------------------------------------------------------- #
+
+def test_events_backend_honours_faultspec():
+    """The oracle blackholes on the same flap windows and drains through
+    the same recovery machinery (band parity lives in test_fuzz_parity)."""
+    res = run(PERM, RunConfig(backend="events", until=2e7,
+                              faults=link_flap(0, 0, 50, 400)))
+    assert res["unfinished"] == 0
+    assert res["blackholed_pkts"] > 0
+    for k in COUNTER_KEYS:
+        assert isinstance(res[k], int), k
+
+
+def test_uniform_recovery_schema():
+    """Clean runs on every backend/protocol still carry the full
+    recovery/chaos counter schema, zero-filled — dashboards and the
+    bench gate must never KeyError (fix satellite)."""
+    for cfg in (RunConfig(backend="fabric", protocol="strack"),
+                RunConfig(backend="fabric", protocol="rocev2"),
+                RunConfig(backend="events", until=2e7)):
+        res = run(PERM, cfg)
+        for k in COUNTER_KEYS:
+            assert isinstance(res[k], int) and res[k] >= 0, (cfg.backend, k)
+        assert res["blackholed_pkts"] == 0
+        assert res["corrupt_drops"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# Chaos soak: one program, degradation reported
+# --------------------------------------------------------------------------- #
+
+def test_chaos_soak_one_program_and_degradation():
+    from repro.obs.metrics import MetricsRegistry, render_prometheus
+    from repro.sim.traffic import InferenceTenant, TrainingJob, soak
+    reg = MetricsRegistry()
+    res = soak(TOPO,
+               [TrainingJob(name="train0", algo="ring", ranks=8,
+                            collective_bytes=64 * 2 ** 10, steps=2)],
+               [InferenceTenant(name="infer0", n_flows=16)],
+               epochs=3, seed=0, registry=reg,
+               chaos=[None, link_flap(0, 0, 10, 120), None])
+    assert res["program_builds"] <= 1, res["program_builds"]
+    assert res["totals"]["unfinished"] == 0
+    assert [row["chaos"] for row in res["epoch_rows"]] == \
+        [False, True, False]
+    for name, agg in res["per_tenant"].items():
+        d = agg["degradation_p99"]
+        assert d == d and d > 0, (name, d)     # computed, not NaN
+    prom = render_prometheus(reg)
+    assert "strack_fct_degradation_ratio" in prom
+    assert "strack_blackholed_pkts_total" in prom
+
+
+def test_chaos_soak_rejects_shape_mismatch():
+    from repro.sim.traffic import InferenceTenant, soak
+    with pytest.raises(ValueError, match="shape_key"):
+        soak(TOPO, [], [InferenceTenant(name="t", n_flows=4)], epochs=2,
+             chaos=[link_flap(0, 0, 1, 5), host_flap(0, 1, 5)])
+    with pytest.raises(ValueError, match="all-None"):
+        soak(TOPO, [], [InferenceTenant(name="t", n_flows=4)], epochs=2,
+             chaos=[None, None])

@@ -26,12 +26,18 @@ import jax
 import pytest
 
 from repro.core.params import NetworkSpec
+from repro.sim.fabric import _rto_us
+from repro.sim.faults import FaultSpec
 from repro.sim.topology import full_bisection
-from repro.sim.workloads import Message, RunConfig, Scenario, run
+from repro.sim.workloads import (Message, RunConfig, Scenario, _fabric_cfg,
+                                 run)
 
 pytestmark = [pytest.mark.tier1, pytest.mark.fuzz]
 
 N_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "8"))
+#: The fault leg runs fewer examples: each compiles a faulted program on
+#: fresh random dims, so it is the most compile-heavy entry point here.
+N_FAULT_EXAMPLES = max(2, N_EXAMPLES // 2)
 MTU = 4096
 
 #: Ratio band for fabric/oracle completion-time parity.  Matches the
@@ -164,6 +170,78 @@ def check_parity(rng: random.Random) -> dict:
 def test_fuzz_parity_seeded(seed):
     """Deterministic seeded sweep — runs on every image (no hypothesis)."""
     check_parity(random.Random(seed * 7919 + 13))
+
+
+# --------------------------------------------------------------------------- #
+# Fault leg: random seeded fault schedules through both backends
+# --------------------------------------------------------------------------- #
+
+def random_faults(rng: random.Random, topo) -> FaultSpec:
+    """One random fault schedule: a both-direction flap, an uplink flap
+    paired with a degraded sibling, or seeded corruption.  Windows start
+    early (the tiny fuzz flows finish fast) and are bounded so the dense
+    leg's horizon stays short."""
+    S = topo.n_spine
+    tor, spine = rng.randrange(topo.n_tor), rng.randrange(S)
+    t0 = rng.randint(2, 12)
+    t1 = t0 + rng.randint(20, 150)
+    kind = rng.randrange(3)
+    if kind == 0:
+        return FaultSpec(link_flaps=((tor, spine, t0, t1),))
+    if kind == 1:
+        return FaultSpec(uplink_flaps=((tor, spine, t0, t1),),
+                         link_degrade=((tor, (spine + 1) % S, t0, t1,
+                                        rng.choice([0.25, 0.5, 0.75])),))
+    return FaultSpec(link_corrupt=((tor, spine, t0, t1,
+                                    rng.choice([0.02, 0.05, 0.1])),),
+                     seed=rng.randrange(2 ** 20))
+
+
+def check_fault_parity(rng: random.Random) -> dict:
+    """One faulted fuzz example: drain on both backends, warp-vs-dense
+    bit-exactness (recovery counters included), and fabric-vs-oracle
+    completion inside a fault-aware band."""
+    sc = random_scenario(rng)
+    fs = random_faults(rng, sc.topo)
+    kw = random_config(rng, sc)
+    cfg = RunConfig(backend="fabric", faults=fs, **kw)
+    fb = run(sc, cfg)
+    fd = run(sc, RunConfig(backend="fabric", faults=fs, time_warp=False,
+                           **kw))
+    ev = run(sc, RunConfig(backend="events", faults=fs, until=2e7, **kw))
+
+    # --- warp-vs-dense bit-exactness, chaos counters included ---
+    for k in ("max_fct", "avg_fct", "drops", "pauses", "retransmits",
+              "rto_fires", "sack_recoveries", "gbn_rewinds",
+              "blackholed_pkts", "corrupt_drops"):
+        assert fb[k] == fd[k], (kw, fs, k, fb[k], fd[k])
+
+    # --- drain invariant: every faulted example recovers on BOTH backends
+    assert fb["unfinished"] == 0, (sc.messages, kw, fs, fb)
+    assert ev["unfinished"] == 0, (sc.messages, kw, fs, ev)
+
+    # --- completion parity in a fault-aware band.  The backends model
+    # degradation at different granularity (duty-cycled pops vs scaled
+    # service times) and draw corruption at independently-reached
+    # (tick, psn) keys, so the absolute slack covers the schedule span
+    # plus — when a drop can land on one backend only — a few RTOs.
+    a, b = fb["max_fct"], ev["max_fct"]
+    tick = sc.net.mtu_serialize_us
+    slack = fs.last_edge * tick + ABS_TICKS * tick
+    if fs.link_corrupt or fs.host_corrupt:
+        slack += 2.5 * _rto_us(_fabric_cfg(sc, cfg))
+    ratio = a / b
+    ok = (BAND[0] < ratio < BAND[1]) or abs(a - b) <= slack
+    assert ok, (sc.messages, kw, fs, a, b, ratio, slack)
+    return dict(ratio=ratio, fabric_us=a, events_us=b, cfg=kw,
+                blackholed=fb["blackholed_pkts"],
+                corrupt=fb["corrupt_drops"])
+
+
+@pytest.mark.parametrize("seed", range(N_FAULT_EXAMPLES))
+def test_fuzz_fault_parity_seeded(seed):
+    """Seeded fault-schedule sweep (chaos leg of the fuzz surface)."""
+    check_fault_parity(random.Random(seed * 6007 + 3))
 
 
 @pytest.mark.shard

@@ -19,6 +19,7 @@ import json
 import pytest
 
 from repro.core.params import NetworkSpec
+from repro.sim.faults import link_flap
 from repro.sim.topology import full_bisection
 from repro.sim.workloads import (RunConfig, collective_scenario,
                                  incast_scenario, permutation_scenario, run)
@@ -38,6 +39,15 @@ GOLDEN_KEYS = ("max_fct", "avg_fct", "unfinished", "drops", "pauses",
 def _perm(**kw):
     return (permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET400, seed=0),
             RunConfig(backend="fabric", **kw))
+
+
+def _perm_flap(**kw):
+    # canonical chaos case: one ToR-0 uplink flaps mid-run ([50, 400)
+    # ticks) while the permutation is in flight, then recovers — pins the
+    # blackhole + loss-recovery path (docs/robustness.md)
+    return (permutation_scenario(TOPO44, 256 * 2 ** 10, net=NET400, seed=0),
+            RunConfig(backend="fabric", faults=link_flap(0, 0, 50, 400),
+                      **kw))
 
 
 def _incast(**kw):
@@ -61,6 +71,8 @@ def _a2a(**kw):
 CASES = {
     "perm16_strack": lambda: _perm(),
     "perm16_roce": lambda: _perm(protocol="rocev2"),
+    "perm16_flap_strack": lambda: _perm_flap(),
+    "perm16_flap_roce": lambda: _perm_flap(protocol="rocev2"),
     "incast8_strack": lambda: _incast(),
     "incast8_roce": lambda: _incast(protocol="rocev2"),
     "ring8_strack": lambda: _ring(),
